@@ -1,0 +1,3 @@
+"""Benchmark suite (one module per paper table/figure). Run:
+PYTHONPATH=src python -m benchmarks.run
+"""

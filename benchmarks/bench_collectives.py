@@ -1,0 +1,64 @@
+"""Compensated cross-device reduction (paper technique at pod scale):
+numerics of the ring schedules simulated on host, plus the bandwidth model.
+
+(The real shard_map collectives are exercised on an 8-device mesh in
+tests/test_distributed.py; this benchmark isolates the numerics and the
+bytes accounting so it runs on one device.)
+"""
+
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+from repro.core import kahan
+import jax.numpy as jnp
+
+
+def _simulate_ring(x: np.ndarray, compensated: bool) -> np.ndarray:
+    """x: [n_devices, m]. Sequential-ring reduction order, f32."""
+    n = x.shape[0]
+    if compensated:
+        s = jnp.asarray(x[0])
+        c = jnp.zeros_like(s)
+        for i in range(1, n):
+            s, c = kahan.neumaier_step(s, c, jnp.asarray(x[i]))
+        return np.asarray(s + c)
+    acc = jnp.asarray(x[0])
+    for i in range(1, n):
+        acc = acc + jnp.asarray(x[i])
+    return np.asarray(acc)
+
+
+def run() -> list[tuple]:
+    rows = []
+    rng = np.random.default_rng(0)
+    for n in (2, 8, 64, 512):
+        base = (rng.standard_normal(2048) * 1e5).astype(np.float32)
+        shards = np.stack([base * ((-1) ** i) + rng.standard_normal(2048)
+                           .astype(np.float32) * 1e-2 for i in range(n)])
+        exact = np.sum(np.float64(shards), axis=0)
+        err_n = np.abs(_simulate_ring(shards, False) - exact).max()
+        err_k = np.abs(_simulate_ring(shards, True) - exact).max()
+        # bandwidth model (per chip, ring): psum 2(n-1)/n vs kahan payloads
+        psum_traffic = 2 * (n - 1) / n
+        kahan_traffic = (1.0 if n == 2
+                         else 2 * (n - 1) / n + (n - 1) / n)  # (s,c) RS + AG
+        rows.append((
+            f"collectives/n={n}", f"{err_k:.3e}",
+            f"err_naive={err_n:.3e} err_kahan={err_k:.3e} "
+            f"traffic_psum={psum_traffic:.2f}x "
+            f"traffic_kahan={kahan_traffic:.2f}x"
+            f"{' (free)' if kahan_traffic <= psum_traffic else ''}",
+        ))
+    return rows
+
+
+def main() -> None:
+    for r in run():
+        print(",".join(str(c) for c in r))
+
+
+if __name__ == "__main__":
+    main()

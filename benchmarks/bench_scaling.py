@@ -1,0 +1,41 @@
+"""Paper Figs. 8-9 analog: in-memory multicore scaling curves (analytic).
+
+ECM linear-until-saturation curves per machine for the Kahan kernels, the
+saturation core counts printed in Fig. 10a, and the Fig. 9 caption's
+saturated throughput values.
+"""
+
+from __future__ import annotations
+
+from repro.ecm import kernels as K
+from repro.ecm import model as ecm
+
+
+def run() -> list[tuple]:
+    rows = []
+    curves = {
+        "HSW": (K.PAPER_ANALYSES[("HSW", "kahan_fma_opt")], 7),
+        "BDW": (K.PAPER_ANALYSES[("BDW", "kahan_fma_opt")], 11),
+        "KNC": (K.PAPER_ANALYSES[("KNC", "kahan")], 60),
+        "PWR8": (K.PAPER_ANALYSES[("PWR8", "kahan")], 10),
+    }
+    for name, ((m, spec), cores) in curves.items():
+        p = ecm.predict(m, spec)
+        curve = ecm.scaling_curve(p, cores)
+        rows.append((
+            f"scaling/{name}/kahan",
+            f"{curve[-1]:.2f}",
+            f"n_sat={p.n_saturation} p1={curve[0]:.2f}GUP/s "
+            f"p_sat={p.saturated_gups():.2f}GUP/s "
+            f"curve={'/'.join(f'{c:.1f}' for c in curve[:8])}",
+        ))
+    return rows
+
+
+def main() -> None:
+    for r in run():
+        print(",".join(str(c) for c in r))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""DESIGN.md §2.3 table: the paper's question re-asked on TPU v5e.
+
+Per-memory-level ECM predictions for the kernel zoo (naive vs compensated
+dot/sum/accumulate) with the 'is compensation free here?' verdict — the
+TPU restatement of the paper's Fig. 10a.
+"""
+
+from __future__ import annotations
+
+from repro.ecm import tpu
+
+
+def run() -> list[tuple]:
+    rows = []
+    for kernel in tpu.TPU_KERNELS:
+        for level in ("VMEM", "HBM"):
+            p = tpu.predict_level(kernel, level)
+            rows.append((
+                f"tpu_v5e/{kernel.name}/{level}",
+                f"{p.updates_per_s/1e9:.1f}",
+                f"GUP/s bound={p.bound} ai={kernel.arithmetic_intensity:.2f}",
+            ))
+    for pair in (("dot", tpu.NAIVE_DOT, tpu.KAHAN_DOT),
+                 ("sum", tpu.NAIVE_SUM, tpu.KAHAN_SUM),
+                 ("acc", tpu.NAIVE_ACC, tpu.KAHAN_ACC)):
+        name, nv, kh = pair
+        for level in ("VMEM", "HBM"):
+            ov = tpu.kahan_overhead(level, nv, kh)
+            rows.append((
+                f"tpu_v5e/overhead/{name}/{level}", f"{ov:.2f}",
+                "free" if ov <= 1.01 else f"{ov:.2f}x",
+            ))
+    rows.append(("tpu_v5e/vpu_ridge_flops_per_byte",
+                 f"{tpu.vpu_ridge_flops_per_byte():.2f}", "flops/B"))
+    return rows
+
+
+def main() -> None:
+    for r in run():
+        print(",".join(str(c) for c in r))
+
+
+if __name__ == "__main__":
+    main()

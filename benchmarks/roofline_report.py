@@ -1,0 +1,75 @@
+"""§Roofline table generator: reads results/dryrun/*.json, prints the
+three-term roofline per (arch × shape × mesh) cell and writes the markdown
+table consumed by EXPERIMENTS.md."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+
+def load_cells(dryrun_dir: str = "results/dryrun") -> list[dict]:
+    cells = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def _fmt_s(x: float) -> str:
+    if x == 0:
+        return "0"
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.1f}ms"
+    if x >= 1e-6:
+        return f"{x*1e6:.1f}us"
+    return f"{x*1e9:.0f}ns"
+
+
+def markdown_table(cells: list[dict], *, mesh: str = "16x16") -> str:
+    rows = [c for c in cells if c["mesh"] == mesh
+            and c.get("variant", "kahan") == "kahan"]
+    rows.sort(key=lambda c: (c["arch"], c["shape"]))
+    out = [
+        "| arch | shape | T_compute | T_memory | T_collective | bound | "
+        "useful FLOP ratio | roofline frac | bytes/chip |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for c in rows:
+        out.append(
+            f"| {c['arch']} | {c['shape']} | {_fmt_s(c['t_compute_s'])} | "
+            f"{_fmt_s(c['t_memory_s'])} | {_fmt_s(c['t_collective_s'])} | "
+            f"{c['dominant']} | {c['useful_flop_ratio']:.3f} | "
+            f"{c['roofline_fraction']:.4f} | "
+            f"{c['memory_analysis'].get('temp_size_in_bytes', 0)/1e9:.1f}GB |")
+    return "\n".join(out)
+
+
+def summary(cells: list[dict]) -> dict:
+    by_dominant: dict = {}
+    for c in cells:
+        by_dominant.setdefault(c["dominant"], []).append(
+            (c["arch"], c["shape"], c["mesh"]))
+    return by_dominant
+
+
+def main() -> None:
+    cells = load_cells()
+    if not cells:
+        print("no dryrun results found — run: "
+              "PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both")
+        return
+    print(f"# {len(cells)} dry-run cells\n")
+    for mesh in ("16x16", "2x16x16"):
+        print(f"\n## mesh {mesh}\n")
+        print(markdown_table(cells, mesh=mesh))
+    print("\n## dominant-term census")
+    for k, v in summary(cells).items():
+        print(f"  {k}: {len(v)} cells")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Benchmark harness: one module per paper table/figure, CSV output
+``name,us_per_call,derived`` per row.
+
+  bench_ecm_predictions   paper §4 / Eqs. 1-3 (ECM cycle predictions)
+  bench_accuracy          paper §1 motivation (error vs N, naive vs Kahan)
+  bench_kernel_throughput paper Figs. 5-7 analog, measured on this host
+  bench_scaling           paper Figs. 8-9 analog (saturation curves)
+  bench_tpu_kahan         DESIGN.md §2.3 (the paper's question on v5e)
+  bench_collectives       compensated all-reduce numerics + bandwidth model
+  roofline_report         §Roofline table from the dry-run artifacts
+"""
+
+from __future__ import annotations
+
+import traceback
+
+from benchmarks import (bench_accuracy, bench_collectives,
+                        bench_ecm_predictions, bench_kernel_throughput,
+                        bench_scaling, bench_tpu_kahan, roofline_report)
+
+MODULES = [
+    bench_ecm_predictions,
+    bench_accuracy,
+    bench_kernel_throughput,
+    bench_scaling,
+    bench_tpu_kahan,
+    bench_collectives,
+]
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    failures = 0
+    for mod in MODULES:
+        try:
+            for row in mod.run():
+                print(",".join(str(c) for c in row), flush=True)
+        except Exception:
+            failures += 1
+            print(f"# FAILED {mod.__name__}")
+            traceback.print_exc()
+    print("#")
+    print("# --- §Roofline table (from results/dryrun) ---")
+    try:
+        roofline_report.main()
+    except Exception:
+        traceback.print_exc()
+    if failures:
+        raise SystemExit(failures)
+
+
+if __name__ == "__main__":
+    main()

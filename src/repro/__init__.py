@@ -1,0 +1,22 @@
+"""repro — Kahan-enhanced reductions as a first-class numerics layer.
+
+A production-grade JAX training/inference framework reproducing and scaling
+Hofmann et al. 2016, "Performance analysis of the Kahan-enhanced scalar
+product on current multi- and manycore processors" (DOI 10.1002/cpe.3921).
+
+Subsystems:
+  repro.core         compensated-summation primitives (twosum, Kahan, trees)
+  repro.ecm          the paper's ECM performance model, executable
+  repro.kernels      Pallas TPU kernels (kahan_dot/kahan_sum/...) + oracles
+  repro.models       model zoo (dense/GQA/MLA/MoE/SSD/hybrid/enc-dec/VLM)
+  repro.configs      the 10 assigned architecture configs
+  repro.optim        AdamW (+ Kahan-compensated), schedules, grad accumulation
+  repro.distributed  sharding rules, compensated collectives, pipeline, compression
+  repro.checkpoint   atomic sharded checkpointing with elastic restore
+  repro.data         deterministic synthetic data pipeline
+  repro.serving      KV-cache decode engine
+  repro.train        train/serve step builders + loop
+  repro.launch       mesh, dryrun, train/serve entry points
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,4 @@
+"""Assigned architecture configs (one module per arch) + shape cells."""
+
+from repro.configs.registry import REGISTRY, get_config, reduced  # noqa: F401
+from repro.configs.shapes import SHAPES, ShapeCell, shapes_for  # noqa: F401

@@ -1,0 +1,3 @@
+"""Core numerics: compensated summation primitives."""
+
+from repro.core import kahan  # noqa: F401

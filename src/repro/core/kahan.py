@@ -1,0 +1,185 @@
+"""Compensated-summation primitives (the paper's core algorithm, §4.2).
+
+The paper studies the Kahan algorithm applied to the scalar product::
+
+    sum = c = 0
+    for i in range(N):
+        prod = a[i] * b[i]
+        y    = prod - c
+        t    = sum + y
+        c    = (t - sum) - y
+        sum  = t
+
+This module provides the branch-free floating-point building blocks used by
+every compensated feature in the framework (kernels, gradient accumulation,
+compensated collectives, optimizer, SSD state carry, metrics):
+
+  * ``twosum``        — Knuth's exact addition: s + e == a + b exactly.
+  * ``kahan_step``    — one step of classic Kahan (paper's Fig. 2b body).
+  * ``neumaier_step`` — Kahan–Babuška variant (robust when |x| > |s|).
+  * ``combine``       — merge two (sum, carry) partials exactly-ish; this is
+                        what makes compensation COMPOSABLE across SIMD lanes,
+                        grid blocks, microbatches, chips and pods.
+  * ``KahanState`` / tree_* — pytree-level compensated accumulators.
+
+XLA does not reassociate floating-point expressions, so these survive jit
+unchanged (verified by the property tests in tests/test_kahan_core.py).
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+Array = jax.Array
+PyTree = Any
+
+
+def twosum(a: Array, b: Array) -> tuple[Array, Array]:
+    """Knuth TwoSum: returns (s, e) with s = fl(a+b) and s + e == a + b.
+
+    6 flops, branch-free, correct for arbitrary magnitude ordering (unlike
+    Dekker's Fast2Sum which requires |a| >= |b|).
+    """
+    s = a + b
+    a_prime = s - b
+    b_prime = s - a_prime
+    da = a - a_prime
+    db = b - b_prime
+    return s, da + db
+
+
+def kahan_step(s: Array, c: Array, x: Array) -> tuple[Array, Array]:
+    """One classic Kahan update: returns updated (sum, carry).
+
+    Mirrors the paper's loop body (Fig. 2b): 4 ADD/SUB per element.
+    ``c`` holds the running *negative* compensation as in the original
+    formulation; the represented value is ``s`` (carry already folded in on
+    the next step).
+    """
+    y = x - c
+    t = s + y
+    c_new = (t - s) - y
+    return t, c_new
+
+
+def neumaier_step(s: Array, c: Array, x: Array) -> tuple[Array, Array]:
+    """Kahan–Babuška–Neumaier update: (sum, carry) with carry holding +err.
+
+    The represented value is ``s + c``. Uses TwoSum so it stays correct when
+    the increment is larger than the running sum (Kahan's classic form can
+    lose the low-order bits of ``s`` in that case).
+    """
+    t, e = twosum(s, x)
+    return t, c + e
+
+
+def combine(s1: Array, c1: Array, s2: Array, c2: Array) -> tuple[Array, Array]:
+    """Merge two Neumaier-style partials (s1+c1) and (s2+c2).
+
+    Associative-enough merge used for lane reduction inside the Pallas
+    kernels, tree-reduction across microbatches, and the ring all-reduce
+    across chips. Error of the merge itself is captured by TwoSum.
+    """
+    s, e = twosum(s1, s2)
+    return s, c1 + c2 + e
+
+
+def value(s: Array, c: Array) -> Array:
+    """Final value of a Neumaier-style accumulator."""
+    return s + c
+
+
+class KahanState(NamedTuple):
+    """A compensated accumulator over an arbitrary pytree.
+
+    ``sum`` and ``carry`` are structurally identical pytrees. The represented
+    value is ``sum + carry`` leafwise. Used for gradient accumulation across
+    microbatches, compensated optimizer state and metric accumulation.
+    """
+
+    sum: PyTree
+    carry: PyTree
+
+    @staticmethod
+    def zeros_like(tree: PyTree) -> "KahanState":
+        z = jax.tree.map(jnp.zeros_like, tree)
+        return KahanState(sum=z, carry=jax.tree.map(jnp.zeros_like, tree))
+
+    def add(self, update: PyTree) -> "KahanState":
+        new_sum, new_carry = tree_kahan_add(self.sum, self.carry, update)
+        return KahanState(sum=new_sum, carry=new_carry)
+
+    def merge(self, other: "KahanState") -> "KahanState":
+        s, c = tree_kahan_combine(self.sum, self.carry, other.sum, other.carry)
+        return KahanState(sum=s, carry=c)
+
+    def value(self) -> PyTree:
+        return jax.tree.map(jnp.add, self.sum, self.carry)
+
+
+def tree_kahan_add(sum_tree: PyTree, carry_tree: PyTree, update_tree: PyTree
+                   ) -> tuple[PyTree, PyTree]:
+    """Leafwise Neumaier update of a pytree accumulator."""
+    flat_s, treedef = jax.tree.flatten(sum_tree)
+    flat_c = treedef.flatten_up_to(carry_tree)
+    flat_u = treedef.flatten_up_to(update_tree)
+    out = [neumaier_step(s, c, u) for s, c, u in zip(flat_s, flat_c, flat_u)]
+    new_s = treedef.unflatten([o[0] for o in out])
+    new_c = treedef.unflatten([o[1] for o in out])
+    return new_s, new_c
+
+
+def tree_kahan_combine(s1: PyTree, c1: PyTree, s2: PyTree, c2: PyTree
+                       ) -> tuple[PyTree, PyTree]:
+    """Leafwise merge of two pytree accumulators."""
+    flat_s1, treedef = jax.tree.flatten(s1)
+    flat_c1 = treedef.flatten_up_to(c1)
+    flat_s2 = treedef.flatten_up_to(s2)
+    flat_c2 = treedef.flatten_up_to(c2)
+    out = [combine(a, b, c, d)
+           for a, b, c, d in zip(flat_s1, flat_c1, flat_s2, flat_c2)]
+    new_s = treedef.unflatten([o[0] for o in out])
+    new_c = treedef.unflatten([o[1] for o in out])
+    return new_s, new_c
+
+
+def kahan_sum(x: Array, axis: int = -1, *, variant: str = "neumaier") -> Array:
+    """Compensated sum along ``axis`` via lax.scan (sequential semantics).
+
+    This is the *reference-structure* implementation used by framework code
+    paths where the reduction is small or already memory-bound (loss/metric
+    accumulation, router statistics). Heavy reductions use the Pallas kernels
+    in ``repro.kernels``.
+    """
+    step = neumaier_step if variant == "neumaier" else kahan_step
+    x = jnp.moveaxis(x, axis, 0)
+    zeros = jnp.zeros(x.shape[1:], dtype=x.dtype)
+
+    def body(carry, xi):
+        s, c = carry
+        s, c = step(s, c, xi)
+        return (s, c), None
+
+    (s, c), _ = jax.lax.scan(body, (zeros, zeros), x)
+    if variant == "neumaier":
+        return s + c
+    return s
+
+
+def kahan_dot(a: Array, b: Array, *, variant: str = "neumaier") -> Array:
+    """Compensated scalar product (the paper's kernel), scan form."""
+    return kahan_sum(a * b, axis=0, variant=variant)
+
+
+def naive_sum(x: Array, axis: int = -1) -> Array:
+    """The paper's baseline: straightforward accumulation (jnp.sum)."""
+    return jnp.sum(x, axis=axis)
+
+
+def naive_dot(a: Array, b: Array) -> Array:
+    """The paper's baseline scalar product."""
+    return jnp.sum(a * b)

@@ -1,0 +1,68 @@
+"""Deterministic, restartable synthetic data pipeline.
+
+Fault-tolerance by construction: batches are a pure function of
+(step, host, config), so a restarted or re-meshed job resumes at step k
+with bit-identical data — no replayed or dropped batches, no data-loader
+state in the checkpoint. Per-host sharding slices the global batch by
+process index; a background prefetch thread hides generation latency.
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Iterator
+
+import jax
+import numpy as np
+
+from repro.data import synthetic
+from repro.models.config import ModelConfig
+
+
+class SyntheticTokenPipeline:
+    def __init__(self, cfg: ModelConfig, seq_len: int, global_batch: int, *,
+                 seed: int = 1234, num_hosts: int | None = None,
+                 host_index: int | None = None, prefetch: int = 2):
+        self.cfg = cfg
+        self.seq_len = seq_len
+        self.global_batch = global_batch
+        self.seed = seed
+        self.num_hosts = num_hosts or jax.process_count()
+        self.host_index = (jax.process_index() if host_index is None
+                           else host_index)
+        assert global_batch % self.num_hosts == 0
+        self.host_batch = global_batch // self.num_hosts
+        self.prefetch = prefetch
+
+    def batch_for_step(self, step: int) -> dict:
+        """Pure function of (seed, step, host) — the restart contract."""
+        mix = np.uint32(
+            (self.seed * 2654435761 + step * 40503 + self.host_index * 97)
+            % (2 ** 31))
+        return synthetic.make_batch(self.cfg, self.seq_len, self.host_batch,
+                                    kind="train", seed=int(mix))
+
+    def iterate(self, start_step: int = 0) -> Iterator[tuple[int, dict]]:
+        """Prefetching iterator starting at ``start_step`` (skip-ahead is
+        O(1): batches are stateless in the step index)."""
+        q: queue.Queue = queue.Queue(maxsize=self.prefetch)
+        stop = threading.Event()
+
+        def producer():
+            s = start_step
+            while not stop.is_set():
+                q.put((s, self.batch_for_step(s)))
+                s += 1
+
+        t = threading.Thread(target=producer, daemon=True)
+        t.start()
+        try:
+            while True:
+                yield q.get()
+        finally:
+            stop.set()
+            try:
+                q.get_nowait()       # unblock the producer
+            except queue.Empty:
+                pass

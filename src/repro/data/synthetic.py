@@ -1,0 +1,75 @@
+"""Synthetic batches: concrete (for tests/training) and abstract (dry-run).
+
+``input_specs`` is the dry-run contract: ShapeDtypeStruct stand-ins for every
+model input of a given (arch × shape) cell — weak-type-correct, shardable,
+zero allocation. ``make_batch`` materializes the same structure with
+deterministic contents for smoke tests and the example drivers.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+
+
+def _text_len(cfg: ModelConfig, seq_len: int) -> int:
+    if cfg.family == "vlm":
+        return seq_len - cfg.vlm.num_patches
+    return seq_len
+
+
+def train_batch_struct(cfg: ModelConfig, seq_len: int, batch: int) -> dict:
+    lt = _text_len(cfg, seq_len)
+    s: dict = {
+        "tokens": jax.ShapeDtypeStruct((batch, lt), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((batch, seq_len), jnp.int32),
+        "weights": jax.ShapeDtypeStruct((batch, seq_len), jnp.float32),
+    }
+    if cfg.family == "vlm":
+        s["patch_embeds"] = jax.ShapeDtypeStruct(
+            (batch, cfg.vlm.num_patches, cfg.vlm.vision_dim), jnp.bfloat16)
+    if cfg.family == "audio":
+        s["frames"] = jax.ShapeDtypeStruct(
+            (batch, cfg.encdec.enc_seq, cfg.d_model), jnp.bfloat16)
+    return s
+
+
+def prefill_batch_struct(cfg: ModelConfig, seq_len: int, batch: int) -> dict:
+    s = train_batch_struct(cfg, seq_len, batch)
+    s.pop("labels")
+    s.pop("weights")
+    return s
+
+
+def decode_tokens_struct(batch: int) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct((batch, 1), jnp.int32)
+
+
+def make_batch(cfg: ModelConfig, seq_len: int, batch: int, *,
+               kind: str = "train", seed: int = 0) -> dict:
+    """Concrete deterministic batch matching the struct above."""
+    rng = np.random.default_rng(seed)
+    lt = _text_len(cfg, seq_len)
+    tokens = rng.integers(0, cfg.vocab_size, size=(batch, lt),
+                          dtype=np.int32)
+    out: dict = {"tokens": jnp.asarray(tokens)}
+    if cfg.family == "vlm":
+        out["patch_embeds"] = jnp.asarray(
+            rng.standard_normal((batch, cfg.vlm.num_patches,
+                                 cfg.vlm.vision_dim)), dtype=jnp.bfloat16)
+    if cfg.family == "audio":
+        out["frames"] = jnp.asarray(
+            rng.standard_normal((batch, cfg.encdec.enc_seq, cfg.d_model)),
+            dtype=jnp.bfloat16)
+    if kind == "train":
+        labels = rng.integers(0, cfg.vocab_size, size=(batch, seq_len),
+                              dtype=np.int32)
+        weights = np.ones((batch, seq_len), np.float32)
+        if cfg.family == "vlm":       # no loss on image positions
+            weights[:, : cfg.vlm.num_patches] = 0.0
+        out["labels"] = jnp.asarray(labels)
+        out["weights"] = jnp.asarray(weights)
+    return out

@@ -1,0 +1,78 @@
+"""Error-feedback gradient compression for the thin cross-pod links.
+
+int8 block-quantized all-reduce with an error-feedback residual: the
+residual r is exactly the compensation term of the paper generalized to
+lossy accumulation — quantization error is carried instead of dropped, so
+the long-run accumulated gradient is unbiased (EF-SGD). 4× fewer bytes on
+the pod axis at the cost of per-step quantization noise that the residual
+repays over time.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+class EFState(NamedTuple):
+    residual: jax.Array          # same shape as the gradient
+
+
+def ef_init(x: jax.Array) -> EFState:
+    return EFState(residual=jnp.zeros_like(x, jnp.float32))
+
+
+def _quantize(x: jax.Array) -> tuple[jax.Array, jax.Array, int]:
+    """Per-block symmetric int8 quantization. Returns (q, scales, pad)."""
+    flat = x.reshape(-1)
+    pad = (-flat.shape[0]) % BLOCK
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
+    blocks = flat.reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32), pad
+
+
+def _dequantize(q: jax.Array, scale: jax.Array, pad: int,
+                shape: tuple) -> jax.Array:
+    out = (q.astype(jnp.float32) * scale).reshape(-1)
+    if pad:
+        out = out[:-pad]
+    return out.reshape(shape)
+
+
+def ef_quantized_all_reduce(grad: jax.Array, state: EFState,
+                            axis_name: str) -> tuple[jax.Array, EFState]:
+    """Inside shard_map: compress (grad + residual), exchange int8 over the
+    axis, sum dequantized, keep the local quantization error as residual."""
+    n = jax.lax.axis_size(axis_name)
+    x = grad.astype(jnp.float32) + state.residual
+    q, scale, pad = _quantize(x)
+    local_deq = _dequantize(q, scale, pad, grad.shape)
+    new_residual = x - local_deq
+
+    if n == 1:
+        return local_deq, EFState(new_residual)
+    # exchange quantized payloads around the ring, summing dequantized
+    perm = [(i, (i + 1) % n) for i in range(n)]
+
+    def step(carry, _):
+        acc, bq, bs = carry
+        bq = jax.lax.ppermute(bq, axis_name, perm)
+        bs = jax.lax.ppermute(bs, axis_name, perm)
+        return (acc + _dequantize(bq, bs, pad, grad.shape), bq, bs), None
+
+    (total, _, _), _ = jax.lax.scan(step, (local_deq, q, scale),
+                                    jnp.arange(n - 1))
+    return total, EFState(new_residual)
+
+
+def compressed_bytes_per_element() -> float:
+    """1 int8 + scale/BLOCK f32 vs 4 B f32: the pod-axis bandwidth saving."""
+    return 1.0 + 4.0 / BLOCK

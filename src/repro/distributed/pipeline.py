@@ -1,0 +1,71 @@
+"""GPipe-style pipeline parallelism over a "stage" mesh axis.
+
+SPMD formulation: every stage runs the same program; activations travel
+stage→stage+1 by collective-permute once per clock tick. For M microbatches
+and S stages the schedule runs M+S-1 ticks (the classic GPipe bubble —
+efficiency M/(M+S-1)); autodiff through the ppermute chain yields the
+pipeline-parallel backward automatically, so a train step is just
+jax.grad(pipeline loss).
+
+This is the alternative layout for past-HBM-capacity models; the production
+dry-run uses FSDP+TP, which the memory analysis shows is sufficient for the
+assigned configs (DESIGN.md §5). Correctness is validated against the
+sequential stack in tests/test_distributed.py.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+def make_pipeline_fn(stage_fn: Callable, mesh: Mesh, axis: str = "stage"):
+    """Build the SPMD GPipe forward; in_specs are built per-leaf at call
+    time (shard_map needs concrete spec trees)."""
+    s_total = mesh.shape[axis]
+
+    def run(stacked_params, x_micro):
+        pspecs = jax.tree.map(
+            lambda _: P(axis), stacked_params)
+        fwd = shard_map(
+            _spmd_body(stage_fn, s_total, axis),
+            mesh=mesh, in_specs=(pspecs, P()), out_specs=P(),
+            check_rep=False)
+        return fwd(stacked_params, x_micro)
+
+    return run
+
+
+def _spmd_body(stage_fn, s_total, axis):
+    def spmd(params_local, x):
+        params_local = jax.tree.map(lambda p: p[0], params_local)
+        s_idx = jax.lax.axis_index(axis)
+        m = x.shape[0]
+        ticks = m + s_total - 1
+        perm = [(i, i + 1) for i in range(s_total - 1)]
+
+        def tick(carry, t):
+            prev_out, outputs = carry
+            recv = jax.lax.ppermute(prev_out, axis, perm)
+            x_feed = x[jnp.clip(t, 0, m - 1)]
+            x_in = jnp.where(s_idx == 0, x_feed, recv)
+            y = stage_fn(params_local, x_in)
+            out_idx = t - (s_total - 1)
+            valid = (s_idx == s_total - 1) & (out_idx >= 0) & (out_idx < m)
+            slot = jnp.clip(out_idx, 0, m - 1)
+            cur = outputs[slot]
+            outputs = outputs.at[slot].set(jnp.where(valid, y, cur))
+            return (y, outputs), None
+
+        init = (jnp.zeros_like(x[0]), jnp.zeros_like(x))
+        (_, outputs), _ = jax.lax.scan(tick, init, jnp.arange(ticks))
+        # broadcast final outputs from the last stage to everyone:
+        # mask-out non-final stages and psum over the stage axis
+        is_last = (s_idx == s_total - 1)
+        outputs = jnp.where(is_last, outputs, jnp.zeros_like(outputs))
+        return jax.lax.psum(outputs, axis)
+    return spmd

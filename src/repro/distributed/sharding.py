@@ -1,0 +1,233 @@
+"""Logical-axis sharding rules (MaxText-style) → mesh PartitionSpecs.
+
+Parameters declare *logical* axes in their schema; a rules table maps them to
+mesh axes per parallelism configuration. The engine enforces two invariants
+GSPMD requires:
+
+  * a mesh axis may appear at most once per spec (first logical axis wins;
+    e.g. MoE weights [experts, embed, mlp] give "model" to experts, so the
+    per-expert mlp dim falls back to replicated);
+  * a dim is only sharded if its size divides the mesh axis extent
+    (e.g. vocab=50280 on a 16-way model axis stays replicated rather than
+    forcing padding).
+
+Batch/sequence sharding for inputs and caches is chosen adaptively per shape
+cell (decode batch=1 cells shard sequence/heads instead of batch).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import math
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import common
+
+# default FSDP(data) × TP(model) rules; pods replicate params (pure DP).
+DEFAULT_RULES: dict[str, str | tuple[str, ...] | None] = {
+    "vocab": "model",
+    "embed": "data",        # FSDP axis
+    "embed_out": None,
+    "q_heads": "model",
+    "kv_heads": "model",
+    "mlp": "model",
+    "experts": "model",
+    "layers": None,
+    None: None,
+}
+
+# beyond-baseline: shard parameters over pods too (FSDP across the DCI).
+POD_FSDP_RULES = dict(DEFAULT_RULES, embed=("pod", "data"))
+
+# §Perf plan for small models: replicate params, shard batch over EVERY
+# mesh axis (TP on a 384-wide model wastes the model axis on redundant
+# compute; pure DP puts all 256 chips on distinct data).
+PURE_DP_RULES = {k: None for k in DEFAULT_RULES}
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    return math.prod(mesh.shape[a] for a in axes)
+
+
+def spec_for_axes(logical_axes: tuple, mesh: Mesh, shape: tuple,
+                  rules: dict) -> P:
+    used: set[str] = set()
+    out = []
+    for dim, name in zip(shape, logical_axes):
+        mesh_axes = rules.get(name, None)
+        if mesh_axes is None:
+            out.append(None)
+            continue
+        if isinstance(mesh_axes, str):
+            mesh_axes = (mesh_axes,)
+        mesh_axes = tuple(a for a in mesh_axes if a in mesh.shape
+                          and a not in used)
+        if not mesh_axes or dim % _axis_size(mesh, mesh_axes) != 0:
+            out.append(None)
+            continue
+        used.update(mesh_axes)
+        out.append(mesh_axes if len(mesh_axes) > 1 else mesh_axes[0])
+    return P(*out)
+
+
+def param_specs(schema: dict, mesh: Mesh, rules: dict | None = None):
+    """PartitionSpec pytree for a parameter schema."""
+    rules = rules or DEFAULT_RULES
+    axes_tree = common.logical_axes_tree(schema)
+    abstract = common.abstract_params(schema)
+    return jax.tree.map(
+        lambda ax, arr: spec_for_axes(ax, mesh, arr.shape, rules),
+        axes_tree, abstract, is_leaf=lambda x: isinstance(x, tuple))
+
+
+def param_shardings(schema: dict, mesh: Mesh, rules: dict | None = None):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        param_specs(schema, mesh, rules))
+
+
+# ------------------------------------------------- activation constraints --
+
+# Default logical→mesh rules for activations. Verified necessity: without
+# the head constraint, GSPMD loses the head sharding through the flash
+# attention reshapes and every chip computes ALL heads (16× attention flops
+# in the qwen-0.5b dry-run baseline).
+ACT_RULES_DEFAULT: dict[str, str | tuple[str, ...] | None] = {
+    "act_batch": ("pod", "data"),
+    "act_seq": None,
+    "act_heads": "model",
+    "act_mlp": "model",
+    "act_experts": "model",
+    "act_embed": None,
+    # sequence parallelism on the residual stream (cfg.sp_residual)
+    "act_res_seq": "model",
+}
+
+_ACT_CTX: contextvars.ContextVar = contextvars.ContextVar(
+    "repro_act_sharding", default=None)
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh: Mesh, rules: dict | None = None):
+    """Enable activation sharding constraints for model code traced inside."""
+    token = _ACT_CTX.set((mesh, rules or ACT_RULES_DEFAULT))
+    try:
+        yield
+    finally:
+        _ACT_CTX.reset(token)
+
+
+def shard_act(x: jax.Array, *names: str | None) -> jax.Array:
+    """Constrain an activation's sharding by logical dim names (no-op when
+    no activation_sharding context is active, e.g. single-device tests)."""
+    ctx = _ACT_CTX.get()
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    if len(names) != x.ndim:
+        return x
+    spec = spec_for_axes(tuple(names), mesh, x.shape, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# ------------------------------------------------------------ inputs -------
+
+def batch_axes(mesh: Mesh, global_batch: int,
+               axes: tuple[str, ...] = ("pod", "data")) -> tuple[str, ...]:
+    """Largest prefix of ``axes`` that divides the global batch."""
+    cand = [a for a in axes if a in mesh.shape]
+    chosen: list[str] = []
+    for a in cand:
+        if global_batch % _axis_size(mesh, tuple(chosen) + (a,)) == 0:
+            chosen.append(a)
+    return tuple(chosen)
+
+
+def data_batch_spec(mesh: Mesh, global_batch: int, ndim: int,
+                    axes: tuple[str, ...] = ("pod", "data")) -> P:
+    """Spec for a [B, ...] input array: batch over ``axes`` when it
+    divides, otherwise replicated."""
+    ba = batch_axes(mesh, global_batch, axes)
+    lead = ba if len(ba) > 1 else (ba[0] if ba else None)
+    return P(lead, *([None] * (ndim - 1)))
+
+
+def batch_shardings(batch_struct: dict, mesh: Mesh, global_batch: int,
+                    axes: tuple[str, ...] = ("pod", "data")):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, data_batch_spec(mesh, global_batch,
+                                                      len(s.shape), axes)),
+        batch_struct)
+
+
+# ------------------------------------------------------------ caches -------
+
+def cache_spec_for(struct: jax.ShapeDtypeStruct, mesh: Mesh,
+                   global_batch: int, *, stacked: int = 1) -> P:
+    """Sharding for one cache leaf.
+
+    Cache leaves are (after optional leading layer-stack dims):
+      KV cache    [B, S, KV, DH]      -> batch over (pod,data) if divisible,
+                                         else S over (pod,data); heads over
+                                         model if divisible, else head_dim.
+      MLA latent  [B, S, C]           -> batch/S as above, C over model.
+      SSD state   [B, H, N, P]        -> batch, then H over model.
+      conv state  [B, W, C]           -> batch, C over model.
+      lengths     [B]                 -> batch.
+    """
+    shape = struct.shape
+    lead = stacked
+    dims: list = [None] * len(shape)
+    model = mesh.shape.get("model", 1)
+    ba = batch_axes(mesh, global_batch)
+    b_idx = lead
+    if ba and shape[b_idx] % _axis_size(mesh, ba) == 0:
+        dims[b_idx] = ba if len(ba) > 1 else ba[0]
+        seq_shardable = False
+    else:
+        seq_shardable = True
+
+    rest = list(range(lead + 1, len(shape)))
+    if rest and seq_shardable and len(shape) >= lead + 2:
+        # shard the sequence dim instead (long-context, batch=1 cells)
+        s_idx = lead + 1
+        sa = tuple(a for a in ("pod", "data") if a in mesh.shape)
+        if sa and shape[s_idx] % _axis_size(mesh, sa) == 0:
+            dims[s_idx] = sa if len(sa) > 1 else sa[0]
+            rest = [i for i in rest if i != s_idx]
+
+    # give "model" to the first remaining dim it divides; for 4-dim KV
+    # caches prefer the kv-head dim (lead+2), falling back to head_dim.
+    order = [lead + 2, lead + 3] if len(shape) - lead == 4 else rest
+    for i in order:
+        if i < len(shape) and dims[i] is None and model > 1 \
+                and shape[i] % model == 0:
+            dims[i] = "model"
+            break
+    return P(*dims)
+
+
+def serve_cache_shardings(cfg, cache_struct, mesh: Mesh, global_batch: int):
+    """Sharding pytree for a model's stacked decode caches.
+
+    The number of leading layer-stack dims is family/path dependent
+    (hybrid's per-segment mamba states carry (n_seg, seg, ...) stacks).
+    """
+    from jax.tree_util import tree_map_with_path
+
+    def one(path, s):
+        lead = 1
+        if cfg.family == "hybrid":
+            names = {str(getattr(p, "key", "")) for p in path}
+            if "mamba" in names:
+                lead = 2
+        return NamedSharding(mesh, cache_spec_for(s, mesh, global_batch,
+                                                  stacked=lead))
+    return tree_map_with_path(one, cache_struct)

@@ -1,0 +1,4 @@
+"""The paper's ECM performance model, executable, plus its TPU adaptation."""
+
+from repro.ecm import kernels, machines, model, tpu, tpu_roofline  # noqa: F401
+from repro.ecm.model import predict  # noqa: F401

@@ -1,0 +1,104 @@
+"""Machine descriptions: the paper's four testbeds (Table I) + TPU v5e target.
+
+The four CPU machines reproduce the paper's inputs exactly; the tests in
+tests/test_ecm_paper.py assert the paper's published predictions against
+these descriptions. Latency penalties T_p are the paper's empirical values.
+"""
+
+from __future__ import annotations
+
+from repro.ecm.model import CacheLevel, Machine
+
+# --- Intel Haswell-EP (E5-2695 v3), CoD mode: 7 cores / memory domain ------
+HSW = Machine(
+    name="HSW",
+    freq_ghz=2.3,
+    cacheline_bytes=64,
+    simd_bytes=32,
+    cores=7,                       # per CoD memory domain (14/chip)
+    levels=(
+        CacheLevel("L2", 64.0),
+        CacheLevel("L3", 32.0, latency_penalty_cy=1.0),
+    ),
+    mem_bw_gbs=32.0,               # measured, per memory domain
+    mem_latency_penalty_cy=1.0,
+    load_ports=2, store_ports=1, add_ports=1, mul_ports=2, fma_ports=2,
+    overlap="intel",
+)
+
+# --- Intel Broadwell-EP (pre-release 22-core), CoD mode --------------------
+BDW = Machine(
+    name="BDW",
+    freq_ghz=2.1,
+    cacheline_bytes=64,
+    simd_bytes=32,
+    cores=11,
+    levels=(
+        CacheLevel("L2", 64.0),
+        CacheLevel("L3", 32.0, latency_penalty_cy=5.0),
+    ),
+    mem_bw_gbs=32.3,
+    mem_latency_penalty_cy=5.0,
+    load_ports=2, store_ports=1, add_ports=1, mul_ports=2, fma_ports=2,
+    overlap="intel",
+)
+
+# --- Intel Xeon Phi 5110P "Knights Corner" ----------------------------------
+KNC = Machine(
+    name="KNC",
+    freq_ghz=1.05,
+    cacheline_bytes=64,
+    simd_bytes=64,
+    cores=60,
+    levels=(
+        CacheLevel("L2", 32.0),    # L1<->L2, 32 B/cy
+    ),
+    mem_bw_gbs=175.0,
+    mem_latency_penalty_cy=20.0,   # ring interconnect (naive-dot kernel)
+    load_ports=1, store_ports=1, add_ports=1, mul_ports=1, fma_ports=1,
+    shared_arith_ports=1.0,        # single vector U-pipe
+    overlap="knc",
+)
+
+# --- IBM POWER8 (S822LC, 4 Centaur) -----------------------------------------
+PWR8 = Machine(
+    name="PWR8",
+    freq_ghz=2.9,                  # paper uses 2.9 in the transfer arithmetic
+    cacheline_bytes=128,
+    simd_bytes=16,
+    cores=10,
+    levels=(
+        CacheLevel("L2", 64.0),    # L1<->L2 (multi-ported L1)
+        CacheLevel("L3", 32.0),    # L2<->L3, no penalty (core-private L3)
+    ),
+    mem_bw_gbs=73.6,               # Centaur interconnect, measured
+    mem_latency_penalty_cy=0.0,
+    load_ports=2, store_ports=2, add_ports=2, mul_ports=2, fma_ports=2,
+    shared_arith_ports=2.0,        # two generic VSX pipes
+    overlap="full",
+)
+
+PAPER_MACHINES = {"HSW": HSW, "BDW": BDW, "KNC": KNC, "PWR8": PWR8}
+
+
+# --- TPU v5e (the framework's target; DESIGN.md §2.3) -----------------------
+# Not an ECM testbed from the paper: used by repro.ecm.tpu for the
+# hierarchy-level analysis of the Pallas kernels. Constants per assignment:
+# 197 TFLOP/s bf16 MXU, 819 GB/s HBM, ~50 GB/s/link ICI.
+TPU_V5E = dict(
+    name="TPU_v5e",
+    peak_bf16_flops=197e12,
+    # VPU (vector unit) f32 throughput estimate used for the reduction
+    # kernels (reductions cannot use the MXU). 8x128 lanes, ~4 f32 ALU ops
+    # per lane-cycle at ~0.94 GHz — documented assumption, see DESIGN.md.
+    vpu_f32_flops=4e12,
+    hbm_bw=819e9,
+    # VMEM load bandwidth: ~2 vector loads of (8,128) f32 per cycle at
+    # ~0.94 GHz ≈ 8 TB/s (the TPU analogue of the paper's L1 64 B/cy).
+    vmem_bw=8e12,
+    vmem_bytes=128 * 1024 * 1024 // 8,   # 16 MiB usable VMEM
+    hbm_bytes=16 * 2**30,
+    ici_bw_per_link=50e9 * 2,      # 50 GB/s per direction per link
+    ici_links=4,                   # 2D torus: 4 links per chip (v5e: 4)
+    chips_per_pod=256,
+)

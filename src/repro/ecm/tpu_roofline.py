@@ -1,0 +1,183 @@
+"""Three-term roofline for the multi-pod dry-run (assignment §Roofline).
+
+Terms derived from a compiled jit artifact (CPU dry-run, TPU v5e targets):
+
+    compute    = HLO_FLOPs / (chips · peak_FLOP/s)
+    memory     = HLO_bytes / (chips · HBM_bw)
+    collective = collective_bytes / (chips · links · link_bw)
+
+``collective_bytes`` is parsed from the HLO text: the summed operand sizes
+of all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+ops. Operand shapes in the post-SPMD module are per-shard, so summing them
+over the (single-program) module gives per-chip collective volume; the ICI
+term models a ring schedule on the 2D torus where each chip cycles the full
+per-chip volume through its links (ring all-X moves ~2(n-1)/n ≈ 2× shard
+bytes per hop-stage; we fold the schedule factor per op kind).
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+from repro.ecm.machines import TPU_V5E
+
+# bytes per element for HLO dtypes we may see
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+_COLLECTIVE_KINDS = ("all-gather", "all-reduce", "reduce-scatter",
+                     "all-to-all", "collective-permute")
+
+# Ring-schedule traffic multiplier per output byte, large-n limit:
+#   all-gather: each chip receives (n-1)/n of output ≈ 1× output bytes
+#   all-reduce: reduce-scatter + all-gather ≈ 2× shard bytes
+#   reduce-scatter: ≈ 1× input shard bytes
+#   all-to-all: ≈ 1× shard bytes
+#   collective-permute: 1× bytes
+_SCHEDULE_FACTOR = {
+    "all-gather": 1.0, "all-reduce": 2.0, "reduce-scatter": 1.0,
+    "all-to-all": 1.0, "collective-permute": 1.0,
+}
+
+# shape like f32[16,128,4096]{...}
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\]\S*)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(",
+    re.M)
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclass
+class CollectiveStats:
+    bytes_by_kind: dict = field(default_factory=dict)
+    count_by_kind: dict = field(default_factory=dict)
+    weighted_bytes: float = 0.0   # schedule-factor-weighted per-chip bytes
+
+    @property
+    def total_bytes(self) -> float:
+        return float(sum(self.bytes_by_kind.values()))
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    """Sum per-shard operand/result sizes of every collective in the module.
+
+    ``-done`` ops are skipped so async (start/done) pairs are not
+    double-counted.
+    """
+    stats = CollectiveStats()
+    for m in _OP_RE.finditer(hlo_text):
+        shape_str, kind = m.group(1), m.group(2)
+        line = hlo_text[m.start():hlo_text.find("\n", m.start())]
+        if f"{kind}-done" in line:
+            continue
+        nbytes = _shape_bytes(shape_str)
+        stats.bytes_by_kind[kind] = stats.bytes_by_kind.get(kind, 0) + nbytes
+        stats.count_by_kind[kind] = stats.count_by_kind.get(kind, 0) + 1
+        stats.weighted_bytes += nbytes * _SCHEDULE_FACTOR[kind]
+    return stats
+
+
+@dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float
+    hlo_bytes: float
+    collective_bytes: float          # schedule-weighted, per chip
+    t_compute_s: float
+    t_memory_s: float
+    t_collective_s: float
+    model_flops: float               # GLOBAL 6·N(_active)·D per step
+    bytes_per_chip: float            # peak allocation from memory_analysis
+    collectives: dict = field(default_factory=dict)
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute_s, "memory": self.t_memory_s,
+                 "collective": self.t_collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flop_ratio(self) -> float:
+        """(model FLOPs per chip) / (compiled HLO FLOPs per chip)."""
+        if not self.hlo_flops:
+            return 0.0
+        return self.model_flops / self.chips / self.hlo_flops
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of roofline: useful-compute time / dominant-term time."""
+        t_useful = self.model_flops / (self.chips * TPU_V5E["peak_bf16_flops"])
+        t_bound = max(self.t_compute_s, self.t_memory_s, self.t_collective_s)
+        return t_useful / t_bound if t_bound else 0.0
+
+
+def roofline(arch: str, shape: str, mesh: str, chips: int,
+             hlo_flops: float, hlo_bytes: float, hlo_text: str,
+             model_flops: float, bytes_per_chip: float,
+             hw: dict = TPU_V5E) -> RooflineReport:
+    """Build the three-term report for one (arch × shape × mesh) cell.
+
+    ``hlo_flops``/``hlo_bytes`` come from ``compiled.cost_analysis()`` on the
+    post-SPMD module: they are per-chip (per-shard shapes), so the roofline
+    divides by a single chip's peak, not the pod's. ``chips`` is kept for
+    reporting and the collective schedule.
+    """
+    stats = parse_collectives(hlo_text)
+    ici_bw = hw["ici_links"] * hw["ici_bw_per_link"]
+    t_compute = hlo_flops / hw["peak_bf16_flops"]
+    t_memory = hlo_bytes / hw["hbm_bw"]
+    t_collective = stats.weighted_bytes / ici_bw
+    return RooflineReport(
+        arch=arch, shape=shape, mesh=mesh, chips=chips,
+        hlo_flops=hlo_flops, hlo_bytes=hlo_bytes,
+        collective_bytes=stats.weighted_bytes,
+        t_compute_s=t_compute, t_memory_s=t_memory,
+        t_collective_s=t_collective,
+        model_flops=model_flops,
+        bytes_per_chip=bytes_per_chip,
+        collectives={k: {"bytes": v, "count": stats.count_by_kind[k]}
+                     for k, v in stats.bytes_by_kind.items()},
+    )
+
+
+def roofline_from_cost(arch: str, shape: str, mesh: str, chips: int,
+                       cost, model_flops: float, bytes_per_chip: float,
+                       hw: dict = TPU_V5E) -> RooflineReport:
+    """Three-term report from a trip-count-aware hlo_cost.HloCost (the
+    accurate path — XLA's own cost_analysis undercounts scanned loops)."""
+    ici_bw = hw["ici_links"] * hw["ici_bw_per_link"]
+    return RooflineReport(
+        arch=arch, shape=shape, mesh=mesh, chips=chips,
+        hlo_flops=cost.flops, hlo_bytes=cost.bytes_accessed,
+        collective_bytes=cost.weighted_collective_bytes,
+        t_compute_s=cost.dot_flops / hw["peak_bf16_flops"]
+        + cost.elementwise_flops / hw["vpu_f32_flops"],
+        t_memory_s=cost.bytes_accessed / hw["hbm_bw"],
+        t_collective_s=cost.weighted_collective_bytes / ici_bw,
+        model_flops=model_flops,
+        bytes_per_chip=bytes_per_chip,
+        collectives={k: {"bytes": v,
+                         "count": cost.collective_count.get(k, 0)}
+                     for k, v in cost.collective_bytes.items()},
+    )

@@ -1,0 +1,16 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+  kahan_dot / kahan_sum   compensated reductions (the paper's kernel)
+  naive_dot               the paper's baseline
+  kahan_acc               fused elementwise compensated accumulate
+  kahan_matmul            compensated K-loop matmul accumulation
+  flash_attention         VMEM-resident online softmax (§Perf-motivated)
+
+Each kernel: <name>.py (pl.pallas_call + BlockSpec VMEM tiling), jit'd
+wrappers in ops.py, pure-jnp oracles in ref.py. Validated in interpret mode
+on CPU; targeted at TPU v5e vreg/VMEM geometry.
+"""
+
+from repro.kernels import ops, ref  # noqa: F401
+from repro.kernels.flash_attention import flash_attention_pallas  # noqa: F401
+from repro.kernels.kahan_matmul import kahan_matmul  # noqa: F401

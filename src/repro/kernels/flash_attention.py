@@ -1,0 +1,115 @@
+"""Pallas TPU kernel: flash attention (VMEM-resident online softmax).
+
+Motivated directly by the §Perf analysis (EXPERIMENTS.md): in the XLA HLO,
+every attention block pair materializes its [qc, kc] score/probability
+buffers to HBM — measured at multiple TB per chip per step on the
+qwen1.5-110b train cell. This kernel keeps the entire online-softmax state
+(scores, probabilities, m/l statistics, output accumulator) in VMEM; HBM
+traffic reduces to streaming Q/K/V blocks once and writing the output —
+the paper's "keep the hot loop's working set at the fast level" discipline
+applied to attention.
+
+Grid: (batch·heads, nq, nk), sequential over nk with scratch carrying
+(m, l, acc). The causal variant zero-weights fully-masked blocks via
+pl.when (Mosaic still schedules the DMA, but the MXU work is skipped —
+the packing optimization lives in the XLA path; see attention.py).
+
+Validated in interpret mode against the pure-jnp oracle
+(tests/test_kernels_flash.py); ops.py exposes the jit wrapper.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, causal: bool, qc: int, kc: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    run = True
+    if causal:
+        # block is live unless strictly above the diagonal
+        run = (ki * kc) <= (qi * qc + qc - 1)
+
+    @pl.when(run)
+    def _block():
+        q = q_ref[0].astype(jnp.float32)          # [qc, d]
+        k = k_ref[0].astype(jnp.float32)          # [kc, d]
+        v = v_ref[0].astype(jnp.float32)          # [kc, dv]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale   # [qc, kc]
+        if causal:
+            q_pos = qi * qc + jax.lax.broadcasted_iota(jnp.int32, (qc, kc), 0)
+            k_pos = ki * kc + jax.lax.broadcasted_iota(jnp.int32, (qc, kc), 1)
+            mask = q_pos >= k_pos
+            s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_scr[...][:, :1]                 # [qc, 1]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        if causal:
+            p = p * mask
+        corr = jnp.exp(m_prev - m_new)             # [qc, 1]
+        l_new = l_scr[...][:, :1] * corr + p.sum(axis=-1, keepdims=True)
+        pv = jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)    # [qc, dv]
+        acc_scr[...] = acc_scr[...] * corr + pv
+        m_scr[...] = jnp.broadcast_to(m_new, m_scr.shape)
+        l_scr[...] = jnp.broadcast_to(l_new, l_scr.shape)
+
+    @pl.when(ki == nk - 1)
+    def _emit():
+        l = l_scr[...][:, :1]
+        o_ref[0] = (acc_scr[...] / jnp.maximum(l, 1e-30)
+                    ).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                           causal: bool = True, q_block: int = 256,
+                           kv_block: int = 256,
+                           interpret: bool = False) -> jax.Array:
+    """q/k/v: [BH, L, D] (batch×heads flattened). Returns [BH, Lq, Dv]."""
+    bh, lq, d = q.shape
+    _, lk, dv = v.shape
+    qc = min(q_block, lq)
+    kc = min(kv_block, lk)
+    assert lq % qc == 0 and lk % kc == 0, (lq, qc, lk, kc)
+    nq, nk = lq // qc, lk // kc
+    scale = d ** -0.5
+
+    kernel = functools.partial(_flash_kernel, scale=scale, causal=causal,
+                               qc=qc, kc=kc)
+    return pl.pallas_call(
+        kernel,
+        grid=(bh, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, qc, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, kc, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, kc, dv), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, qc, dv), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, lq, dv), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((qc, 128), jnp.float32),   # m (col 0 used; vreg-wide)
+            pltpu.VMEM((qc, 128), jnp.float32),   # l
+            pltpu.VMEM((qc, dv), jnp.float32),    # acc
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,51 @@
+"""Pallas TPU kernel: elementwise compensated accumulate (grad-accumulation).
+
+The framework-scale use of the paper's algorithm: a microbatch gradient
+accumulator keeps (sum, carry) per parameter element and folds each new
+microbatch gradient in with a Neumaier step. This kernel is the fused
+elementwise form: 3 streams in, 2 streams out, 20 B/element f32 — purely
+HBM-bound, so (per the paper's result) compensation costs no wall-clock over
+a naive `acc += g` (12 B/element) beyond the carry stream it must maintain.
+
+The same kernel backs the compensated optimizer's state update and the SSD
+inter-chunk state carry.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import kahan
+from repro.kernels.kahan_dot import LANES
+
+
+def _kahan_acc_kernel(s_ref, c_ref, u_ref, s_out, c_out):
+    s, c = kahan.neumaier_step(s_ref[...], c_ref[...], u_ref[...].astype(s_ref.dtype))
+    s_out[...] = s
+    c_out[...] = c
+
+
+def kahan_acc_blocked(acc_sum: jax.Array, acc_carry: jax.Array,
+                      update: jax.Array, *, block_rows: int = 512,
+                      interpret: bool = False) -> tuple[jax.Array, jax.Array]:
+    """(M, 128) compensated accumulate: returns (new_sum, new_carry)."""
+    assert acc_sum.ndim == 2 and acc_sum.shape[1] == LANES
+    assert acc_sum.shape == acc_carry.shape == update.shape
+    m = acc_sum.shape[0]
+    assert m % block_rows == 0
+    spec = pl.BlockSpec((block_rows, LANES), lambda g: (g, 0))
+
+    return pl.pallas_call(
+        _kahan_acc_kernel,
+        grid=(m // block_rows,),
+        in_specs=[spec, spec, spec],
+        out_specs=[spec, spec],
+        out_shape=[
+            jax.ShapeDtypeStruct(acc_sum.shape, acc_sum.dtype),
+            jax.ShapeDtypeStruct(acc_carry.shape, acc_carry.dtype),
+        ],
+        input_output_aliases={0: 0, 1: 1},
+        interpret=interpret,
+    )(acc_sum, acc_carry, update)

@@ -1,0 +1,122 @@
+"""Pallas TPU kernel: Kahan-compensated scalar product (the paper's kernel).
+
+TPU-native adaptation of the paper's SIMD strategy (§4.2, DESIGN.md §2.3):
+
+  * The paper keeps one compensation register per SIMD lane and unrolls to
+    hide ADD latency. Here each grid step streams a ``(block_rows, 128)``
+    VMEM block of each operand, forms the products on the VPU, and folds them
+    into persistent ``(8, 128)`` sum/carry accumulators in VMEM scratch —
+    one compensated accumulator per (sublane, lane), the vreg shape of the
+    v5e VPU. Latency hiding is Mosaic's job; the numerics structure is ours.
+  * The final grid step performs a compensated binary-fold reduction over
+    sublanes then lanes, merging (sum, carry) pairs with TwoSum so the lane
+    reduction does not reintroduce O(lanes·eps) error (the paper reduces its
+    SIMD partial sums at loop exit the same way, scalar-ly).
+  * HBM→VMEM traffic is identical to the naive dot kernel: 8 B/update for
+    f32 (2 operands). The extra VPU flops (~7 vs 2 per update) ride under the
+    memory term — the paper's "Kahan for free when bandwidth-bound" result,
+    restated for HBM instead of L3/Mem (quantified in repro.ecm.tpu).
+
+Inputs are zero-padded and reshaped to ``(M, 128)`` by ``ops.py``; padding
+with exact zeros is exact for compensated accumulation.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import kahan
+
+SUBLANES = 8
+LANES = 128
+
+
+def _compensated_fold(s, c):
+    """Binary-fold a (8, 128) compensated accumulator to a scalar.
+
+    Each halving merges (sum, carry) pairs with TwoSum (kahan.combine) so no
+    compensation is lost. log2(8) + log2(128) = 10 merge levels.
+    """
+    # Fold sublanes: (8,128) -> (1,128)
+    rows = s.shape[0]
+    while rows > 1:
+        half = rows // 2
+        s_hi, s_lo = s[:half], s[half:rows]
+        c_hi, c_lo = c[:half], c[half:rows]
+        s, c = kahan.combine(s_hi, c_hi, s_lo, c_lo)
+        rows = half
+    # Fold lanes: (1,128) -> (1,1)
+    cols = s.shape[1]
+    while cols > 1:
+        half = cols // 2
+        s_hi, s_lo = s[:, :half], s[:, half:cols]
+        c_hi, c_lo = c[:, :half], c[:, half:cols]
+        s, c = kahan.combine(s_hi, c_hi, s_lo, c_lo)
+        cols = half
+    return s, c
+
+
+def _kahan_dot_kernel(x_ref, y_ref, out_ref, acc_s, acc_c, *, acc_dtype):
+    """Grid-sequential kernel body. Scratch persists across grid steps."""
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        acc_s[...] = jnp.zeros_like(acc_s)
+        acc_c[...] = jnp.zeros_like(acc_c)
+
+    x = x_ref[...].astype(acc_dtype)
+    y = y_ref[...].astype(acc_dtype)
+    prod = x * y  # exact in f32 for bf16 inputs
+
+    n_sub = prod.shape[0] // SUBLANES
+
+    def body(i, carry):
+        s, c = carry
+        chunk = jax.lax.dynamic_slice_in_dim(prod, i * SUBLANES, SUBLANES, 0)
+        return kahan.neumaier_step(s, c, chunk)
+
+    s, c = jax.lax.fori_loop(0, n_sub, body, (acc_s[...], acc_c[...]))
+    acc_s[...] = s
+    acc_c[...] = c
+
+    @pl.when(pl.program_id(0) == pl.num_programs(0) - 1)
+    def _finish():
+        fs, fc = _compensated_fold(acc_s[...], acc_c[...])
+        out_ref[...] = (fs + fc).astype(out_ref.dtype)
+
+
+def kahan_dot_blocked(x2d: jax.Array, y2d: jax.Array, *, block_rows: int = 256,
+                      interpret: bool = False) -> jax.Array:
+    """Compensated dot of two (M, 128) arrays (M % block_rows == 0).
+
+    Returns a () scalar in the accumulation dtype (f32, or f64 for f64
+    inputs — f64 exercised in interpret mode only).
+    """
+    assert x2d.ndim == 2 and x2d.shape[1] == LANES, x2d.shape
+    assert x2d.shape == y2d.shape, (x2d.shape, y2d.shape)
+    m = x2d.shape[0]
+    assert m % block_rows == 0 and block_rows % SUBLANES == 0
+    acc_dtype = jnp.promote_types(x2d.dtype, jnp.float32)
+    grid = (m // block_rows,)
+
+    out = pl.pallas_call(
+        functools.partial(_kahan_dot_kernel, acc_dtype=acc_dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, LANES), lambda g: (g, 0)),
+            pl.BlockSpec((block_rows, LANES), lambda g: (g, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda g: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, 1), acc_dtype),
+        scratch_shapes=[
+            pltpu.VMEM((SUBLANES, LANES), acc_dtype),
+            pltpu.VMEM((SUBLANES, LANES), acc_dtype),
+        ],
+        interpret=interpret,
+    )(x2d, y2d)
+    return out[0, 0]

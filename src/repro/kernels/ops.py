@@ -1,0 +1,114 @@
+"""Public jit'd wrappers for the reduction kernels.
+
+Handles shape canonicalization (flatten → zero-pad → reshape to (M, 128)),
+interpret-mode selection (auto-on for CPU, i.e. this container; off on real
+TPU), and dtype policy. Padding with exact zeros is exact for both naive and
+compensated accumulation.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import kahan_acc as _kacc
+from repro.kernels import kahan_dot as _kdot
+from repro.kernels import kahan_sum as _ksum
+from repro.kernels import naive_dot as _ndot
+from repro.kernels.kahan_dot import LANES
+
+
+def _auto_interpret(interpret):
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return interpret
+
+
+def _to_blocked_2d(x: jax.Array, block_rows: int) -> jax.Array:
+    """Flatten, zero-pad to a multiple of block_rows*LANES, reshape (M,128)."""
+    flat = x.reshape(-1)
+    tile = block_rows * LANES
+    n = flat.shape[0]
+    pad = (-n) % tile
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), dtype=flat.dtype)])
+    return flat.reshape(-1, LANES)
+
+
+def _pick_block_rows(n: int, requested: int) -> int:
+    """Shrink the block if the input is tiny so the grid is non-trivial."""
+    br = requested
+    while br > 8 and n < br * LANES:
+        br //= 2
+    return max(br, 8)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def _kahan_dot_impl(x, y, block_rows, interpret):
+    x2 = _to_blocked_2d(x, block_rows)
+    y2 = _to_blocked_2d(y, block_rows)
+    return _kdot.kahan_dot_blocked(x2, y2, block_rows=block_rows,
+                                   interpret=interpret)
+
+
+def kahan_dot(x: jax.Array, y: jax.Array, *, block_rows: int = 256,
+              interpret: bool | None = None) -> jax.Array:
+    """Compensated scalar product of two same-shape arrays -> scalar."""
+    assert x.shape == y.shape, (x.shape, y.shape)
+    br = _pick_block_rows(x.size, block_rows)
+    return _kahan_dot_impl(x, y, br, _auto_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def _kahan_sum_impl(x, block_rows, interpret):
+    x2 = _to_blocked_2d(x, block_rows)
+    return _ksum.kahan_sum_blocked(x2, block_rows=block_rows,
+                                   interpret=interpret)
+
+
+def kahan_sum(x: jax.Array, *, block_rows: int = 512,
+              interpret: bool | None = None) -> jax.Array:
+    """Compensated full-array sum -> scalar."""
+    br = _pick_block_rows(x.size, block_rows)
+    return _kahan_sum_impl(x, br, _auto_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def _naive_dot_impl(x, y, block_rows, interpret):
+    x2 = _to_blocked_2d(x, block_rows)
+    y2 = _to_blocked_2d(y, block_rows)
+    return _ndot.naive_dot_blocked(x2, y2, block_rows=block_rows,
+                                   interpret=interpret)
+
+
+def naive_dot(x: jax.Array, y: jax.Array, *, block_rows: int = 256,
+              interpret: bool | None = None) -> jax.Array:
+    """Baseline (uncompensated) scalar product -> scalar."""
+    assert x.shape == y.shape
+    br = _pick_block_rows(x.size, block_rows)
+    return _naive_dot_impl(x, y, br, _auto_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def _kahan_acc_impl(s, c, u, block_rows, interpret):
+    shape = s.shape
+    s2 = _to_blocked_2d(s, block_rows)
+    c2 = _to_blocked_2d(c, block_rows)
+    u2 = _to_blocked_2d(u, block_rows)
+    ns, nc = _kacc.kahan_acc_blocked(s2, c2, u2, block_rows=block_rows,
+                                     interpret=interpret)
+    n = s.size
+    return (ns.reshape(-1)[:n].reshape(shape), nc.reshape(-1)[:n].reshape(shape))
+
+
+def kahan_accumulate(acc_sum: jax.Array, acc_carry: jax.Array,
+                     update: jax.Array, *, block_rows: int = 512,
+                     interpret: bool | None = None
+                     ) -> tuple[jax.Array, jax.Array]:
+    """Elementwise compensated accumulate on arbitrary-shape arrays."""
+    assert acc_sum.shape == acc_carry.shape == update.shape
+    br = _pick_block_rows(acc_sum.size, block_rows)
+    return _kahan_acc_impl(acc_sum, acc_carry, update, br,
+                           _auto_interpret(interpret))

@@ -1,0 +1,68 @@
+"""Pure-jnp / numpy oracles for the reduction kernels.
+
+Three tiers of reference:
+  * ``*_ref``    — pure-jnp implementations with the same numerics *algorithm*
+                   as the Pallas kernels (sequential Kahan/Neumaier via scan).
+  * ``exact_*``  — ground truth via math.fsum on float64 (error-free up to the
+                   final rounding); used by the accuracy property tests.
+  * ``naive_*``  — the paper's baseline (straightforward accumulation).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import kahan
+
+
+def naive_dot_ref(x, y):
+    """Paper baseline: plain jnp dot (XLA tree-reduction on TPU/CPU)."""
+    return jnp.sum(x.astype(jnp.float32) * y.astype(jnp.float32))
+
+
+def naive_sum_ref(x):
+    return jnp.sum(x.astype(jnp.float32))
+
+
+def kahan_dot_ref(x, y):
+    """Sequential compensated dot (scan) — the paper's Fig. 2b semantics."""
+    prod = x.astype(jnp.float32) * y.astype(jnp.float32)
+    return kahan.kahan_sum(prod, axis=0)
+
+
+def kahan_sum_ref(x):
+    return kahan.kahan_sum(x.astype(jnp.float32), axis=0)
+
+
+def kahan_acc_ref(acc_sum, acc_carry, update):
+    """Elementwise Neumaier accumulate (grad-accumulation oracle)."""
+    return kahan.neumaier_step(acc_sum.astype(jnp.float32),
+                               acc_carry.astype(jnp.float32),
+                               update.astype(jnp.float32))
+
+
+# ---------------------------------------------------------------- exact ----
+
+def exact_dot(x, y) -> float:
+    """Error-free dot via fsum over float64 products.
+
+    For float32/bfloat16 inputs the float64 product is exact, so fsum gives
+    the correctly-rounded-up-to-one-final-rounding ground truth.
+    """
+    xf = np.asarray(x, dtype=np.float64).reshape(-1)
+    yf = np.asarray(y, dtype=np.float64).reshape(-1)
+    return math.fsum((xf * yf).tolist())
+
+
+def exact_sum(x) -> float:
+    return math.fsum(np.asarray(x, dtype=np.float64).reshape(-1).tolist())
+
+
+def condition_number(x) -> float:
+    """Summation condition number: sum|x| / |sum x| (np.float64)."""
+    xf = np.asarray(x, dtype=np.float64)
+    denom = abs(math.fsum(xf.tolist()))
+    return float(np.sum(np.abs(xf)) / max(denom, np.finfo(np.float64).tiny))

@@ -1,0 +1,292 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+The two lines above MUST run before any other import (jax locks the device
+count at first init). For every cell this driver:
+
+  1. builds the production mesh (16×16 single-pod or 2×16×16 multi-pod),
+  2. constructs abstract parameters / optimizer state / batch / caches
+     (ShapeDtypeStruct only — no allocation),
+  3. jits the train_step or serve_step with explicit in_shardings,
+  4. ``.lower().compile()`` — sharding mismatches, compile-time OOM or
+     unsupported collectives fail HERE, which is the point,
+  5. records memory_analysis / cost_analysis / the collective schedule
+     parsed from the optimized HLO, and the three roofline terms,
+     into results/dryrun/<arch>__<shape>__<mesh>.json.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen1.5-110b --shape train_4k --mesh multi
+  python -m repro.launch.dryrun --all --mesh both        # full sweep
+  python -m repro.launch.dryrun --list                   # enumerate cells
+"""
+
+import argparse
+import json
+import math
+import time
+import traceback
+
+
+#: §Perf hillclimb knobs applied on top of the baseline config via
+#: --opts opt1,opt2 (each is a ModelConfig transform)
+PERF_OPTS = {
+    "causal_packing": lambda cfg: cfg.with_(
+        causal_packing=True,
+        mla=cfg.mla._replace(causal_packing=True) if cfg.mla else None),
+    "sp_residual": lambda cfg: cfg.with_(sp_residual=True),
+    "remat_dots": lambda cfg: cfg.with_(remat_policy="dots"),
+    "qchunk_1k": lambda cfg: cfg.with_(q_chunk=1024, kv_chunk=1024),
+    "qchunk_2k": lambda cfg: cfg.with_(q_chunk=2048, kv_chunk=2048),
+    "cf1": lambda cfg: cfg.with_(
+        moe=cfg.moe._replace(capacity_factor=1.0) if cfg.moe else None),
+    # handled structurally in _build_cell (sharding plan / optimizer mode):
+    "pure_dp": lambda cfg: cfg,
+    "mixed": lambda cfg: cfg,   # bf16 params + f32 master (train cells)
+}
+
+
+def _build_cell(arch: str, shape_name: str, multi_pod: bool, variant: str,
+                opts: tuple = ()):
+    """Returns (lowered, meta) for one cell. Imports deferred past XLA_FLAGS."""
+    import jax
+
+    from repro.configs import SHAPES, get_config
+    from repro.data import synthetic
+    from repro.distributed import sharding
+    from repro.launch.mesh import make_production_mesh
+    from repro.models import api, common
+    from repro.optim import adamw
+    from repro.train import steps
+
+    cfg = get_config(arch)
+    if variant == "naive":
+        cfg = cfg.with_(kahan_attn=False, kahan_ssm_state=False)
+    elif variant == "kahan":
+        cfg = cfg.with_(kahan_ssm_state=cfg.family in ("ssm", "hybrid"))
+    for opt in opts:
+        cfg = PERF_OPTS[opt](cfg)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = math.prod(mesh.shape.values())
+
+    # sharding plan: baseline FSDP(data)×TP(model), or pure-DP for small
+    # models (batch over every axis, params replicated)
+    pure_dp = "pure_dp" in opts
+    param_rules = sharding.PURE_DP_RULES if pure_dp else None
+    b_axes = (("pod", "data", "model") if pure_dp else ("pod", "data"))
+    act_rules = None
+    if pure_dp:
+        act_rules = dict(sharding.ACT_RULES_DEFAULT, act_batch=b_axes,
+                         act_heads=None, act_mlp=None, act_experts=None,
+                         act_res_seq=None)
+
+    sch = api.schema(cfg)
+    params_struct = common.abstract_params(sch)
+    mixed = "mixed" in opts
+    if mixed:
+        params_struct = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(
+                s.shape, jax.numpy.bfloat16
+                if s.dtype == jax.numpy.float32 else s.dtype),
+            params_struct)
+    pshard = sharding.param_shardings(sch, mesh, param_rules)
+
+    if shape.kind == "train":
+        opt_cfg = adamw.AdamWConfig(kahan=(variant == "kahan"),
+                                    master_weights=mixed)
+        opt_struct = jax.eval_shape(lambda p: adamw.init(p, opt_cfg),
+                                    params_struct)
+        oshard = adamw.AdamWState(
+            count=jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec()),
+            m=pshard, v=pshard,
+            carry=pshard if opt_cfg.kahan else None,
+            master=pshard if mixed else None)
+        batch_struct = synthetic.train_batch_struct(
+            cfg, shape.seq_len, shape.global_batch)
+        bshard = sharding.batch_shardings(batch_struct, mesh,
+                                          shape.global_batch, b_axes)
+        step_struct = jax.ShapeDtypeStruct((), jax.numpy.int32)
+        fn = steps.build_train_step(cfg, opt_cfg)
+        jitted = jax.jit(fn, in_shardings=(pshard, oshard, bshard, None),
+                         donate_argnums=(0, 1))
+        with mesh, sharding.activation_sharding(mesh, act_rules):
+            lowered = jitted.lower(params_struct, opt_struct, batch_struct,
+                                   step_struct)
+    elif shape.kind == "prefill":
+        batch_struct = synthetic.prefill_batch_struct(
+            cfg, shape.seq_len, shape.global_batch)
+        bshard = sharding.batch_shardings(batch_struct, mesh,
+                                          shape.global_batch, b_axes)
+        fn = steps.build_prefill_step(cfg, cache_size=shape.seq_len)
+        jitted = jax.jit(fn, in_shardings=(pshard, bshard))
+        with mesh, sharding.activation_sharding(mesh, act_rules):
+            lowered = jitted.lower(params_struct, batch_struct)
+    else:  # decode: one new token against a seq_len cache
+        cache_struct = api.cache_specs(cfg, shape.global_batch, shape.seq_len)
+        cshard = sharding.serve_cache_shardings(cfg, cache_struct, mesh,
+                                                shape.global_batch)
+        tokens_struct = synthetic.decode_tokens_struct(shape.global_batch)
+        tshard = sharding.batch_shardings(tokens_struct, mesh,
+                                          shape.global_batch, b_axes)
+        fn = steps.build_serve_step(cfg)
+        jitted = jax.jit(fn, in_shardings=(pshard, cshard, tshard),
+                         donate_argnums=(1,))
+        with mesh, sharding.activation_sharding(mesh, act_rules):
+            lowered = jitted.lower(params_struct, cache_struct, tokens_struct)
+
+    meta = dict(arch=arch, shape=shape_name,
+                mesh="2x16x16" if multi_pod else "16x16",
+                chips=chips, kind=shape.kind, variant=variant,
+                seq_len=shape.seq_len, global_batch=shape.global_batch)
+    return lowered, meta, cfg, shape
+
+
+def model_flops(cfg, shape) -> float:
+    """Assignment formula: 6·N·D train (2·N·D forward-only serve), with
+    N = active params excluding embedding gathers (MoE: top_k of E)."""
+    from repro.models import api, common
+
+    sch = api.schema(cfg)
+    total = 0.0
+    for path, spec in common._flatten_schema(sch):
+        n = math.prod(spec.shape)
+        leaf = path.split("/")[-1]
+        if leaf in ("embed", "pos_embed") and not (
+                cfg.tie_embeddings or cfg.family == "audio"):
+            continue  # gather-only use
+        if cfg.moe is not None and "/ffn/" in path and leaf in (
+                "w_gate_up", "w_down") and spec.shape[0] == cfg.moe.num_experts:
+            n *= cfg.moe.top_k / cfg.moe.num_experts
+        total += n
+    if shape.kind == "train":
+        return 6.0 * total * shape.seq_len * shape.global_batch
+    if shape.kind == "prefill":
+        return 2.0 * total * shape.seq_len * shape.global_batch
+    return 2.0 * total * shape.global_batch   # decode: one token per seq
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
+             variant: str = "kahan", opts: tuple = ()) -> dict:
+    from repro.ecm import hlo_cost, tpu_roofline
+
+    t0 = time.time()
+    lowered, meta, cfg, shape = _build_cell(arch, shape_name, multi_pod,
+                                            variant, opts)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    # XLA's own numbers (recorded for reference; undercounts scanned loops)
+    xla_cost = compiled.cost_analysis()
+    if isinstance(xla_cost, (list, tuple)):
+        xla_cost = xla_cost[0]
+    xla_flops = float(xla_cost.get("flops", 0.0))
+    xla_bytes = float(xla_cost.get("bytes accessed", 0.0))
+
+    mem = {}
+    try:
+        ma = compiled.memory_analysis()
+        for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "alias_size_in_bytes",
+                  "generated_code_size_in_bytes"):
+            if hasattr(ma, k):
+                mem[k] = int(getattr(ma, k))
+    except Exception as e:  # CPU backend may not implement it
+        mem["error"] = str(e)
+
+    hlo = compiled.as_text()
+    cost = hlo_cost.analyze(hlo)
+    report = tpu_roofline.roofline_from_cost(
+        arch=arch, shape=shape_name, mesh=meta["mesh"], chips=meta["chips"],
+        cost=cost, model_flops=model_flops(cfg, shape),
+        bytes_per_chip=float(mem.get("argument_size_in_bytes", 0))
+        + float(mem.get("temp_size_in_bytes", 0)))
+
+    result = dict(
+        meta,
+        opts=list(opts),
+        lower_s=round(t_lower, 1), compile_s=round(t_compile, 1),
+        hlo_flops=cost.flops, hlo_bytes=cost.bytes_accessed,
+        dot_flops=cost.dot_flops, elementwise_flops=cost.elementwise_flops,
+        xla_cost_analysis={"flops": xla_flops, "bytes": xla_bytes},
+        cost_warnings=cost.warnings[:20],
+        memory_analysis=mem,
+        collectives=report.collectives,
+        collective_bytes_weighted=report.collective_bytes,
+        t_compute_s=report.t_compute_s, t_memory_s=report.t_memory_s,
+        t_collective_s=report.t_collective_s, dominant=report.dominant,
+        model_flops=report.model_flops,
+        useful_flop_ratio=report.useful_flop_ratio,
+        roofline_fraction=report.roofline_fraction,
+        status="ok",
+    )
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        fname = f"{arch}__{shape_name}__{meta['mesh']}"
+        if variant != "kahan":
+            fname += f"__{variant}"
+        if opts:
+            fname += "__" + "+".join(opts)
+        with open(os.path.join(out_dir, fname + ".json"), "w") as f:
+            json.dump(result, f, indent=1)
+    return result
+
+
+def enumerate_cells():
+    from repro.configs import REGISTRY, get_config, shapes_for
+    cells = []
+    for arch in sorted(REGISTRY):
+        for shape_name in shapes_for(get_config(arch)):
+            cells.append((arch, shape_name))
+    return cells
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--variant", choices=["kahan", "naive"], default="kahan")
+    ap.add_argument("--opts", default="",
+                    help="comma-separated §Perf knobs: "
+                         + ",".join(PERF_OPTS))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--list", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    args = ap.parse_args()
+    opts = tuple(o for o in args.opts.split(",") if o)
+
+    if args.list:
+        for arch, shape in enumerate_cells():
+            print(f"{arch:28s} {shape}")
+        return
+
+    cells = (enumerate_cells() if args.all
+             else [(args.arch, args.shape)])
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    failures = 0
+    for arch, shape in cells:
+        for multi_pod in meshes:
+            label = f"{arch} × {shape} × {'2x16x16' if multi_pod else '16x16'}"
+            try:
+                r = run_cell(arch, shape, multi_pod, args.out, args.variant,
+                             opts)
+                print(f"OK   {label}: compile={r['compile_s']}s "
+                      f"flops/chip={r['hlo_flops']:.3e} "
+                      f"dominant={r['dominant']} "
+                      f"roofline={r['roofline_fraction']:.3f}", flush=True)
+            except Exception:
+                failures += 1
+                print(f"FAIL {label}", flush=True)
+                traceback.print_exc()
+    if failures:
+        raise SystemExit(f"{failures} cell(s) failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [...]``.
+
+Wraps the production Trainer (checkpointing, compensated optimizer,
+deterministic restartable data, straggler monitor). On this CPU container
+run reduced configs; on real hardware drop --reduced and provide a mesh
+via the environment's device set.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+from repro.configs import REGISTRY, get_config, reduced
+from repro.train.loop import Trainer
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=sorted(REGISTRY))
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--full", dest="reduced", action="store_false")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--micro", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--no-kahan", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduced(cfg)
+    trainer = Trainer(cfg, seq_len=args.seq_len, global_batch=args.batch,
+                      lr=args.lr, opt_kahan=not args.no_kahan,
+                      n_microbatches=args.micro, ckpt_dir=args.ckpt_dir,
+                      ckpt_every=args.ckpt_every, total_steps=args.steps,
+                      seed=args.seed)
+    out = trainer.run(args.steps)
+    print(f"done: {len(out['history'])} steps, "
+          f"final loss {out['history'][-1]['loss']:.4f}, "
+          f"stragglers flagged: {len(out['stragglers'])}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+"""Model zoo: composable layers + family assemblies for the assigned archs."""
+
+from repro.models import api  # noqa: F401
+from repro.models.config import ModelConfig  # noqa: F401

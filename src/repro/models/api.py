@@ -1,0 +1,61 @@
+"""Family-dispatched public model API used by train/serve/dry-run layers."""
+
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+
+from repro.models import encdec, hybrid, lm
+from repro.models.config import ModelConfig
+
+MAX_DEC_POSITIONS = 32768   # learned decoder positions (audio family)
+
+
+def schema(cfg: ModelConfig) -> dict:
+    if cfg.family == "audio":
+        return encdec.encdec_schema(cfg, MAX_DEC_POSITIONS)
+    if cfg.family == "hybrid":
+        return hybrid.hybrid_schema(cfg)
+    return lm.lm_schema(cfg)
+
+
+def loss_fn(cfg: ModelConfig) -> Callable:
+    if cfg.family == "audio":
+        return lambda p, b: encdec.encdec_loss(p, b, cfg)
+    if cfg.family == "hybrid":
+        return lambda p, b: hybrid.hybrid_loss(p, b, cfg)
+    return lambda p, b: lm.lm_loss(p, b, cfg)
+
+
+def forward_fn(cfg: ModelConfig) -> Callable:
+    if cfg.family == "audio":
+        return lambda p, b: encdec.encdec_forward(p, b, cfg)
+    if cfg.family == "hybrid":
+        return lambda p, b: hybrid.hybrid_forward(p, b, cfg)
+    return lambda p, b: lm.lm_forward(p, b, cfg)
+
+
+def prefill_fn(cfg: ModelConfig, cache_size: int) -> Callable:
+    if cfg.family == "audio":
+        return lambda p, b: encdec.encdec_prefill(p, b, cfg, cache_size)
+    if cfg.family == "hybrid":
+        return lambda p, b: hybrid.hybrid_prefill(p, b, cfg, cache_size)
+    return lambda p, b: lm.lm_prefill(p, b, cfg, cache_size)
+
+
+def decode_fn(cfg: ModelConfig) -> Callable:
+    """(params, tokens [B,1], caches) -> (logits [B,V], new_caches)."""
+    if cfg.family == "audio":
+        return lambda p, t, c: encdec.encdec_decode(p, t, c, cfg)
+    if cfg.family == "hybrid":
+        return lambda p, t, c: hybrid.hybrid_decode(p, t, c, cfg)
+    return lambda p, t, c: lm.lm_decode(p, t, c, cfg)
+
+
+def cache_specs(cfg: ModelConfig, batch: int, cache_size: int) -> Any:
+    if cfg.family == "audio":
+        return encdec.encdec_cache_specs(cfg, batch, cache_size)
+    if cfg.family == "hybrid":
+        return hybrid.hybrid_cache_specs(cfg, batch, cache_size)
+    return lm.lm_cache_specs(cfg, batch, cache_size)

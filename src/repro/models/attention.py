@@ -1,0 +1,335 @@
+"""Attention: chunked-flash GQA (training/prefill), cached decode, and MLA.
+
+Memory-efficient attention is mandatory here: the assigned shape cells go up
+to 32k prefill, and materializing [B, H, L, L] scores is impossible at those
+sizes. The flash implementation is a pure-JAX blockwise online-softmax
+(scan over KV chunks inside a map over Q chunks) — the TPU-idiomatic
+formulation that XLA fuses well and that bounds live memory to one
+(q_chunk × kv_chunk) tile per (batch, head).
+
+The online-softmax accumulator is itself a long accumulation chain; the
+``kahan_acc`` flag switches it to compensated (Neumaier) accumulation —
+the paper's technique applied inside attention (off by default; validated in
+tests/test_models_attention.py).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import kahan
+from repro.models import common
+from repro.models.common import ParamSpec
+
+Array = jax.Array
+
+NEG_INF = -1e30
+
+
+def _shard_blhd(x: Array) -> Array:
+    """Constrain [B, L, H, D] activations: batch over (pod, data), heads
+    over model. Verified against the dry-run: without this, GSPMD drops the
+    head sharding across the flash-attention reshapes and every chip
+    computes all heads."""
+    from repro.distributed.sharding import shard_act
+    return shard_act(x, "act_batch", "act_seq", "act_heads", None)
+
+
+class AttnConfig(NamedTuple):
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int
+    qkv_bias: bool = False
+    rope_theta: float = 1e4
+    rotary_fraction: float = 1.0
+    q_chunk: int = 512
+    kv_chunk: int = 512
+    kahan_acc: bool = False
+    causal: bool = True
+    # §Perf knob: triangular block packing — compute only the nq(nq+1)/2
+    # valid (q,kv) block pairs of a causal mask instead of all nq·nk
+    causal_packing: bool = False
+
+
+def gqa_schema(d_model: int, cfg: AttnConfig) -> dict:
+    h, kv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    s = {
+        "wq": ParamSpec((d_model, h * dh), ("embed", "q_heads"), init="fan_in"),
+        "wk": ParamSpec((d_model, kv * dh), ("embed", "kv_heads"), init="fan_in"),
+        "wv": ParamSpec((d_model, kv * dh), ("embed", "kv_heads"), init="fan_in"),
+        "wo": ParamSpec((h * dh, d_model), ("q_heads", "embed"), init="fan_in"),
+    }
+    if cfg.qkv_bias:
+        s["bq"] = ParamSpec((h * dh,), ("q_heads",), init="zeros")
+        s["bk"] = ParamSpec((kv * dh,), ("kv_heads",), init="zeros")
+        s["bv"] = ParamSpec((kv * dh,), ("kv_heads",), init="zeros")
+    return s
+
+
+def _project_qkv(p: dict, x: Array, cfg: AttnConfig, positions: Array
+                 ) -> tuple[Array, Array, Array]:
+    b, l, _ = x.shape
+    h, kv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = common.dense(x, p["wq"], p.get("bq")).reshape(b, l, h, dh)
+    k = common.dense(x, p["wk"], p.get("bk")).reshape(b, l, kv, dh)
+    v = common.dense(x, p["wv"], p.get("bv")).reshape(b, l, kv, dh)
+    rd = int(dh * cfg.rotary_fraction)
+    if rd:
+        q = common.apply_rope(q.swapaxes(1, 2), positions[:, None, :],
+                              theta=cfg.rope_theta, rotary_dim=rd).swapaxes(1, 2)
+        k = common.apply_rope(k.swapaxes(1, 2), positions[:, None, :],
+                              theta=cfg.rope_theta, rotary_dim=rd).swapaxes(1, 2)
+    return _shard_blhd(q), _shard_blhd(k), _shard_blhd(v)
+
+
+def flash_attention(q: Array, k: Array, v: Array, *, causal: bool = True,
+                    q_chunk: int = 512, kv_chunk: int = 512,
+                    kahan_acc: bool = False, kv_len: Array | None = None,
+                    causal_packing: bool = False) -> Array:
+    """Blockwise attention. q: [B, Lq, Hq, D]; k/v: [B, Lk, Hkv, Dv].
+
+    Returns [B, Lq, Hq, Dv]. GQA handled by grouping q heads over kv heads.
+    """
+    b, lq_orig, hq, d = q.shape
+    _, lk_orig, hkv, dv = v.shape
+    if hkv < hq:
+        # GQA under tensor parallelism: repeat KV heads up to the q-head
+        # count so the head dim shards cleanly over the model axis (each TP
+        # rank holds its q-heads' KV copy — Megatron-style). Decode keeps
+        # the compact kv-head cache; this affects train/prefill only.
+        groups = hq // hkv
+        k = _shard_blhd(jnp.repeat(k, groups, axis=2))
+        v = _shard_blhd(jnp.repeat(v, groups, axis=2))
+        hkv = hq
+    groups = hq // hkv
+    scale = d ** -0.5
+
+    qc = min(q_chunk, lq_orig)
+    kc = min(kv_chunk, lk_orig)
+    # pad to chunk multiples; padded KV positions are masked via kv_len,
+    # padded Q rows are sliced off the output.
+    pad_q = (-lq_orig) % qc
+    pad_k = (-lk_orig) % kc
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        if kv_len is None:
+            kv_len = lk_orig
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    lq, lk = lq_orig + pad_q, lk_orig + pad_k
+
+    from repro.distributed.sharding import shard_act
+    # [B, Hkv, G, Lq, D] / [B, Hkv, Lk, D]
+    qg = q.reshape(b, lq, hkv, groups, d).transpose(0, 2, 3, 1, 4)
+    qg = shard_act(qg, "act_batch", "act_heads", None, "act_seq", None)
+    kt = shard_act(k.transpose(0, 2, 1, 3),
+                   "act_batch", "act_heads", "act_seq", None)
+    vt = shard_act(v.transpose(0, 2, 1, 3),
+                   "act_batch", "act_heads", "act_seq", None)
+
+    nq, nk = lq // qc, lk // kc
+    qg = qg.reshape(b, hkv, groups, nq, qc, d)
+
+    if causal and causal_packing and lq == lk and nq == nk \
+            and kv_len is None and not kahan_acc:
+        packed = jax.checkpoint(
+            functools.partial(_flash_causal_packed, qc=qc, kc=kc, scale=scale),
+            policy=jax.checkpoint_policies.nothing_saveable)
+        out = packed(qg, kt, vt)
+        out = out.reshape(b, hq, lq, dv).transpose(0, 2, 1, 3).astype(v.dtype)
+        return out[:, :lq_orig] if pad_q else out
+
+    @functools.partial(jax.checkpoint,
+                       policy=jax.checkpoint_policies.nothing_saveable)
+    def per_q_chunk(qi):
+        # checkpointed: the kv scan's backward would otherwise stash the
+        # [nk, B, H, qc, kc] probability blocks (flash attention's memory
+        # win gone, ~1 GB/layer at 4k); recompute them instead.
+        q_blk = qg[:, :, :, qi]                       # [B,Hkv,G,qc,D]
+        q_pos = qi * qc + jnp.arange(qc)
+
+        def kv_step(carry, ki):
+            m, l, acc, acc_c = carry
+            k_blk = jax.lax.dynamic_slice_in_dim(kt, ki * kc, kc, axis=2)
+            v_blk = jax.lax.dynamic_slice_in_dim(vt, ki * kc, kc, axis=2)
+            s = jnp.einsum("bhgqd,bhkd->bhgqk", q_blk, k_blk,
+                           preferred_element_type=jnp.float32) * scale
+            k_pos = ki * kc + jnp.arange(kc)
+            mask = jnp.ones((qc, kc), dtype=bool)
+            if causal:
+                mask &= q_pos[:, None] >= k_pos[None, :]
+            if kv_len is not None:
+                mask &= (k_pos[None, :] < kv_len)
+            s = jnp.where(mask, s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None]) * mask
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            pv = jnp.einsum("bhgqk,bhkd->bhgqd", p.astype(v_blk.dtype), v_blk,
+                            preferred_element_type=jnp.float32)
+            if kahan_acc:
+                acc_s, acc_cc = kahan.neumaier_step(
+                    acc * corr[..., None], acc_c * corr[..., None], pv)
+                return (m_new, l_new, acc_s, acc_cc), None
+            return (m_new, l_new, acc * corr[..., None] + pv, acc_c), None
+
+        m0 = jnp.full((b, hkv, groups, qc), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, hkv, groups, qc), jnp.float32)
+        a0 = jnp.zeros((b, hkv, groups, qc, dv), jnp.float32)
+        (m, l, acc, acc_c), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0, a0), jnp.arange(nk))
+        if kahan_acc:
+            acc = acc + acc_c
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return out                                     # [B,Hkv,G,qc,Dv]
+
+    out = jax.lax.map(per_q_chunk, jnp.arange(nq))     # [nq,B,Hkv,G,qc,Dv]
+    out = out.transpose(1, 2, 3, 0, 4, 5).reshape(b, hkv, groups, lq, dv)
+    out = out.reshape(b, hq, lq, dv).transpose(0, 2, 1, 3).astype(v.dtype)
+    return out[:, :lq_orig] if pad_q else out
+
+
+def _flash_causal_packed(qg: Array, kt: Array, vt: Array, *, qc: int,
+                         kc: int, scale: float) -> Array:
+    """Triangular-packed causal flash: one scan over the nq(nq+1)/2 valid
+    (q-block, kv-block) pairs in row-major order — the online-softmax state
+    resets at each row start and the row output is emitted at the diagonal.
+    Halves attention FLOPs and score traffic vs. the masked full grid
+    (§Perf hypothesis H1; measured in EXPERIMENTS.md)."""
+    b, hkv, groups, nq, _, d = qg.shape
+    dv = vt.shape[-1]
+
+    pairs_q = jnp.concatenate(
+        [jnp.full((i + 1,), i, jnp.int32) for i in range(nq)])
+    pairs_k = jnp.concatenate(
+        [jnp.arange(i + 1, dtype=jnp.int32) for i in range(nq)])
+
+    m0 = jnp.full((b, hkv, groups, qc), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, hkv, groups, qc), jnp.float32)
+    a0 = jnp.zeros((b, hkv, groups, qc, dv), jnp.float32)
+    outs0 = jnp.zeros((nq, b, hkv, groups, qc, dv), jnp.float32)
+
+    def step(carry, pair):
+        qi, ki = pair
+        m, l, acc, outs = carry
+        row_start = ki == 0
+        m = jnp.where(row_start, NEG_INF, m)
+        l = jnp.where(row_start, 0.0, l)
+        acc = jnp.where(row_start, 0.0, acc)
+
+        q_blk = jax.lax.dynamic_index_in_dim(qg, qi, axis=3, keepdims=False)
+        k_blk = jax.lax.dynamic_slice_in_dim(kt, ki * kc, kc, axis=2)
+        v_blk = jax.lax.dynamic_slice_in_dim(vt, ki * kc, kc, axis=2)
+        s = jnp.einsum("bhgqd,bhkd->bhgqk", q_blk, k_blk,
+                       preferred_element_type=jnp.float32) * scale
+        # only the diagonal block needs a mask
+        diag = qi == ki
+        tri = jnp.arange(qc)[:, None] >= jnp.arange(kc)[None, :]
+        mask = tri | (~diag)
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None]) * mask
+        corr = jnp.exp(m - m_new)
+        l = l * corr + p.sum(axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bhgqk,bhkd->bhgqd", p.astype(v_blk.dtype), v_blk,
+            preferred_element_type=jnp.float32)
+        finished = (acc / jnp.maximum(l, 1e-30)[..., None])
+        outs = jax.lax.cond(
+            diag,
+            lambda o: jax.lax.dynamic_update_index_in_dim(
+                o, finished, qi, axis=0),
+            lambda o: o, outs)
+        return (m_new, l, acc, outs), None
+
+    (_, _, _, outs), _ = jax.lax.scan(step, (m0, l0, a0, outs0),
+                                      (pairs_q, pairs_k))
+    # [nq,B,Hkv,G,qc,Dv] -> [B,Hkv,G,Lq,Dv]
+    out = outs.transpose(1, 2, 3, 0, 4, 5).reshape(
+        b, hkv, groups, nq * qc, dv)
+    return out
+
+
+def decode_attention(q: Array, k_cache: Array, v_cache: Array,
+                     cache_len: Array) -> Array:
+    """Single-token attention against a cache.
+
+    q: [B, 1, Hq, D]; caches: [B, S, Hkv, D]; cache_len: [B] valid lengths
+    (the new token's K/V must already be written at cache_len-1).
+    """
+    b, _, hq, d = q.shape
+    _, s_max, hkv, dv = v_cache.shape
+    groups = hq // hkv
+    scale = d ** -0.5
+    qg = q.reshape(b, hkv, groups, d)
+    s = jnp.einsum("bhgd,bshd->bhgs", qg.astype(jnp.float32),
+                   k_cache.astype(jnp.float32)) * scale
+    mask = jnp.arange(s_max)[None, :] < cache_len[:, None]     # [B,S]
+    s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, 1, hq, dv).astype(v_cache.dtype)
+
+
+def gqa_forward(p: dict, x: Array, cfg: AttnConfig, *,
+                positions: Array | None = None) -> Array:
+    """Full-sequence (train / prefill) GQA block. x: [B, L, d]."""
+    b, l, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(l)[None, :], (b, l))
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    out = flash_attention(q, k, v, causal=cfg.causal, q_chunk=cfg.q_chunk,
+                          kv_chunk=cfg.kv_chunk, kahan_acc=cfg.kahan_acc,
+                          causal_packing=cfg.causal_packing)
+    return common.dense(out.reshape(b, l, -1), p["wo"])
+
+
+def gqa_prefill(p: dict, x: Array, cfg: AttnConfig, cache_size: int
+                ) -> tuple[Array, dict]:
+    """Prefill: forward + return a KV cache padded to cache_size."""
+    b, l, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(l)[None, :], (b, l))
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    out = flash_attention(q, k, v, causal=cfg.causal, q_chunk=cfg.q_chunk,
+                          kv_chunk=cfg.kv_chunk, kahan_acc=cfg.kahan_acc,
+                          causal_packing=cfg.causal_packing)
+    pad = [(0, 0), (0, cache_size - l), (0, 0), (0, 0)]
+    cache = {"k": jnp.pad(k, pad), "v": jnp.pad(v, pad),
+             "len": jnp.full((b,), l, jnp.int32)}
+    return common.dense(out.reshape(b, l, -1), p["wo"]), cache
+
+
+def gqa_decode(p: dict, x: Array, cfg: AttnConfig, cache: dict
+               ) -> tuple[Array, dict]:
+    """One-token decode. x: [B, 1, d]; cache k/v: [B, S, Hkv, D]."""
+    b, _, _ = x.shape
+    positions = cache["len"][:, None]                 # next position
+    q, k_new, v_new = _project_qkv(p, x, cfg, positions)
+    idx = cache["len"]                                 # [B]
+    k_cache = _scatter_token(cache["k"], k_new, idx)
+    v_cache = _scatter_token(cache["v"], v_new, idx)
+    out = decode_attention(q, k_cache, v_cache, idx + 1)
+    new_cache = {"k": k_cache, "v": v_cache, "len": idx + 1}
+    return common.dense(out.reshape(b, 1, -1), p["wo"]), new_cache
+
+
+def _scatter_token(cache: Array, new: Array, idx: Array) -> Array:
+    """Write new [B,1,H,D] into cache [B,S,H,D] at per-batch position idx."""
+    b = cache.shape[0]
+    def write_one(c, n, i):
+        return jax.lax.dynamic_update_slice_in_dim(c, n, i, axis=0)
+    return jax.vmap(write_one)(cache, new, idx)
+
+
+def gqa_cache_spec(batch: int, cache_size: int, cfg: AttnConfig,
+                   dtype=jnp.bfloat16) -> dict:
+    shape = (batch, cache_size, cfg.num_kv_heads, cfg.head_dim)
+    return {"k": jax.ShapeDtypeStruct(shape, dtype),
+            "v": jax.ShapeDtypeStruct(shape, dtype),
+            "len": jax.ShapeDtypeStruct((batch,), jnp.int32)}

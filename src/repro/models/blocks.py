@@ -1,0 +1,160 @@
+"""Per-layer blocks: schema + train/prefill/decode forms per family.
+
+A block is the unit stacked by lax.scan in the LM: its schema is replicated
+with a leading "layers" axis, and its aux outputs (MoE losses) must be
+structurally identical across layers of the same stack.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import common, mla, moe, mlp, ssd
+from repro.models.common import ParamSpec
+from repro.models.config import ModelConfig
+
+Array = jax.Array
+
+
+def stack_schema(schema: dict, n: int) -> dict:
+    """Prepend a stacked 'layers' axis to every leaf of a block schema."""
+    out = {}
+    for k, v in schema.items():
+        if isinstance(v, ParamSpec):
+            out[k] = ParamSpec((n,) + v.shape, ("layers",) + v.logical_axes,
+                               init=v.init, scale=v.scale, dtype=v.dtype)
+        else:
+            out[k] = stack_schema(v, n)
+    return out
+
+
+# ------------------------------------------------------------ schemas ------
+
+def block_schema(cfg: ModelConfig) -> dict:
+    """Schema of ONE layer for the LM's main stack."""
+    if cfg.family == "ssm" or (cfg.family == "hybrid"):
+        return {
+            "norm": common.norm_schema(cfg.d_model, cfg.norm),
+            "mixer": ssd.mamba2_schema(cfg.d_model, cfg.ssm),
+        }
+    s: dict = {"ln_attn": common.norm_schema(cfg.d_model, cfg.norm),
+               "ln_mlp": common.norm_schema(cfg.d_model, cfg.norm)}
+    if cfg.mla is not None:
+        s["attn"] = mla.mla_schema(cfg.d_model, cfg.mla)
+    else:
+        s["attn"] = attn.gqa_schema(cfg.d_model, cfg.attn())
+    if cfg.moe is not None:
+        s["ffn"] = moe.moe_schema(cfg.d_model, cfg.moe)
+    else:
+        s["ffn"] = mlp.mlp_schema(cfg.d_model, cfg.d_ff, act=cfg.act)
+    return s
+
+
+def dense_block_schema(cfg: ModelConfig, d_ff: int) -> dict:
+    """A dense (non-MoE) block — DeepSeek-V2's first_k_dense layers."""
+    s = {"ln_attn": common.norm_schema(cfg.d_model, cfg.norm),
+         "ln_mlp": common.norm_schema(cfg.d_model, cfg.norm)}
+    s["attn"] = (mla.mla_schema(cfg.d_model, cfg.mla) if cfg.mla is not None
+                 else attn.gqa_schema(cfg.d_model, cfg.attn()))
+    s["ffn"] = mlp.mlp_schema(cfg.d_model, d_ff, act=cfg.act)
+    return s
+
+
+EMPTY_AUX = {"moe_load_balance": 0.0, "moe_z_loss": 0.0, "moe_drop_fraction": 0.0}
+
+
+def _zero_aux() -> dict:
+    return {k: jnp.float32(0.0) for k in EMPTY_AUX}
+
+
+# ------------------------------------------------------------ train --------
+
+def _shard_residual(h: Array, cfg: ModelConfig) -> Array:
+    """§Perf knob: sequence parallelism on the residual stream — the saved
+    per-layer h (the dominant remat live set) shards over the model axis."""
+    if not cfg.sp_residual:
+        return h
+    from repro.distributed.sharding import shard_act
+    return shard_act(h, "act_batch", "act_res_seq", None)
+
+
+def block_apply(p: dict, h: Array, cfg: ModelConfig, *, is_moe: bool | None = None,
+                dense_ffn: bool = False) -> tuple[Array, dict]:
+    """Full-sequence forward of one layer. Returns (h, aux)."""
+    h = _shard_residual(h, cfg)
+    if cfg.family == "ssm" or cfg.family == "hybrid":
+        h = h + ssd.mamba2_forward(
+            p["mixer"], common.apply_norm(h, p["norm"], cfg.norm),
+            cfg.ssm._replace(kahan_state=cfg.kahan_ssm_state))
+        return h, _zero_aux()
+
+    x = common.apply_norm(h, p["ln_attn"], cfg.norm)
+    if cfg.mla is not None:
+        h = h + mla.mla_forward(p["attn"], x, cfg.mla)
+    else:
+        h = h + attn.gqa_forward(p["attn"], x, cfg.attn())
+
+    x = common.apply_norm(h, p["ln_mlp"], cfg.norm)
+    if cfg.moe is not None and not dense_ffn:
+        y, aux = moe.moe_forward(p["ffn"], x, cfg.moe)
+        return h + y, aux
+    h = h + mlp.mlp_forward(p["ffn"], x, act=cfg.act)
+    return h, _zero_aux()
+
+
+# ------------------------------------------------------------ prefill ------
+
+def block_prefill(p: dict, h: Array, cfg: ModelConfig, cache_size: int,
+                  *, dense_ffn: bool = False) -> tuple[Array, dict]:
+    """Forward + emit a decode cache for this layer."""
+    if cfg.family in ("ssm", "hybrid"):
+        x = common.apply_norm(h, p["norm"], cfg.norm)
+        y, cache = ssd.mamba2_forward(
+            p["mixer"], x, cfg.ssm._replace(kahan_state=cfg.kahan_ssm_state),
+            return_state=True)
+        return h + y, cache
+
+    x = common.apply_norm(h, p["ln_attn"], cfg.norm)
+    if cfg.mla is not None:
+        y, cache = mla.mla_prefill(p["attn"], x, cfg.mla, cache_size)
+    else:
+        y, cache = attn.gqa_prefill(p["attn"], x, cfg.attn(), cache_size)
+    h = h + y
+    x = common.apply_norm(h, p["ln_mlp"], cfg.norm)
+    if cfg.moe is not None and not dense_ffn:
+        y, _ = moe.moe_forward(p["ffn"], x, cfg.moe)
+        return h + y, cache
+    return h + mlp.mlp_forward(p["ffn"], x, act=cfg.act), cache
+
+
+# ------------------------------------------------------------ decode -------
+
+def block_decode(p: dict, h: Array, cfg: ModelConfig, cache: dict,
+                 *, dense_ffn: bool = False) -> tuple[Array, dict]:
+    """One-token step against this layer's cache."""
+    if cfg.family in ("ssm", "hybrid"):
+        x = common.apply_norm(h, p["norm"], cfg.norm)
+        y, new_cache = ssd.mamba2_decode(p["mixer"], x, cfg.ssm, cache)
+        return h + y, new_cache
+
+    x = common.apply_norm(h, p["ln_attn"], cfg.norm)
+    if cfg.mla is not None:
+        y, new_cache = mla.mla_decode(p["attn"], x, cfg.mla, cache)
+    else:
+        y, new_cache = attn.gqa_decode(p["attn"], x, cfg.attn(), cache)
+    h = h + y
+    x = common.apply_norm(h, p["ln_mlp"], cfg.norm)
+    if cfg.moe is not None and not dense_ffn:
+        y, _ = moe.moe_forward(p["ffn"], x, cfg.moe)
+        return h + y, new_cache
+    return h + mlp.mlp_forward(p["ffn"], x, act=cfg.act), new_cache
+
+
+def block_cache_spec(cfg: ModelConfig, batch: int, cache_size: int) -> dict:
+    if cfg.family in ("ssm", "hybrid"):
+        return ssd.mamba2_cache_spec(batch, cfg.ssm)
+    if cfg.mla is not None:
+        return mla.mla_cache_spec(batch, cache_size, cfg.mla)
+    return attn.gqa_cache_spec(batch, cache_size, cfg.attn())

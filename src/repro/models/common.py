@@ -1,0 +1,177 @@
+"""Model substrate: declarative parameter schemas + shared layer primitives.
+
+No flax in this environment, so parameters are plain pytrees built from a
+declarative schema. Each leaf declares its shape, *logical* sharding axes
+(mapped to mesh axes by repro.distributed.sharding) and initializer. The
+schema supports abstract instantiation (ShapeDtypeStruct trees) so the
+multi-pod dry-run never allocates a parameter.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    """Declaration of one parameter tensor."""
+    shape: tuple[int, ...]
+    logical_axes: tuple[str | None, ...]
+    init: str = "normal"          # normal | zeros | ones | embed | small
+    scale: float = 0.02
+    dtype: Any = jnp.float32
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.logical_axes), \
+            (self.shape, self.logical_axes)
+
+
+Schema = dict  # nested dict[str, ParamSpec | Schema]
+
+
+def _init_leaf(spec: ParamSpec, key: jax.Array) -> Array:
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, spec.dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, spec.dtype)
+    fan_in = spec.shape[0] if spec.shape else 1
+    if spec.init == "fan_in":
+        scale = 1.0 / math.sqrt(max(fan_in, 1))
+        return (jax.random.normal(key, spec.shape) * scale).astype(spec.dtype)
+    return (jax.random.normal(key, spec.shape) * spec.scale).astype(spec.dtype)
+
+
+def init_params(schema: Schema, key: jax.Array) -> dict:
+    """Materialize a parameter pytree from a schema (deterministic per path)."""
+    leaves = _flatten_schema(schema)
+    keys = jax.random.split(key, max(len(leaves), 1))
+    flat = {path: _init_leaf(spec, k) for (path, spec), k in zip(leaves, keys)}
+    return _unflatten(flat)
+
+
+def abstract_params(schema: Schema) -> dict:
+    """ShapeDtypeStruct pytree — used by the dry-run (no allocation)."""
+    leaves = _flatten_schema(schema)
+    flat = {p: jax.ShapeDtypeStruct(s.shape, s.dtype) for p, s in leaves}
+    return _unflatten(flat)
+
+
+def logical_axes_tree(schema: Schema) -> dict:
+    """Pytree (same structure as params) of logical-axis tuples."""
+    leaves = _flatten_schema(schema)
+    flat = {p: s.logical_axes for p, s in leaves}
+    return _unflatten(flat)
+
+
+def _flatten_schema(schema: Schema, prefix: str = "") -> list[tuple[str, ParamSpec]]:
+    out = []
+    for k in sorted(schema):
+        v = schema[k]
+        path = f"{prefix}{k}"
+        if isinstance(v, ParamSpec):
+            out.append((path, v))
+        else:
+            out.extend(_flatten_schema(v, prefix=path + "/"))
+    return out
+
+
+def _unflatten(flat: dict) -> dict:
+    tree: dict = {}
+    for path, v in flat.items():
+        parts = path.split("/")
+        node = tree
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = v
+    return tree
+
+
+def count_params(schema: Schema) -> int:
+    return sum(math.prod(s.shape) for _, s in _flatten_schema(schema))
+
+
+# ------------------------------------------------------------ primitives ---
+
+def rms_norm(x: Array, weight: Array, *, eps: float = 1e-6) -> Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * weight.astype(jnp.float32)).astype(dtype)
+
+
+def layer_norm(x: Array, weight: Array, bias: Array, *, eps: float = 1e-5) -> Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (x * weight.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dtype)
+
+
+def apply_norm(x: Array, p: dict, kind: str) -> Array:
+    if kind == "layernorm":
+        return layer_norm(x, p["scale"], p["bias"])
+    return rms_norm(x, p["scale"])
+
+
+def norm_schema(d: int, kind: str) -> Schema:
+    if kind == "layernorm":
+        return {"scale": ParamSpec((d,), ("embed",), init="ones"),
+                "bias": ParamSpec((d,), ("embed",), init="zeros")}
+    return {"scale": ParamSpec((d,), ("embed",), init="ones")}
+
+
+# Rotary embeddings -----------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> Array:
+    exponents = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponents)          # [head_dim/2]
+
+
+def apply_rope(x: Array, positions: Array, *, theta: float = 1e4,
+               rotary_dim: int | None = None) -> Array:
+    """x: [..., L, D]; positions: broadcastable to [..., L]."""
+    d = x.shape[-1]
+    rd = rotary_dim or d
+    freqs = rope_frequencies(rd, theta)                       # [rd/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., L, rd/2]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x_rot, x_pass = x[..., :rd], x[..., rd:]
+    x1, x2 = jnp.split(x_rot.astype(jnp.float32), 2, axis=-1)
+    rotated = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return jnp.concatenate([rotated.astype(x.dtype), x_pass], axis=-1)
+
+
+def sinusoidal_positions(length: int, dim: int) -> Array:
+    """Whisper-style sinusoidal embeddings [length, dim]."""
+    log_timescale = math.log(10000.0) / (dim // 2 - 1)
+    inv = jnp.exp(-log_timescale * jnp.arange(dim // 2, dtype=jnp.float32))
+    scaled = jnp.arange(length, dtype=jnp.float32)[:, None] * inv[None, :]
+    return jnp.concatenate([jnp.sin(scaled), jnp.cos(scaled)], axis=1)
+
+
+def dense(x: Array, w: Array, b: Array | None = None,
+          compute_dtype=jnp.bfloat16) -> Array:
+    """y = x @ w (+ b), in compute dtype with f32 accumulation."""
+    y = jnp.einsum("...d,df->...f", x.astype(compute_dtype),
+                   w.astype(compute_dtype),
+                   preferred_element_type=jnp.float32)
+    if b is not None:
+        y = y + b.astype(jnp.float32)
+    return y.astype(compute_dtype)
+
+
+def gelu(x: Array) -> Array:
+    return jax.nn.gelu(x, approximate=True)
+
+
+def swiglu(gate: Array, up: Array) -> Array:
+    return jax.nn.silu(gate.astype(jnp.float32)).astype(gate.dtype) * up

@@ -1,0 +1,86 @@
+"""Unified model configuration covering all assigned architecture families."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import NamedTuple
+
+from repro.models.attention import AttnConfig
+from repro.models.mla import MLAConfig
+from repro.models.moe import MoEConfig
+from repro.models.ssd import SSMConfig
+
+
+class HybridConfig(NamedTuple):
+    """Zamba2-style: Mamba2 backbone + a weight-shared attention block
+    applied after every ``segment_len`` SSM layers, with a per-invocation
+    LoRA adapter on the shared block's QKV projections."""
+    segment_len: int = 6
+    shared_d_ff: int = 8192
+    lora_rank: int = 128
+    num_attn_heads: int = 32
+    num_kv_heads: int = 32
+
+
+class EncDecConfig(NamedTuple):
+    """Whisper-style encoder-decoder. The conv/mel frontend is a stub:
+    inputs are precomputed frame embeddings [B, enc_seq, d_model]."""
+    enc_layers: int = 4
+    enc_seq: int = 1500
+
+
+class VLMConfig(NamedTuple):
+    """LLaVA-style: patch embeddings (stub frontend) projected into the
+    token stream. anyres tiling is folded into num_patches."""
+    vision_dim: int = 1024
+    num_patches: int = 576
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                    # dense | moe | ssm | hybrid | vlm | audio
+    num_layers: int
+    d_model: int
+    vocab_size: int
+    num_heads: int = 0
+    num_kv_heads: int = 0
+    head_dim: int = 0
+    d_ff: int = 0
+    qkv_bias: bool = False
+    norm: str = "rmsnorm"
+    act: str = "swiglu"
+    rope_theta: float = 1e4
+    rotary_fraction: float = 1.0
+    tie_embeddings: bool = False
+    moe: MoEConfig | None = None
+    first_k_dense: int = 0         # DeepSeek-V2: leading dense layers
+    dense_d_ff: int = 0            # ... their FFN width
+    mla: MLAConfig | None = None
+    ssm: SSMConfig | None = None
+    hybrid: HybridConfig | None = None
+    encdec: EncDecConfig | None = None
+    vlm: VLMConfig | None = None
+    q_chunk: int = 512
+    kv_chunk: int = 512
+    remat: bool = True
+    remat_policy: str = "nothing"  # nothing | dots  (§Perf knob)
+    kahan_attn: bool = False       # compensated online-softmax accumulator
+    kahan_ssm_state: bool = False  # compensated SSD state carry
+    # §Perf knobs (see EXPERIMENTS.md §Perf):
+    causal_packing: bool = False   # triangular-packed causal attention
+    sp_residual: bool = False      # sequence-shard the residual stream (SP)
+    # sub-quadratic attention available? (gates the long_500k cell)
+    subquadratic: bool = False
+
+    def attn(self, *, causal: bool = True) -> AttnConfig:
+        return AttnConfig(
+            num_heads=self.num_heads, num_kv_heads=self.num_kv_heads,
+            head_dim=self.head_dim, qkv_bias=self.qkv_bias,
+            rope_theta=self.rope_theta, rotary_fraction=self.rotary_fraction,
+            q_chunk=self.q_chunk, kv_chunk=self.kv_chunk,
+            kahan_acc=self.kahan_attn, causal=causal,
+            causal_packing=self.causal_packing)
+
+    def with_(self, **kw) -> "ModelConfig":
+        return replace(self, **kw)

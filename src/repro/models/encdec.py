@@ -1,0 +1,214 @@
+"""Whisper-style encoder-decoder (audio family).
+
+The conv/mel frontend is a stub per the assignment: ``input_specs`` provides
+precomputed frame embeddings [B, enc_seq, d_model]. The transformer backbone
+is faithful: sinusoidal encoder positions, learned decoder positions,
+pre-norm blocks, GELU MLPs, causal decoder self-attention + cross-attention
+into the encoder memory. Decode caches decoder self-KV plus the cross-K/V
+computed once at prefill.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import blocks, common, mlp
+from repro.models.common import ParamSpec
+from repro.models.config import ModelConfig
+
+Array = jax.Array
+
+
+def _acfg(cfg: ModelConfig, *, causal: bool) -> attn.AttnConfig:
+    return attn.AttnConfig(
+        num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
+        head_dim=cfg.head_dim, rotary_fraction=0.0,   # whisper: no rope
+        q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk,
+        kahan_acc=cfg.kahan_attn, causal=causal)
+
+
+def _cross_schema(cfg: ModelConfig) -> dict:
+    return attn.gqa_schema(cfg.d_model, _acfg(cfg, causal=False))
+
+
+def encdec_schema(cfg: ModelConfig, max_dec_positions: int) -> dict:
+    enc_block = {
+        "ln_attn": common.norm_schema(cfg.d_model, cfg.norm),
+        "attn": attn.gqa_schema(cfg.d_model, _acfg(cfg, causal=False)),
+        "ln_mlp": common.norm_schema(cfg.d_model, cfg.norm),
+        "ffn": mlp.mlp_schema(cfg.d_model, cfg.d_ff, act="gelu"),
+    }
+    dec_block = {
+        "ln_self": common.norm_schema(cfg.d_model, cfg.norm),
+        "self_attn": attn.gqa_schema(cfg.d_model, _acfg(cfg, causal=True)),
+        "ln_cross": common.norm_schema(cfg.d_model, cfg.norm),
+        "cross_attn": _cross_schema(cfg),
+        "ln_mlp": common.norm_schema(cfg.d_model, cfg.norm),
+        "ffn": mlp.mlp_schema(cfg.d_model, cfg.d_ff, act="gelu"),
+    }
+    return {
+        "enc_layers": blocks.stack_schema(enc_block, cfg.encdec.enc_layers),
+        "enc_norm": common.norm_schema(cfg.d_model, cfg.norm),
+        "embed": ParamSpec((cfg.vocab_size, cfg.d_model), ("vocab", "embed")),
+        "pos_embed": ParamSpec((max_dec_positions, cfg.d_model),
+                               (None, "embed")),
+        "dec_layers": blocks.stack_schema(dec_block, cfg.num_layers),
+        "dec_norm": common.norm_schema(cfg.d_model, cfg.norm),
+    }
+
+
+def _cross_attention(p: dict, x: Array, memory_kv: tuple[Array, Array],
+                     cfg: ModelConfig) -> Array:
+    """x: [B, Lq, d]; memory_kv: precomputed (k, v) [B, Lm, H, D]."""
+    b, lq, _ = x.shape
+    acfg = _acfg(cfg, causal=False)
+    q = common.dense(x, p["wq"]).reshape(b, lq, acfg.num_heads, acfg.head_dim)
+    k, v = memory_kv
+    out = attn.flash_attention(q, k, v, causal=False, q_chunk=acfg.q_chunk,
+                               kv_chunk=acfg.kv_chunk)
+    return common.dense(out.reshape(b, lq, -1), p["wo"])
+
+
+def _memory_kv(p: dict, memory: Array, cfg: ModelConfig):
+    b, lm, _ = memory.shape
+    acfg = _acfg(cfg, causal=False)
+    k = common.dense(memory, p["wk"]).reshape(b, lm, acfg.num_kv_heads,
+                                              acfg.head_dim)
+    v = common.dense(memory, p["wv"]).reshape(b, lm, acfg.num_kv_heads,
+                                              acfg.head_dim)
+    return k, v
+
+
+def encode(params: dict, frames: Array, cfg: ModelConfig) -> Array:
+    """frames: [B, enc_seq, d_model] (stub frontend output)."""
+    h = frames.astype(jnp.bfloat16)
+    h = h + common.sinusoidal_positions(h.shape[1], cfg.d_model
+                                        ).astype(h.dtype)[None]
+    acfg = _acfg(cfg, causal=False)
+
+    def body(carry, lp):
+        x = common.apply_norm(carry, lp["ln_attn"], cfg.norm)
+        carry = carry + attn.gqa_forward(lp["attn"], x, acfg)
+        x = common.apply_norm(carry, lp["ln_mlp"], cfg.norm)
+        carry = carry + mlp.mlp_forward(lp["ffn"], x, act="gelu")
+        return carry, None
+    if cfg.remat:
+        body = jax.checkpoint(body,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+    h, _ = jax.lax.scan(body, h, params["enc_layers"])
+    return common.apply_norm(h, params["enc_norm"], cfg.norm)
+
+
+def encdec_forward(params: dict, batch: dict, cfg: ModelConfig
+                   ) -> tuple[Array, dict]:
+    """Teacher-forced seq2seq forward: logits [B, Ldec, V]."""
+    memory = encode(params, batch["frames"], cfg)
+    tokens = batch["tokens"]
+    b, l = tokens.shape
+    h = jnp.take(params["embed"], tokens, axis=0).astype(jnp.bfloat16)
+    h = h + params["pos_embed"][:l].astype(h.dtype)[None]
+    acfg = _acfg(cfg, causal=True)
+
+    def body(carry, lp):
+        x = common.apply_norm(carry, lp["ln_self"], cfg.norm)
+        carry = carry + attn.gqa_forward(lp["self_attn"], x, acfg)
+        x = common.apply_norm(carry, lp["ln_cross"], cfg.norm)
+        mkv = _memory_kv(lp["cross_attn"], memory, cfg)
+        carry = carry + _cross_attention(lp["cross_attn"], x, mkv, cfg)
+        x = common.apply_norm(carry, lp["ln_mlp"], cfg.norm)
+        carry = carry + mlp.mlp_forward(lp["ffn"], x, act="gelu")
+        return carry, None
+    if cfg.remat:
+        body = jax.checkpoint(body,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+    h, _ = jax.lax.scan(body, h, params["dec_layers"])
+    h = common.apply_norm(h, params["dec_norm"], cfg.norm)
+    logits = common.dense(h, params["embed"].T)      # tied head (whisper)
+    return logits, {}
+
+
+def encdec_loss(params: dict, batch: dict, cfg: ModelConfig):
+    logits, _ = encdec_forward(params, batch, cfg)
+    lg = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lg, axis=-1)
+    ll = jnp.take_along_axis(lg, batch["labels"][..., None], axis=-1)[..., 0]
+    ce = (lse - ll) * batch["weights"]
+    loss = ce.sum() / jnp.maximum(batch["weights"].sum(), 1.0)
+    return loss, {"ce_loss": loss, "tokens": batch["weights"].sum()}
+
+
+# ------------------------------------------------------------ serving ------
+
+def encdec_prefill(params: dict, batch: dict, cfg: ModelConfig,
+                   cache_size: int):
+    """Encode + teacher-forced prefill of decoder self-KV and cross-KV."""
+    memory = encode(params, batch["frames"], cfg)
+    tokens = batch["tokens"]
+    b, l = tokens.shape
+    h = jnp.take(params["embed"], tokens, axis=0).astype(jnp.bfloat16)
+    h = h + params["pos_embed"][:l].astype(h.dtype)[None]
+    acfg = _acfg(cfg, causal=True)
+
+    def body(carry, lp):
+        x = common.apply_norm(carry, lp["ln_self"], cfg.norm)
+        y, self_kv = attn.gqa_prefill(lp["self_attn"], x, acfg, cache_size)
+        carry = carry + y
+        x = common.apply_norm(carry, lp["ln_cross"], cfg.norm)
+        mkv = _memory_kv(lp["cross_attn"], memory, cfg)
+        carry = carry + _cross_attention(lp["cross_attn"], x, mkv, cfg)
+        x = common.apply_norm(carry, lp["ln_mlp"], cfg.norm)
+        carry = carry + mlp.mlp_forward(lp["ffn"], x, act="gelu")
+        return carry, {"self": self_kv, "cross_k": mkv[0], "cross_v": mkv[1]}
+    h, caches = jax.lax.scan(body, h, params["dec_layers"])
+    h = common.apply_norm(h, params["dec_norm"], cfg.norm)
+    logits = common.dense(h[:, -1], params["embed"].T)
+    return logits, caches
+
+
+def encdec_decode(params: dict, tokens: Array, caches: dict,
+                  cfg: ModelConfig):
+    """One decoder token. tokens: [B, 1]."""
+    b = tokens.shape[0]
+    pos = caches["self"]["len"][0]                    # [B] current lengths
+    h = jnp.take(params["embed"], tokens, axis=0).astype(jnp.bfloat16)
+    # learned positions indexed per batch at current length
+    pe = jnp.take(params["pos_embed"], pos[:, None] if pos.ndim else pos,
+                  axis=0)
+    h = h + pe.reshape(b, 1, -1).astype(h.dtype)
+    acfg = _acfg(cfg, causal=True)
+
+    def body(carry, xs):
+        lp, lc = xs
+        x = common.apply_norm(carry, lp["ln_self"], cfg.norm)
+        y, new_self = attn.gqa_decode(lp["self_attn"], x, acfg, lc["self"])
+        carry = carry + y
+        x = common.apply_norm(carry, lp["ln_cross"], cfg.norm)
+        q = common.dense(x, lp["cross_attn"]["wq"]).reshape(
+            b, 1, acfg.num_heads, acfg.head_dim)
+        lm = lc["cross_k"].shape[1]
+        ctx = attn.decode_attention(q, lc["cross_k"], lc["cross_v"],
+                                    jnp.full((b,), lm, jnp.int32))
+        carry = carry + common.dense(ctx.reshape(b, 1, -1),
+                                     lp["cross_attn"]["wo"])
+        x = common.apply_norm(carry, lp["ln_mlp"], cfg.norm)
+        carry = carry + mlp.mlp_forward(lp["ffn"], x, act="gelu")
+        return carry, {"self": new_self, "cross_k": lc["cross_k"],
+                       "cross_v": lc["cross_v"]}
+    h, new_caches = jax.lax.scan(body, h, (params["dec_layers"], caches))
+    h = common.apply_norm(h, params["dec_norm"], cfg.norm)
+    logits = common.dense(h[:, -1], params["embed"].T)
+    return logits, new_caches
+
+
+def encdec_cache_specs(cfg: ModelConfig, batch: int, cache_size: int):
+    acfg = _acfg(cfg, causal=True)
+    self_spec = attn.gqa_cache_spec(batch, cache_size, acfg)
+    lm = cfg.encdec.enc_seq
+    cross = jax.ShapeDtypeStruct(
+        (batch, lm, acfg.num_kv_heads, acfg.head_dim), jnp.bfloat16)
+    per_layer = {"self": self_spec, "cross_k": cross, "cross_v": cross}
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((cfg.num_layers,) + s.shape, s.dtype),
+        per_layer)

@@ -1,0 +1,247 @@
+"""Zamba2-style hybrid: Mamba2 backbone + weight-shared attention block.
+
+The backbone is 6 scanned segments of SSM layers plus a tail; after each
+segment the SAME attention+MLP block (one set of weights) is applied, with a
+per-invocation LoRA adapter on the QKV projections (composed into the weight
+— a rank-r update — so the attention math reuses the standard GQA path).
+Decode carries: per-SSM-layer (state, conv) caches + per-invocation KV
+caches for the shared block.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import blocks, common, mlp, ssd
+from repro.models.common import ParamSpec
+from repro.models.config import ModelConfig
+
+Array = jax.Array
+
+
+def _segments(cfg: ModelConfig) -> tuple[int, int, int]:
+    seg = cfg.hybrid.segment_len
+    n_seg = cfg.num_layers // seg
+    tail = cfg.num_layers - n_seg * seg
+    return seg, n_seg, tail
+
+
+def _shared_attn_cfg(cfg: ModelConfig):
+    hy = cfg.hybrid
+    return attn.AttnConfig(
+        num_heads=hy.num_attn_heads, num_kv_heads=hy.num_kv_heads,
+        head_dim=cfg.d_model // hy.num_attn_heads,
+        rope_theta=cfg.rope_theta, q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk,
+        kahan_acc=cfg.kahan_attn, causal=True)
+
+
+def hybrid_schema(cfg: ModelConfig) -> dict:
+    seg, n_seg, tail = _segments(cfg)
+    hy = cfg.hybrid
+    acfg = _shared_attn_cfg(cfg)
+    qkv_out = hy.num_attn_heads * (cfg.d_model // hy.num_attn_heads)
+    kv_out = hy.num_kv_heads * (cfg.d_model // hy.num_attn_heads)
+    r = hy.lora_rank
+    mamba_block = {"norm": common.norm_schema(cfg.d_model, cfg.norm),
+                   "mixer": ssd.mamba2_schema(cfg.d_model, cfg.ssm)}
+    s: dict = {
+        "embed": ParamSpec((cfg.vocab_size, cfg.d_model), ("vocab", "embed")),
+        "final_norm": common.norm_schema(cfg.d_model, cfg.norm),
+        "lm_head": ParamSpec((cfg.d_model, cfg.vocab_size), ("embed", "vocab"),
+                             init="fan_in"),
+        "mamba_blocks": blocks.stack_schema(mamba_block, n_seg * seg),
+        "shared": {
+            "ln_attn": common.norm_schema(cfg.d_model, cfg.norm),
+            "attn": attn.gqa_schema(cfg.d_model, acfg),
+            "ln_mlp": common.norm_schema(cfg.d_model, cfg.norm),
+            "ffn": mlp.mlp_schema(cfg.d_model, hy.shared_d_ff, act=cfg.act),
+        },
+        "lora": {
+            "a_q": ParamSpec((n_seg, cfg.d_model, r), ("layers", "embed", None),
+                             init="fan_in"),
+            "b_q": ParamSpec((n_seg, r, qkv_out), ("layers", None, "q_heads"),
+                             init="zeros"),
+            "a_k": ParamSpec((n_seg, cfg.d_model, r), ("layers", "embed", None),
+                             init="fan_in"),
+            "b_k": ParamSpec((n_seg, r, kv_out), ("layers", None, "kv_heads"),
+                             init="zeros"),
+            "a_v": ParamSpec((n_seg, cfg.d_model, r), ("layers", "embed", None),
+                             init="fan_in"),
+            "b_v": ParamSpec((n_seg, r, kv_out), ("layers", None, "kv_heads"),
+                             init="zeros"),
+        },
+    }
+    if tail:
+        s["mamba_tail"] = blocks.stack_schema(mamba_block, tail)
+    return s
+
+
+def _lora_params(p: dict, seg_idx: int) -> dict:
+    """Shared attention params with the segment's LoRA folded in."""
+    lora = p["lora"]
+    eff = dict(p["shared"]["attn"])
+    for name, a, b in (("wq", "a_q", "b_q"), ("wk", "a_k", "b_k"),
+                       ("wv", "a_v", "b_v")):
+        delta = jnp.einsum("dr,ro->do", lora[a][seg_idx].astype(jnp.float32),
+                           lora[b][seg_idx].astype(jnp.float32))
+        eff[name] = (p["shared"]["attn"][name].astype(jnp.float32)
+                     + delta).astype(p["shared"]["attn"][name].dtype)
+    return eff
+
+
+def _shared_block(p: dict, h: Array, cfg: ModelConfig, seg_idx: int) -> Array:
+    acfg = _shared_attn_cfg(cfg)
+    eff = _lora_params(p, seg_idx)
+    x = common.apply_norm(h, p["shared"]["ln_attn"], cfg.norm)
+    h = h + attn.gqa_forward(eff, x, acfg)
+    x = common.apply_norm(h, p["shared"]["ln_mlp"], cfg.norm)
+    return h + mlp.mlp_forward(p["shared"]["ffn"], x, act=cfg.act)
+
+
+def _mamba_stack(stacked, h: Array, cfg: ModelConfig, *, remat: bool) -> Array:
+    def body(carry, lp):
+        x = common.apply_norm(carry, lp["norm"], cfg.norm)
+        y = ssd.mamba2_forward(
+            lp["mixer"], x, cfg.ssm._replace(kahan_state=cfg.kahan_ssm_state))
+        return carry + y, None
+    if remat:
+        body = jax.checkpoint(body,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+    h, _ = jax.lax.scan(body, h, stacked)
+    return h
+
+
+def _reshape_segments(tree, n_seg: int, seg: int):
+    return jax.tree.map(lambda x: x.reshape((n_seg, seg) + x.shape[1:]), tree)
+
+
+def hybrid_forward(params: dict, batch: dict, cfg: ModelConfig
+                   ) -> tuple[Array, dict]:
+    seg, n_seg, tail = _segments(cfg)
+    h = jnp.take(params["embed"], batch["tokens"], axis=0).astype(jnp.bfloat16)
+    seg_params = _reshape_segments(params["mamba_blocks"], n_seg, seg)
+    for s in range(n_seg):
+        layer_s = jax.tree.map(lambda x: x[s], seg_params)
+        h = _mamba_stack(layer_s, h, cfg, remat=cfg.remat)
+        h = _shared_block(params, h, cfg, s)
+    if tail:
+        h = _mamba_stack(params["mamba_tail"], h, cfg, remat=cfg.remat)
+    h = common.apply_norm(h, params["final_norm"], cfg.norm)
+    logits = common.dense(h, params["lm_head"])
+    return logits, {}
+
+
+def hybrid_loss(params: dict, batch: dict, cfg: ModelConfig):
+    logits, _ = hybrid_forward(params, batch, cfg)
+    lg = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lg, axis=-1)
+    ll = jnp.take_along_axis(lg, batch["labels"][..., None], axis=-1)[..., 0]
+    ce = (lse - ll) * batch["weights"]
+    loss = ce.sum() / jnp.maximum(batch["weights"].sum(), 1.0)
+    return loss, {"ce_loss": loss, "tokens": batch["weights"].sum()}
+
+
+# ------------------------------------------------------------ serving ------
+
+def hybrid_prefill(params: dict, batch: dict, cfg: ModelConfig,
+                   cache_size: int):
+    """Returns (last logits [B, V], caches) with caches =
+    {mamba: stacked states, attn: per-invocation KV, tail: states}."""
+    seg, n_seg, tail = _segments(cfg)
+    h = jnp.take(params["embed"], batch["tokens"], axis=0).astype(jnp.bfloat16)
+    seg_params = _reshape_segments(params["mamba_blocks"], n_seg, seg)
+    acfg = _shared_attn_cfg(cfg)
+    mamba_caches, attn_caches = [], []
+    for s in range(n_seg):
+        layer_s = jax.tree.map(lambda x: x[s], seg_params)
+
+        def body(carry, lp):
+            x = common.apply_norm(carry, lp["norm"], cfg.norm)
+            y, cache = ssd.mamba2_forward(lp["mixer"], x, cfg.ssm,
+                                          return_state=True)
+            return carry + y, cache
+        h, caches_s = jax.lax.scan(body, h, layer_s)
+        mamba_caches.append(caches_s)
+        eff = _lora_params(params, s)
+        x = common.apply_norm(h, params["shared"]["ln_attn"], cfg.norm)
+        y, kv = attn.gqa_prefill(eff, x, acfg, cache_size)
+        h = h + y
+        x = common.apply_norm(h, params["shared"]["ln_mlp"], cfg.norm)
+        h = h + mlp.mlp_forward(params["shared"]["ffn"], x, act=cfg.act)
+        attn_caches.append(kv)
+    tail_cache = None
+    if tail:
+        def body_t(carry, lp):
+            x = common.apply_norm(carry, lp["norm"], cfg.norm)
+            y, cache = ssd.mamba2_forward(lp["mixer"], x, cfg.ssm,
+                                          return_state=True)
+            return carry + y, cache
+        h, tail_cache = jax.lax.scan(body_t, h, params["mamba_tail"])
+    h = common.apply_norm(h, params["final_norm"], cfg.norm)
+    logits = common.dense(h[:, -1], params["lm_head"])
+    caches = {"mamba": _stack_pytrees(mamba_caches),
+              "attn": _stack_pytrees(attn_caches), "tail": tail_cache}
+    return logits, caches
+
+
+def hybrid_decode(params: dict, tokens: Array, caches: dict,
+                  cfg: ModelConfig):
+    seg, n_seg, tail = _segments(cfg)
+    h = jnp.take(params["embed"], tokens, axis=0).astype(jnp.bfloat16)
+    seg_params = _reshape_segments(params["mamba_blocks"], n_seg, seg)
+    acfg = _shared_attn_cfg(cfg)
+    new_mamba, new_attn = [], []
+    for s in range(n_seg):
+        layer_s = jax.tree.map(lambda x: x[s], seg_params)
+        cache_s = jax.tree.map(lambda x: x[s], caches["mamba"])
+
+        def body(carry, xs):
+            lp, lc = xs
+            x = common.apply_norm(carry, lp["norm"], cfg.norm)
+            y, nc = ssd.mamba2_decode(lp["mixer"], x, cfg.ssm, lc)
+            return carry + y, nc
+        h, nc = jax.lax.scan(body, h, (layer_s, cache_s))
+        new_mamba.append(nc)
+        eff = _lora_params(params, s)
+        kv = jax.tree.map(lambda x: x[s], caches["attn"])
+        x = common.apply_norm(h, params["shared"]["ln_attn"], cfg.norm)
+        y, kv_new = attn.gqa_decode(eff, x, acfg, kv)
+        h = h + y
+        x = common.apply_norm(h, params["shared"]["ln_mlp"], cfg.norm)
+        h = h + mlp.mlp_forward(params["shared"]["ffn"], x, act=cfg.act)
+        new_attn.append(kv_new)
+    new_tail = None
+    if tail:
+        def body_t(carry, xs):
+            lp, lc = xs
+            x = common.apply_norm(carry, lp["norm"], cfg.norm)
+            y, nc = ssd.mamba2_decode(lp["mixer"], x, cfg.ssm, lc)
+            return carry + y, nc
+        h, new_tail = jax.lax.scan(body_t, h, (params["mamba_tail"],
+                                               caches["tail"]))
+    h = common.apply_norm(h, params["final_norm"], cfg.norm)
+    logits = common.dense(h[:, -1], params["lm_head"])
+    return logits, {"mamba": _stack_pytrees(new_mamba),
+                    "attn": _stack_pytrees(new_attn), "tail": new_tail}
+
+
+def _stack_pytrees(trees: list):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def hybrid_cache_specs(cfg: ModelConfig, batch: int, cache_size: int):
+    seg, n_seg, tail = _segments(cfg)
+    acfg = _shared_attn_cfg(cfg)
+    mamba_spec = ssd.mamba2_cache_spec(batch, cfg.ssm)
+    kv_spec = attn.gqa_cache_spec(batch, cache_size, acfg)
+
+    def stack(spec_tree, *dims):
+        return jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(dims + s.shape, s.dtype), spec_tree)
+    return {
+        "mamba": stack(mamba_spec, n_seg, seg),
+        "attn": stack(kv_spec, n_seg),
+        "tail": stack(mamba_spec, tail) if tail else None,
+    }

@@ -1,0 +1,195 @@
+"""Decoder-only LM assembly: scan-over-layers, train/prefill/decode.
+
+Covers the dense, moe (incl. DeepSeek-V2 first-k-dense + MLA), ssm (Mamba2)
+and vlm (LLaVA backbone + projected patch embeddings) families. The layer
+stack is a single lax.scan over stacked parameters (small HLO, fast compile,
+remat-friendly) — mandatory at 80-layer/512-device dry-run scale.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import blocks, common
+from repro.models.blocks import (block_apply, block_cache_spec, block_decode,
+                                 block_prefill, block_schema,
+                                 dense_block_schema, stack_schema)
+from repro.models.common import ParamSpec
+from repro.models.config import ModelConfig
+
+Array = jax.Array
+
+
+# ------------------------------------------------------------ schema -------
+
+def lm_schema(cfg: ModelConfig) -> dict:
+    s: dict = {
+        "embed": ParamSpec((cfg.vocab_size, cfg.d_model), ("vocab", "embed"),
+                           init="normal"),
+        "final_norm": common.norm_schema(cfg.d_model, cfg.norm),
+    }
+    n_scan = cfg.num_layers - cfg.first_k_dense
+    if cfg.first_k_dense:
+        s["dense_layers"] = stack_schema(
+            dense_block_schema(cfg, cfg.dense_d_ff), cfg.first_k_dense)
+    s["layers"] = stack_schema(block_schema(cfg), n_scan)
+    if not cfg.tie_embeddings:
+        s["lm_head"] = ParamSpec((cfg.d_model, cfg.vocab_size),
+                                 ("embed", "vocab"), init="fan_in")
+    if cfg.vlm is not None:
+        s["vision_proj"] = {
+            "w1": ParamSpec((cfg.vlm.vision_dim, cfg.d_model),
+                            (None, "embed"), init="fan_in"),
+            "w2": ParamSpec((cfg.d_model, cfg.d_model), ("embed", "embed_out"),
+                            init="fan_in"),
+        }
+    return s
+
+
+# ------------------------------------------------------------ forward ------
+
+def _embed_inputs(params: dict, batch: dict, cfg: ModelConfig) -> Array:
+    tokens = batch["tokens"]
+    h = jnp.take(params["embed"], tokens, axis=0).astype(jnp.bfloat16)
+    if cfg.vlm is not None and "patch_embeds" in batch:
+        v = common.dense(batch["patch_embeds"].astype(jnp.bfloat16),
+                         params["vision_proj"]["w1"])
+        v = common.dense(common.gelu(v.astype(jnp.float32)).astype(v.dtype),
+                         params["vision_proj"]["w2"])
+        h = jnp.concatenate([v, h], axis=1)   # image tokens prefix the text
+    return h
+
+
+_REMAT_POLICIES = {
+    "nothing": lambda: jax.checkpoint_policies.nothing_saveable,
+    "dots": lambda: jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+}
+
+
+def _scan_stack(h: Array, stacked: Any, fn, *, remat: bool,
+                policy: str = "nothing"):
+    body = fn
+    if remat:
+        body = jax.checkpoint(fn, policy=_REMAT_POLICIES[policy]())
+
+    def step(carry, layer_params):
+        new_h, aux = body(carry, layer_params)
+        return new_h, aux
+
+    h, auxs = jax.lax.scan(step, h, stacked)
+    aux = jax.tree.map(lambda a: jnp.sum(a, axis=0), auxs)
+    return h, aux
+
+
+def lm_forward(params: dict, batch: dict, cfg: ModelConfig
+               ) -> tuple[Array, dict]:
+    """Full-sequence forward. Returns (logits [B, L, V] bf16, aux)."""
+    h = _embed_inputs(params, batch, cfg)
+    aux_total = {}
+    if cfg.first_k_dense:
+        h, _ = _scan_stack(
+            h, params["dense_layers"],
+            lambda hh, p: block_apply(p, hh, cfg, dense_ffn=True),
+            remat=cfg.remat, policy=cfg.remat_policy)
+    h, aux_total = _scan_stack(
+        h, params["layers"], lambda hh, p: block_apply(p, hh, cfg),
+        remat=cfg.remat, policy=cfg.remat_policy)
+    h = common.apply_norm(h, params["final_norm"], cfg.norm)
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = common.dense(h, head)
+    return logits, aux_total
+
+
+def lm_loss(params: dict, batch: dict, cfg: ModelConfig
+            ) -> tuple[Array, dict]:
+    """Weighted causal-LM cross entropy + MoE aux losses. Returns (loss,
+    metrics)."""
+    logits, aux = lm_forward(params, batch, cfg)
+    labels, weights = batch["labels"], batch["weights"]
+    lg = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lg, axis=-1)
+    ll = jnp.take_along_axis(lg, labels[..., None], axis=-1)[..., 0]
+    ce = (lse - ll) * weights
+    denom = jnp.maximum(weights.sum(), 1.0)
+    loss = ce.sum() / denom
+    total = loss + aux.get("moe_load_balance", 0.0) + aux.get("moe_z_loss", 0.0)
+    metrics = {"ce_loss": loss, **aux,
+               "tokens": weights.sum()}
+    return total, metrics
+
+
+# ------------------------------------------------------------ prefill ------
+
+def lm_prefill(params: dict, batch: dict, cfg: ModelConfig, cache_size: int
+               ) -> tuple[Array, Any]:
+    """Prefill the cache; returns (last-position logits [B, V], caches)."""
+    h = _embed_inputs(params, batch, cfg)
+    caches = []
+    if cfg.first_k_dense:
+        def step_d(carry, p):
+            new_h, cache = block_prefill(p, carry, cfg, cache_size,
+                                         dense_ffn=True)
+            return new_h, cache
+        h, dense_caches = jax.lax.scan(step_d, h, params["dense_layers"])
+        caches.append(dense_caches)
+
+    def step(carry, p):
+        new_h, cache = block_prefill(p, carry, cfg, cache_size)
+        return new_h, cache
+    h, main_caches = jax.lax.scan(step, h, params["layers"])
+    caches.append(main_caches)
+
+    h = common.apply_norm(h, params["final_norm"], cfg.norm)
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = common.dense(h[:, -1], head)
+    return logits, tuple(caches)
+
+
+# ------------------------------------------------------------ decode -------
+
+def lm_decode(params: dict, tokens: Array, caches: Any, cfg: ModelConfig
+              ) -> tuple[Array, Any]:
+    """One decode step. tokens: [B, 1]. Returns (logits [B, V], new caches)."""
+    h = jnp.take(params["embed"], tokens, axis=0).astype(jnp.bfloat16)
+    new_caches = []
+    idx = 0
+    if cfg.first_k_dense:
+        def step_d(carry, xs):
+            p, cache = xs
+            new_h, new_cache = block_decode(p, carry, cfg, cache,
+                                            dense_ffn=True)
+            return new_h, new_cache
+        h, nc = jax.lax.scan(step_d, h, (params["dense_layers"], caches[idx]))
+        new_caches.append(nc)
+        idx += 1
+
+    def step(carry, xs):
+        p, cache = xs
+        new_h, new_cache = block_decode(p, carry, cfg, cache)
+        return new_h, new_cache
+    h, nc = jax.lax.scan(step, h, (params["layers"], caches[idx]))
+    new_caches.append(nc)
+
+    h = common.apply_norm(h, params["final_norm"], cfg.norm)
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = common.dense(h[:, -1], head)
+    return logits, tuple(new_caches)
+
+
+# ------------------------------------------------------------ caches -------
+
+def lm_cache_specs(cfg: ModelConfig, batch: int, cache_size: int):
+    """Abstract (ShapeDtypeStruct) cache pytree matching lm_prefill output."""
+    def stack(spec_tree, n):
+        return jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((n,) + s.shape, s.dtype), spec_tree)
+    out = []
+    per_layer = block_cache_spec(cfg, batch, cache_size)
+    if cfg.first_k_dense:
+        out.append(stack(per_layer, cfg.first_k_dense))
+    out.append(stack(per_layer, cfg.num_layers - cfg.first_k_dense))
+    return tuple(out)

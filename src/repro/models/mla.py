@@ -1,0 +1,169 @@
+"""Multi-head Latent Attention (DeepSeek-V2) — training form + latent decode.
+
+Decode caches only the compressed latent (kv_lora + rope_dim per token, e.g.
+576 floats) instead of per-head K/V (128 heads × 256 = 32768): a 57×
+KV-cache reduction — the property that makes the deepseek-v2-236b decode_32k
+cell feasible. The decode path computes attention *in latent space* with the
+up-projections absorbed into the query/context (the paper-faithful MLA
+inference optimization).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+from repro.models.attention import decode_attention, flash_attention
+from repro.models.common import ParamSpec
+
+Array = jax.Array
+
+
+class MLAConfig(NamedTuple):
+    num_heads: int = 128
+    q_lora: int = 1536
+    kv_lora: int = 512
+    nope_dim: int = 128
+    rope_dim: int = 64
+    v_dim: int = 128
+    rope_theta: float = 1e4
+    q_chunk: int = 512
+    kv_chunk: int = 512
+    causal_packing: bool = False
+
+
+def mla_schema(d_model: int, cfg: MLAConfig) -> dict:
+    h = cfg.num_heads
+    qk = cfg.nope_dim + cfg.rope_dim
+    return {
+        "wq_a": ParamSpec((d_model, cfg.q_lora), ("embed", None), init="fan_in"),
+        "q_norm": ParamSpec((cfg.q_lora,), (None,), init="ones"),
+        "wq_b": ParamSpec((cfg.q_lora, h * qk), (None, "q_heads"), init="fan_in"),
+        "wkv_a": ParamSpec((d_model, cfg.kv_lora + cfg.rope_dim),
+                           ("embed", None), init="fan_in"),
+        "kv_norm": ParamSpec((cfg.kv_lora,), (None,), init="ones"),
+        "wk_b": ParamSpec((cfg.kv_lora, h * cfg.nope_dim), (None, "q_heads"),
+                          init="fan_in"),
+        "wv_b": ParamSpec((cfg.kv_lora, h * cfg.v_dim), (None, "q_heads"),
+                          init="fan_in"),
+        "wo": ParamSpec((h * cfg.v_dim, d_model), ("q_heads", "embed"),
+                        init="fan_in"),
+    }
+
+
+def _latents(p: dict, x: Array, cfg: MLAConfig, positions: Array
+             ) -> tuple[Array, Array, Array, Array]:
+    """Returns (q_nope [B,L,H,n], q_rope [B,L,H,r], c_kv [B,L,c], k_rope [B,L,r])."""
+    b, l, _ = x.shape
+    h = cfg.num_heads
+    q = common.dense(x, p["wq_a"])
+    q = common.rms_norm(q, p["q_norm"])
+    q = common.dense(q, p["wq_b"]).reshape(b, l, h, cfg.nope_dim + cfg.rope_dim)
+    q_nope, q_rope = q[..., :cfg.nope_dim], q[..., cfg.nope_dim:]
+    kv = common.dense(x, p["wkv_a"])
+    c_kv, k_rope = kv[..., :cfg.kv_lora], kv[..., cfg.kv_lora:]
+    c_kv = common.rms_norm(c_kv, p["kv_norm"])
+    # rope: per-head on q, single shared head on k
+    q_rope = common.apply_rope(q_rope.swapaxes(1, 2), positions[:, None, :],
+                               theta=cfg.rope_theta).swapaxes(1, 2)
+    k_rope = common.apply_rope(k_rope[:, None], positions[:, None, :],
+                               theta=cfg.rope_theta)[:, 0]
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def mla_forward(p: dict, x: Array, cfg: MLAConfig, *,
+                positions: Array | None = None) -> Array:
+    """Training/prefill form: materializes per-head K/V (flash-chunked)."""
+    b, l, _ = x.shape
+    h = cfg.num_heads
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(l)[None, :], (b, l))
+    q_nope, q_rope, c_kv, k_rope = _latents(p, x, cfg, positions)
+    k_nope = common.dense(c_kv, p["wk_b"]).reshape(b, l, h, cfg.nope_dim)
+    v = common.dense(c_kv, p["wv_b"]).reshape(b, l, h, cfg.v_dim)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None], (b, l, h, cfg.rope_dim))],
+        axis=-1)
+    q, k, v = (_shard(q), _shard(k), _shard(v))
+    out = flash_attention(q, k, v, causal=True, q_chunk=cfg.q_chunk,
+                          kv_chunk=cfg.kv_chunk,
+                          causal_packing=cfg.causal_packing)
+    return common.dense(out.reshape(b, l, -1), p["wo"])
+
+
+def _shard(x):
+    from repro.distributed.sharding import shard_act
+    return shard_act(x, "act_batch", "act_seq", "act_heads", None)
+
+
+def mla_prefill(p: dict, x: Array, cfg: MLAConfig, cache_size: int
+                ) -> tuple[Array, dict]:
+    b, l, _ = x.shape
+    h = cfg.num_heads
+    positions = jnp.broadcast_to(jnp.arange(l)[None, :], (b, l))
+    q_nope, q_rope, c_kv, k_rope = _latents(p, x, cfg, positions)
+    k_nope = common.dense(c_kv, p["wk_b"]).reshape(b, l, h, cfg.nope_dim)
+    v = common.dense(c_kv, p["wv_b"]).reshape(b, l, h, cfg.v_dim)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None], (b, l, h, cfg.rope_dim))],
+        axis=-1)
+    q, k, v = (_shard(q), _shard(k), _shard(v))
+    attn_out = flash_attention(q, k, v, causal=True, q_chunk=cfg.q_chunk,
+                               kv_chunk=cfg.kv_chunk,
+                               causal_packing=cfg.causal_packing)
+    out = common.dense(attn_out.reshape(b, l, -1), p["wo"])
+    pad2 = [(0, 0), (0, cache_size - l), (0, 0)]
+    cache = {"c_kv": jnp.pad(c_kv, pad2), "k_rope": jnp.pad(k_rope, pad2),
+             "len": jnp.full((b,), l, jnp.int32)}
+    return out, cache
+
+
+def mla_decode(p: dict, x: Array, cfg: MLAConfig, cache: dict
+               ) -> tuple[Array, dict]:
+    """Latent-space decode: scores and context computed against c_kv."""
+    b = x.shape[0]
+    h = cfg.num_heads
+    positions = cache["len"][:, None]
+    q_nope, q_rope, c_kv_new, k_rope_new = _latents(p, x, cfg, positions)
+
+    idx = cache["len"]
+    c_kv = _scatter2(cache["c_kv"], c_kv_new, idx)
+    k_rope = _scatter2(cache["k_rope"], k_rope_new, idx)
+
+    # absorb W_UK into the query: q_lat [B,1,H,c]
+    wk_b = p["wk_b"].reshape(cfg.kv_lora, h, cfg.nope_dim)
+    q_lat = jnp.einsum("bqhn,chn->bqhc", q_nope.astype(jnp.float32),
+                       wk_b.astype(jnp.float32))
+    scale = (cfg.nope_dim + cfg.rope_dim) ** -0.5
+    s = (jnp.einsum("bqhc,bsc->bhqs", q_lat, c_kv.astype(jnp.float32))
+         + jnp.einsum("bqhr,bsr->bhqs", q_rope.astype(jnp.float32),
+                      k_rope.astype(jnp.float32))) * scale
+    s_max = c_kv.shape[1]
+    mask = jnp.arange(s_max)[None, :] < (idx + 1)[:, None]
+    s = jnp.where(mask[:, None, None, :], s, -1e30)
+    probs = jax.nn.softmax(s, axis=-1)
+    ctx_lat = jnp.einsum("bhqs,bsc->bqhc", probs, c_kv.astype(jnp.float32))
+    wv_b = p["wv_b"].reshape(cfg.kv_lora, h, cfg.v_dim)
+    ctx = jnp.einsum("bqhc,chv->bqhv", ctx_lat, wv_b.astype(jnp.float32))
+    out = common.dense(ctx.reshape(b, 1, -1).astype(x.dtype), p["wo"])
+    return out, {"c_kv": c_kv, "k_rope": k_rope, "len": idx + 1}
+
+
+def _scatter2(cache: Array, new: Array, idx: Array) -> Array:
+    def write_one(c, n, i):
+        return jax.lax.dynamic_update_slice_in_dim(c, n, i, axis=0)
+    return jax.vmap(write_one)(cache, new, idx)
+
+
+def mla_cache_spec(batch: int, cache_size: int, cfg: MLAConfig,
+                   dtype=jnp.bfloat16) -> dict:
+    return {
+        "c_kv": jax.ShapeDtypeStruct((batch, cache_size, cfg.kv_lora), dtype),
+        "k_rope": jax.ShapeDtypeStruct((batch, cache_size, cfg.rope_dim), dtype),
+        "len": jax.ShapeDtypeStruct((batch,), jnp.int32),
+    }

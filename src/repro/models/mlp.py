@@ -1,0 +1,36 @@
+"""Dense feed-forward blocks: SwiGLU (fused gate/up) and GELU variants."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+from repro.models.common import ParamSpec
+
+Array = jax.Array
+
+
+def mlp_schema(d_model: int, d_ff: int, act: str = "swiglu") -> dict:
+    if act == "swiglu":
+        return {
+            # fused gate+up: one matmul, split on the hidden axis
+            "w_gate_up": ParamSpec((d_model, 2 * d_ff), ("embed", "mlp"),
+                                   init="fan_in"),
+            "w_down": ParamSpec((d_ff, d_model), ("mlp", "embed"), init="fan_in"),
+        }
+    return {
+        "w_up": ParamSpec((d_model, d_ff), ("embed", "mlp"), init="fan_in"),
+        "b_up": ParamSpec((d_ff,), ("mlp",), init="zeros"),
+        "w_down": ParamSpec((d_ff, d_model), ("mlp", "embed"), init="fan_in"),
+        "b_down": ParamSpec((d_model,), ("embed",), init="zeros"),
+    }
+
+
+def mlp_forward(p: dict, x: Array, act: str = "swiglu") -> Array:
+    if act == "swiglu":
+        gate_up = common.dense(x, p["w_gate_up"])
+        gate, up = jnp.split(gate_up, 2, axis=-1)
+        return common.dense(common.swiglu(gate, up), p["w_down"])
+    h = common.gelu(common.dense(x, p["w_up"], p["b_up"]).astype(jnp.float32))
+    return common.dense(h.astype(x.dtype), p["w_down"], p["b_down"])

@@ -1,0 +1,126 @@
+"""Mixture-of-Experts with capacity-based sort routing (dropless up to cf).
+
+TPU-native design goal (DESIGN.md §5): compiled FLOPs must scale with the
+ACTIVE parameter count, not the total expert count. Dense one-hot dispatch
+(GShard-style einsum) costs O(T·E·C·d) dispatch FLOPs; instead tokens are
+*sorted by expert id* and gathered into fixed-capacity per-expert buckets,
+so dispatch is gathers (bytes, not FLOPs) and expert compute is one batched
+matmul of shape [E, C, d] — with E sharded over the "model" axis (expert
+parallelism), GSPMD inserts the token all-to-all at the resharding boundary.
+
+Determinism: stable sort ⇒ earlier tokens win capacity ties (standard
+capacity-drop semantics). Router statistics accumulate in f32; the
+load-balance and z-loss terms follow Switch/ST-MoE.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+from repro.models.common import ParamSpec
+from repro.models.mlp import mlp_forward, mlp_schema
+
+Array = jax.Array
+
+
+class MoEConfig(NamedTuple):
+    num_experts: int
+    top_k: int
+    d_ff: int                    # per-expert hidden
+    num_shared: int = 0          # always-active shared experts (DeepSeek-V2)
+    capacity_factor: float = 1.25
+    act: str = "swiglu"
+    router_z_coef: float = 1e-3
+    load_balance_coef: float = 1e-2
+
+
+def moe_schema(d_model: int, cfg: MoEConfig) -> dict:
+    e, ff = cfg.num_experts, cfg.d_ff
+    s = {
+        "router": ParamSpec((d_model, e), ("embed", None), init="fan_in"),
+        "w_gate_up": ParamSpec((e, d_model, 2 * ff), ("experts", "embed", "mlp"),
+                               init="fan_in"),
+        "w_down": ParamSpec((e, ff, d_model), ("experts", "mlp", "embed"),
+                            init="fan_in"),
+    }
+    if cfg.num_shared:
+        s["shared"] = mlp_schema(d_model, cfg.num_shared * ff, act=cfg.act)
+    return s
+
+
+def capacity(tokens: int, cfg: MoEConfig) -> int:
+    c = math.ceil(tokens * cfg.top_k * cfg.capacity_factor / cfg.num_experts)
+    return max(8, -(-c // 8) * 8)  # round up to a multiple of 8
+
+
+def moe_forward(p: dict, x: Array, cfg: MoEConfig) -> tuple[Array, dict]:
+    """x: [B, L, d] -> (y [B, L, d], aux losses dict)."""
+    b, l, d = x.shape
+    t = b * l
+    e, k = cfg.num_experts, cfg.top_k
+    cap = capacity(t, cfg)
+    xf = x.reshape(t, d)
+
+    logits = common.dense(xf, p["router"]).astype(jnp.float32)   # [T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, k)                        # [T, k]
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    # ---- sort assignments by expert --------------------------------------
+    flat_e = top_e.reshape(-1)                                    # [T*k]
+    flat_gate = top_p.reshape(-1)
+    flat_tok = jnp.arange(t * k, dtype=jnp.int32) // k
+    order = jnp.argsort(flat_e, stable=True)
+    se, st, sg = flat_e[order], flat_tok[order], flat_gate[order]
+
+    counts = jnp.bincount(flat_e, length=e)                       # [E]
+    offsets = jnp.cumsum(counts) - counts
+    ranks = jnp.arange(t * k, dtype=jnp.int32) - offsets[se]
+    keep = ranks < cap
+    slot = jnp.where(keep, se * cap + ranks, e * cap)             # drop -> sentinel
+
+    # ---- gather tokens into [E, C, d] buckets -----------------------------
+    slot_to_tok = jnp.full((e * cap + 1,), t, jnp.int32).at[slot].set(st)
+    slot_to_tok = slot_to_tok[: e * cap]
+    valid = (slot_to_tok < t)
+    xe = xf[jnp.clip(slot_to_tok, 0, t - 1)] * valid[:, None].astype(xf.dtype)
+    xe = xe.reshape(e, cap, d)
+    from repro.distributed.sharding import shard_act
+    xe = shard_act(xe, "act_experts", None, None)   # EP: tokens to experts
+
+    # ---- batched expert FFN (E×C×d einsums; EP shards E) ------------------
+    gate_up = jnp.einsum("ecd,edf->ecf", xe.astype(jnp.bfloat16),
+                         p["w_gate_up"].astype(jnp.bfloat16),
+                         preferred_element_type=jnp.float32).astype(xe.dtype)
+    gate, up = jnp.split(gate_up, 2, axis=-1)
+    h = common.swiglu(gate, up)
+    ye = jnp.einsum("ecf,efd->ecd", h.astype(jnp.bfloat16),
+                    p["w_down"].astype(jnp.bfloat16),
+                    preferred_element_type=jnp.float32).astype(xe.dtype)
+
+    # ---- weighted scatter back to tokens ----------------------------------
+    yflat = ye.reshape(e * cap, d)
+    contrib = yflat[jnp.clip(slot, 0, e * cap - 1)]
+    contrib = contrib * (sg * keep).astype(contrib.dtype)[:, None]
+    y = jnp.zeros((t, d), contrib.dtype).at[st].add(contrib)
+
+    if cfg.num_shared:
+        y = y + mlp_forward(p["shared"], xf, act=cfg.act)
+
+    # ---- aux losses --------------------------------------------------------
+    me = probs.mean(axis=0)                                       # mean prob/expert
+    fe = counts.astype(jnp.float32) / (t * k)                     # routed fraction
+    load_balance = e * jnp.sum(me * fe)
+    z_loss = jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1)))
+    dropped = 1.0 - keep.astype(jnp.float32).mean()
+    aux = {
+        "moe_load_balance": cfg.load_balance_coef * load_balance,
+        "moe_z_loss": cfg.router_z_coef * z_loss,
+        "moe_drop_fraction": dropped,
+    }
+    return y.reshape(b, l, d), aux

@@ -1,0 +1,224 @@
+"""Mamba2 / SSD (state-space duality) mixer — chunked dual form + decode.
+
+The SSD algorithm (Dao & Gu 2024) splits the sequence into chunks: within a
+chunk the recurrence is evaluated in its quadratic "attention-like" dual form
+(MXU-friendly matmuls); across chunks a [B, H, N, P] state is carried by a
+sequential scan. That inter-chunk state carry is a long, decaying
+accumulation — exactly the numerical structure the paper's Kahan technique
+targets — so the carry supports compensated accumulation (``kahan_state``),
+applied with the decay scaling the carry term alongside the sum
+(DESIGN.md §4.2).
+
+Layout: x [B, L, H, P] (P = head dim), B/C [B, L, N] (ngroups = 1),
+dt [B, L, H], A [H] (negative), state [B, H, N, P].
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import kahan
+from repro.models import common
+from repro.models.common import ParamSpec
+
+Array = jax.Array
+
+
+class SSMConfig(NamedTuple):
+    d_inner: int
+    state_dim: int               # N
+    head_dim: int = 64           # P
+    conv_width: int = 4
+    chunk: int = 256
+    kahan_state: bool = False
+
+    @property
+    def num_heads(self) -> int:
+        return self.d_inner // self.head_dim
+
+    @property
+    def conv_dim(self) -> int:
+        return self.d_inner + 2 * self.state_dim
+
+
+def mamba2_schema(d_model: int, cfg: SSMConfig) -> dict:
+    di, n, h = cfg.d_inner, cfg.state_dim, cfg.num_heads
+    in_dim = 2 * di + 2 * n + h          # z, x, B, C, dt
+    return {
+        "in_proj": ParamSpec((d_model, in_dim), ("embed", "mlp"), init="fan_in"),
+        "conv_w": ParamSpec((cfg.conv_width, cfg.conv_dim), (None, "mlp"),
+                            init="fan_in"),
+        "conv_b": ParamSpec((cfg.conv_dim,), ("mlp",), init="zeros"),
+        "A_log": ParamSpec((h,), (None,), init="zeros"),     # A = -exp(A_log)
+        "D": ParamSpec((h,), (None,), init="ones"),
+        "dt_bias": ParamSpec((h,), (None,), init="zeros"),
+        "norm": ParamSpec((di,), ("mlp",), init="ones"),
+        "out_proj": ParamSpec((di, d_model), ("mlp", "embed"), init="fan_in"),
+    }
+
+
+def causal_conv1d(x: Array, w: Array, b: Array) -> Array:
+    """Depthwise causal conv. x: [B, L, C]; w: [W, C]."""
+    width = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(width):  # width is 4: unrolled taps, XLA fuses
+        out = out + xp[:, i: i + x.shape[1]].astype(jnp.float32) * w[i].astype(jnp.float32)
+    return jax.nn.silu(out + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def _ssd_chunk_scan(x: Array, dt: Array, a_log_step: Array, bmat: Array,
+                    cmat: Array, chunk: int, kahan_state: bool,
+                    initial_state: Array | None = None
+                    ) -> tuple[Array, Array]:
+    """Chunked SSD. x: [B,L,H,P]; dt,a_log_step: [B,L,H]; bmat/cmat: [B,L,N].
+
+    Returns (y [B,L,H,P], final_state [B,H,N,P]).
+    """
+    b, l_orig, h, p = x.shape
+    n = bmat.shape[-1]
+    # pad to a chunk multiple with identity steps: a=0 (decay 1), x=0 and
+    # dt=0 (no state contribution) — exact for the carried state.
+    pad = (-l_orig) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        a_log_step = jnp.pad(a_log_step, ((0, 0), (0, pad), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0)))
+    l = l_orig + pad
+    nc = l // chunk
+
+    xc = x.reshape(b, nc, chunk, h, p)
+    dtc = dt.reshape(b, nc, chunk, h)
+    ac = a_log_step.reshape(b, nc, chunk, h)
+    bc = bmat.reshape(b, nc, chunk, n)
+    cc = cmat.reshape(b, nc, chunk, n)
+
+    s0 = jnp.zeros((b, h, n, p), jnp.float32)
+    if initial_state is not None:
+        s0 = initial_state.astype(jnp.float32)
+    carry0 = (s0, jnp.zeros_like(s0)) if kahan_state else (s0,)
+
+    def chunk_step(carry, inputs):
+        x_k, dt_k, a_k, b_k, c_k = inputs        # [B,chunk,...]
+        s_prev = carry[0]
+        cum = jnp.cumsum(a_k, axis=1)            # [B,Q,H] within-chunk log decay
+        # inter-chunk: y_i += C_i · (exp(cum_i) * S_prev)
+        decay_out = jnp.exp(cum)                 # [B,Q,H]
+        y_inter = jnp.einsum("bqn,bhnp,bqh->bqhp", c_k.astype(jnp.float32),
+                             s_prev, decay_out)
+        # intra-chunk dual form. Mask BEFORE exp: for i<j the exponent is
+        # positive and overflows, and 0·inf in the masked backward is NaN.
+        seg = cum[:, :, None, :] - cum[:, None, :, :]           # [B,Q,Q,H]
+        mask = jnp.tril(jnp.ones((chunk, chunk), bool))[None, :, :, None]
+        lmat = jnp.exp(jnp.where(mask, seg, -1e30)) * mask
+        scores = jnp.einsum("bin,bjn->bij", c_k.astype(jnp.float32),
+                            b_k.astype(jnp.float32))            # [B,Q,Q]
+        att = scores[:, :, :, None] * lmat * dt_k[:, None, :, :]
+        y_intra = jnp.einsum("bijh,bjhp->bihp", att, x_k.astype(jnp.float32))
+        # state update: S = exp(Σa) S_prev + Σ_j exp(cum_last - cum_j) dt_j B_j x_j
+        total = cum[:, -1, :]                                   # [B,H]
+        decay_state = jnp.exp(total[:, None, :] - cum) * dt_k   # [B,Q,H]
+        s_local = jnp.einsum("bqn,bqhp,bqh->bhnp", b_k.astype(jnp.float32),
+                             x_k.astype(jnp.float32), decay_state)
+        chunk_decay = jnp.exp(total)[:, :, None, None]          # [B,H,1,1]
+        if kahan_state:
+            s_prev_c = carry[1]
+            s_new, c_new = kahan.neumaier_step(
+                s_prev * chunk_decay, s_prev_c * chunk_decay, s_local)
+            return (s_new, c_new), (y_inter + y_intra)
+        return (s_prev * chunk_decay + s_local,), (y_inter + y_intra)
+
+    inputs = tuple(jnp.moveaxis(t, 1, 0) for t in (xc, dtc, ac, bc, cc))
+    carry, ys = jax.lax.scan(chunk_step, carry0, inputs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, l, h, p)[:, :l_orig]
+    final_state = carry[0] + carry[1] if kahan_state else carry[0]
+    return y.astype(x.dtype), final_state
+
+
+def mamba2_forward(p: dict, hidden: Array, cfg: SSMConfig, *,
+                   return_state: bool = False):
+    """Full-sequence Mamba2 mixer. hidden: [B, L, d_model]."""
+    b, l, _ = hidden.shape
+    di, n, h = cfg.d_inner, cfg.state_dim, cfg.num_heads
+
+    zxbcdt = common.dense(hidden, p["in_proj"])
+    z, xbc, dt = jnp.split(zxbcdt, [di, di + cfg.conv_dim], axis=-1)
+    xbc = causal_conv1d(xbc, p["conv_w"], p["conv_b"])
+    x, bmat, cmat = jnp.split(xbc, [di, di + n], axis=-1)
+    x = x.reshape(b, l, h, cfg.head_dim)
+    from repro.distributed.sharding import shard_act
+    x = shard_act(x, "act_batch", "act_seq", "act_heads", None)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # [B,L,H]
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))                  # [H]
+    a_log_step = dt * a                                           # [B,L,H]
+
+    y, state = _ssd_chunk_scan(x, dt, a_log_step, bmat, cmat,
+                               min(cfg.chunk, l), cfg.kahan_state)
+    y = y + x.astype(jnp.float32).astype(y.dtype) * p["D"].astype(y.dtype)[:, None]
+    y = y.reshape(b, l, di)
+    y = common.rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                        p["norm"])
+    out = common.dense(y, p["out_proj"])
+    if return_state:
+        conv_tail = _conv_tail(hidden, p, cfg)
+        return out, {"ssm": state, "conv": conv_tail}
+    return out
+
+
+def _conv_tail(hidden: Array, p: dict, cfg: SSMConfig) -> Array:
+    """Last (conv_width-1) pre-conv xbc inputs, for the decode conv cache."""
+    di = cfg.d_inner
+    zxbcdt = common.dense(hidden[:, -(cfg.conv_width - 1):], p["in_proj"])
+    _, xbc, _ = jnp.split(zxbcdt, [di, di + cfg.conv_dim], axis=-1)
+    return xbc
+
+
+def mamba2_decode(p: dict, hidden: Array, cfg: SSMConfig, cache: dict
+                  ) -> tuple[Array, dict]:
+    """Single-token step. hidden: [B, 1, d]; cache: {ssm [B,H,N,P],
+    conv [B, W-1, conv_dim]}."""
+    b = hidden.shape[0]
+    di, n, h = cfg.d_inner, cfg.state_dim, cfg.num_heads
+
+    zxbcdt = common.dense(hidden, p["in_proj"])                   # [B,1,*]
+    z, xbc_new, dt = jnp.split(zxbcdt, [di, di + cfg.conv_dim], axis=-1)
+
+    # conv over (cached W-1 inputs ++ new input)
+    window = jnp.concatenate([cache["conv"], xbc_new], axis=1)    # [B,W,conv]
+    conv_out = jnp.einsum("bwc,wc->bc", window.astype(jnp.float32),
+                          p["conv_w"].astype(jnp.float32)) + p["conv_b"]
+    xbc = jax.nn.silu(conv_out)[:, None, :].astype(hidden.dtype)  # [B,1,conv]
+    x, bmat, cmat = jnp.split(xbc, [di, di + n], axis=-1)
+    x = x.reshape(b, h, cfg.head_dim)                             # [B,H,P]
+    bvec, cvec = bmat[:, 0], cmat[:, 0]                           # [B,N]
+
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # [B,H]
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))
+    decay = jnp.exp(dt * a)[:, :, None, None]                     # [B,H,1,1]
+    outer = jnp.einsum("bn,bhp,bh->bhnp", bvec.astype(jnp.float32),
+                       x.astype(jnp.float32), dt)
+    state = cache["ssm"].astype(jnp.float32) * decay + outer
+    y = jnp.einsum("bn,bhnp->bhp", cvec.astype(jnp.float32), state)
+    y = y + x.astype(jnp.float32) * p["D"][:, None]
+    y = y.reshape(b, 1, di).astype(hidden.dtype)
+    y = common.rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                        p["norm"])
+    out = common.dense(y, p["out_proj"])
+    new_cache = {"ssm": state.astype(cache["ssm"].dtype),
+                 "conv": window[:, 1:]}
+    return out, new_cache
+
+
+def mamba2_cache_spec(batch: int, cfg: SSMConfig, dtype=jnp.float32) -> dict:
+    return {
+        "ssm": jax.ShapeDtypeStruct(
+            (batch, cfg.num_heads, cfg.state_dim, cfg.head_dim), dtype),
+        "conv": jax.ShapeDtypeStruct(
+            (batch, cfg.conv_width - 1, cfg.conv_dim), jnp.bfloat16),
+    }

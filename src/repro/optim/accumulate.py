@@ -1,0 +1,66 @@
+"""Microbatch gradient accumulation — naive and Kahan-compensated.
+
+The framework-scale instance of the paper's kernel: accumulating G microbatch
+gradients into one accumulator is a length-G summation per parameter element.
+With bf16/f32 gradients whose per-microbatch magnitude is far below the
+accumulated magnitude, naive accumulation loses low-order bits; the
+compensated accumulator (sum, carry) preserves them. Cost: one extra f32
+stream per param — bandwidth-bound, hence "free" in the paper's sense
+(repro.ecm.tpu.KAHAN_ACC quantifies: 20/12 B/elem vs 7× flops that hide).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.kahan import KahanState
+
+PyTree = Any
+
+
+def accumulate_gradients(loss_fn: Callable, params: PyTree, batches: PyTree,
+                         *, kahan: bool = True
+                         ) -> tuple[jax.Array, PyTree, dict]:
+    """Scan over a leading microbatch dim of ``batches``; returns
+    (mean loss, mean grads, summed metrics)."""
+    n_micro = jax.tree.leaves(batches)[0].shape[0]
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def body(acc, micro):
+        (loss, metrics), grads = grad_fn(params, micro)
+        if kahan:
+            g_acc, l_acc = acc
+            return (g_acc.add(grads), l_acc.add({"loss": loss})), metrics
+        g_acc, l_acc = acc
+        g_new = jax.tree.map(lambda a, g: a + g.astype(a.dtype), g_acc, grads)
+        return (g_new, {"loss": l_acc["loss"] + loss}), metrics
+
+    zeros_g = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    if kahan:
+        acc0 = (KahanState(zeros_g, jax.tree.map(jnp.zeros_like, zeros_g)),
+                KahanState({"loss": jnp.float32(0)}, {"loss": jnp.float32(0)}))
+    else:
+        acc0 = (zeros_g, {"loss": jnp.float32(0)})
+
+    (g_acc, l_acc), metrics = jax.lax.scan(body, acc0, batches)
+    if kahan:
+        grads = g_acc.value()
+        loss = l_acc.value()["loss"] / n_micro
+    else:
+        grads = g_acc
+        loss = l_acc["loss"] / n_micro
+    grads = jax.tree.map(lambda g: g / n_micro, grads)
+    metrics = jax.tree.map(lambda m: jnp.sum(m, axis=0), metrics)
+    return loss, grads, metrics
+
+
+def split_microbatches(batch: PyTree, n_micro: int) -> PyTree:
+    """[B, ...] -> [n_micro, B/n_micro, ...] on every leaf."""
+    def split(x):
+        b = x.shape[0]
+        assert b % n_micro == 0, (b, n_micro)
+        return x.reshape((n_micro, b // n_micro) + x.shape[1:])
+    return jax.tree.map(split, batch)

@@ -1,0 +1,124 @@
+"""AdamW in pure JAX, with an optional Kahan-compensated parameter update.
+
+The compensated variant is the paper's algorithm applied at the *training
+step* scale: late in training the per-step update magnitude ``lr·u`` falls
+below eps·|param| (especially with bf16/f32-mixed params), and naive
+``p -= lr·u`` silently drops updates — the identical failure mode to the
+paper's long scalar accumulation. A per-parameter carry (Neumaier) preserves
+them at +4 bytes/param — free in bandwidth terms per the ECM/TPU analysis
+(repro.ecm.tpu.KAHAN_ACC; the optimizer update is purely HBM-bound).
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import kahan
+
+PyTree = Any
+
+
+class AdamWState(NamedTuple):
+    count: jax.Array
+    m: PyTree
+    v: PyTree
+    carry: PyTree | None        # Kahan carry per param (compensated variant)
+    master: PyTree | None = None  # f32 master copy (mixed-precision mode)
+
+
+class AdamWConfig(NamedTuple):
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    kahan: bool = False
+    # mixed precision: params live in bf16 (halving every gradient and
+    # gradient-collective byte), updates apply to an f32 master copy
+    master_weights: bool = False
+
+
+def init(params: PyTree, cfg: AdamWConfig) -> AdamWState:
+    zeros = lambda: jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32),
+                                 params)
+    return AdamWState(
+        count=jnp.zeros((), jnp.int32), m=zeros(), v=zeros(),
+        carry=zeros() if cfg.kahan else None,
+        master=(jax.tree.map(lambda p: p.astype(jnp.float32), params)
+                if cfg.master_weights else None))
+
+
+def update(grads: PyTree, state: AdamWState, params: PyTree,
+           cfg: AdamWConfig, lr_scale: jax.Array | float = 1.0
+           ) -> tuple[PyTree, AdamWState]:
+    """Returns (new_params, new_state)."""
+    count = state.count + 1
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1 - b1 ** count.astype(jnp.float32)
+    bc2 = 1 - b2 ** count.astype(jnp.float32)
+    lr = cfg.lr * lr_scale
+
+    def upd(p, g, m, v, c, w):
+        g = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * jnp.square(g)
+        mh = m / bc1
+        vh = v / bc2
+        base = w if w is not None else p      # f32 master or the param itself
+        step = (mh / (jnp.sqrt(vh) + cfg.eps)
+                + cfg.weight_decay * base.astype(jnp.float32))
+        delta = (-lr * step).astype(base.dtype)
+        if c is not None:
+            new_base, new_c = kahan.neumaier_step(base,
+                                                  c.astype(base.dtype), delta)
+            new_c = new_c.astype(jnp.float32)
+        else:
+            new_base, new_c = base + delta, None
+        new_p = new_base.astype(p.dtype)
+        return new_p, m, v, new_c, (new_base if w is not None else None)
+
+    leaves_p, treedef = jax.tree.flatten(params)
+    leaves_g = treedef.flatten_up_to(grads)
+    leaves_m = treedef.flatten_up_to(state.m)
+    leaves_v = treedef.flatten_up_to(state.v)
+    leaves_c = (treedef.flatten_up_to(state.carry) if state.carry is not None
+                else [None] * len(leaves_p))
+    leaves_w = (treedef.flatten_up_to(state.master)
+                if state.master is not None else [None] * len(leaves_p))
+    out = [upd(p, g, m, v, c, w) for p, g, m, v, c, w in
+           zip(leaves_p, leaves_g, leaves_m, leaves_v, leaves_c, leaves_w)]
+    new_params = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    new_carry = (treedef.unflatten([o[3] for o in out])
+                 if state.carry is not None else None)
+    new_master = (treedef.unflatten([o[4] for o in out])
+                  if state.master is not None else None)
+    return new_params, AdamWState(count=count, m=new_m, v=new_v,
+                                  carry=new_carry, master=new_master)
+
+
+def global_norm(tree: PyTree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads: PyTree, max_norm: float
+                        ) -> tuple[PyTree, jax.Array]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                   ).astype(g.dtype), grads), norm
+
+
+def warmup_cosine(step: jax.Array, *, warmup: int, total: int,
+                  min_ratio: float = 0.1) -> jax.Array:
+    """LR multiplier in [min_ratio, 1]."""
+    step = step.astype(jnp.float32)
+    warm = step / jnp.maximum(warmup, 1)
+    progress = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0, 1)
+    cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * progress))
+    return jnp.where(step < warmup, warm, cos)

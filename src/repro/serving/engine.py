@@ -1,0 +1,108 @@
+"""Slot-based continuous-batching decode engine.
+
+A fixed pool of B slots shares one batched KV cache; requests claim a slot,
+prefill writes their cache row, and every engine step decodes the whole
+batch (inactive slots are masked host-side). Requests join and retire
+mid-stream — the serving pattern the decode_32k cell's serve_step lowers.
+
+Prefill runs at batch 1 per request (cache row insert); decode is the
+batched serve_step. Greedy sampling (argmax) keeps results deterministic
+for the parity tests.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import api
+from repro.models.config import ModelConfig
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: list
+    max_new_tokens: int
+    eos_id: int | None = None
+    output: list = field(default_factory=list)
+    slot: int | None = None
+    done: bool = False
+
+
+class DecodeEngine:
+    def __init__(self, cfg: ModelConfig, params, *, max_slots: int = 4,
+                 cache_size: int = 256):
+        assert cfg.family in ("dense", "moe", "ssm", "vlm"), cfg.family
+        self.cfg = cfg
+        self.params = params
+        self.max_slots = max_slots
+        self.cache_size = cache_size
+        self._free = list(range(max_slots))
+        self._active: dict[int, Request] = {}
+
+        self._prefill = jax.jit(api.prefill_fn(cfg, cache_size))
+        self._decode = jax.jit(api.decode_fn(cfg))
+        self._insert = jax.jit(self._insert_impl)
+
+        # batched caches, zero-initialized
+        specs = api.cache_specs(cfg, max_slots, cache_size)
+        self.caches = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                                   specs)
+        self._next_tokens = jnp.zeros((max_slots, 1), jnp.int32)
+
+    @staticmethod
+    def _insert_impl(caches, one_cache, slot):
+        """Write a batch-1 cache into slot ``slot`` (slot dim = 1, after the
+        layer-stack dim)."""
+        def ins(full, one):
+            return jax.lax.dynamic_update_slice_in_dim(full, one, slot, axis=1)
+        return jax.tree.map(ins, caches, one_cache)
+
+    # ------------------------------------------------------------ API -----
+
+    def submit(self, req: Request) -> None:
+        assert self._free, "no free slots"
+        slot = self._free.pop()
+        req.slot = slot
+        batch = {"tokens": jnp.asarray([req.prompt], jnp.int32)}
+        logits, one_cache = self._prefill(self.params, batch)
+        first = int(jnp.argmax(logits[0]))
+        req.output.append(first)
+        self.caches = self._insert(self.caches, one_cache,
+                                   jnp.asarray(slot))
+        self._next_tokens = self._next_tokens.at[slot, 0].set(first)
+        self._active[slot] = req
+
+    def step(self) -> None:
+        """One batched decode step for all active slots."""
+        if not self._active:
+            return
+        logits, self.caches = self._decode(self.params, self._next_tokens,
+                                           self.caches)
+        tokens = np.asarray(jnp.argmax(logits, axis=-1))
+        retired = []
+        for slot, req in self._active.items():
+            tok = int(tokens[slot])
+            req.output.append(tok)
+            self._next_tokens = self._next_tokens.at[slot, 0].set(tok)
+            if (len(req.output) >= req.max_new_tokens
+                    or (req.eos_id is not None and tok == req.eos_id)):
+                req.done = True
+                retired.append(slot)
+        for slot in retired:
+            del self._active[slot]
+            self._free.append(slot)
+
+    def run_until_done(self, max_steps: int = 10_000) -> None:
+        for _ in range(max_steps):
+            if not self._active:
+                return
+            self.step()
+
+    @property
+    def num_active(self) -> int:
+        return len(self._active)

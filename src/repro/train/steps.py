@@ -1,0 +1,66 @@
+"""train_step / serve_step builders — the functions the dry-run lowers and
+the training/serving loops execute."""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import api
+from repro.models.config import ModelConfig
+from repro.optim import accumulate, adamw
+
+
+def build_train_step(cfg: ModelConfig, opt_cfg: adamw.AdamWConfig, *,
+                     clip_norm: float = 1.0,
+                     schedule: Callable | None = None,
+                     n_microbatches: int = 1,
+                     kahan_grad_acc: bool = True) -> Callable:
+    """(params, opt_state, batch, step) -> (params, opt_state, metrics)."""
+    loss_fn = api.loss_fn(cfg)
+
+    def train_step(params, opt_state, batch, step):
+        if n_microbatches > 1:
+            micro = accumulate.split_microbatches(batch, n_microbatches)
+            loss, grads, metrics = accumulate.accumulate_gradients(
+                loss_fn, params, micro, kahan=kahan_grad_acc)
+            metrics = {k: v / n_microbatches for k, v in metrics.items()}
+        else:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+        grads, gnorm = adamw.clip_by_global_norm(grads, clip_norm)
+        lr_scale = schedule(step) if schedule is not None else 1.0
+        new_params, new_state = adamw.update(grads, opt_state, params,
+                                             opt_cfg, lr_scale)
+        metrics = dict(metrics, loss=loss, grad_norm=gnorm,
+                       lr_scale=jnp.asarray(lr_scale, jnp.float32))
+        return new_params, new_state, metrics
+
+    return train_step
+
+
+def build_prefill_step(cfg: ModelConfig, cache_size: int) -> Callable:
+    """(params, batch) -> (next_tokens [B], caches)."""
+    prefill = api.prefill_fn(cfg, cache_size)
+
+    def prefill_step(params, batch):
+        logits, caches = prefill(params, batch)
+        next_tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tokens, caches
+
+    return prefill_step
+
+
+def build_serve_step(cfg: ModelConfig) -> Callable:
+    """One greedy decode step: (params, caches, tokens [B,1]) ->
+    (next_tokens [B,1], new_caches)."""
+    decode = api.decode_fn(cfg)
+
+    def serve_step(params, caches, tokens):
+        logits, new_caches = decode(params, tokens, caches)
+        next_tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tokens[:, None], new_caches
+
+    return serve_step

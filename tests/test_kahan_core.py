@@ -1,0 +1,141 @@
+"""Property tests for the compensated-summation primitives (repro.core.kahan)."""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import kahan
+from repro.kernels import ref
+
+F32_EPS = float(np.finfo(np.float32).eps)
+
+
+def _rand(n, seed, scale=1.0, mix_magnitudes=False):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal(n).astype(np.float32) * scale
+    if mix_magnitudes:
+        exps = rng.integers(-12, 12, size=n).astype(np.float32)
+        x = x * (2.0 ** exps).astype(np.float32)
+    return x
+
+
+def test_twosum_exact():
+    """s + e must equal a + b exactly (checked in float64 arithmetic)."""
+    rng = np.random.default_rng(0)
+    a = rng.standard_normal(1000).astype(np.float32) * 2.0 ** rng.integers(-20, 20, 1000)
+    b = rng.standard_normal(1000).astype(np.float32) * 2.0 ** rng.integers(-20, 20, 1000)
+    a, b = jnp.float32(a), jnp.float32(b)
+    s, e = jax.jit(kahan.twosum)(a, b)
+    lhs = np.float64(np.asarray(s)) + np.float64(np.asarray(e))
+    rhs = np.float64(np.asarray(a)) + np.float64(np.asarray(b))
+    # TwoSum is exact: fl(a+b) + e == a + b in real arithmetic whenever no
+    # overflow occurs; float64 holds the f32 sum exactly.
+    np.testing.assert_array_equal(lhs, rhs)
+
+
+def test_twosum_survives_jit():
+    """XLA must not algebraically cancel the error term."""
+    a = jnp.float32(1e8)
+    b = jnp.float32(1.0)
+    _, e = jax.jit(kahan.twosum)(a, b)
+    # 1e8 + 1 rounds: error term must be nonzero.
+    assert float(e) != 0.0
+
+
+@pytest.mark.parametrize("variant", ["kahan", "neumaier"])
+def test_kahan_sum_well_conditioned(variant):
+    x = _rand(40000, seed=1)
+    got = float(jax.jit(lambda v: kahan.kahan_sum(v, variant=variant))(jnp.asarray(x)))
+    exact = ref.exact_sum(x)
+    bound = 4 * F32_EPS * float(np.sum(np.abs(x))) + 1e-30
+    assert abs(got - exact) <= bound
+
+
+def test_kahan_sum_beats_naive_on_hard_case():
+    """The paper's motivating case: large cancellation."""
+    n = 20000
+    rng = np.random.default_rng(3)
+    big = rng.standard_normal(n // 2).astype(np.float32) * 1e6
+    x = np.concatenate([big, -big, _rand(64, 5, 1e-3)]).astype(np.float32)
+    rng.shuffle(x)
+    exact = ref.exact_sum(x)
+    naive = float(jnp.sum(jnp.asarray(x)))
+    comp = float(jax.jit(kahan.kahan_sum)(jnp.asarray(x)))
+    assert abs(comp - exact) <= abs(naive - exact) + 1e-6 * abs(exact) + 1e-20
+    # Kahan absolute error bounded by ~2 eps * sum|x| regardless of N
+    assert abs(comp - exact) <= 4 * F32_EPS * float(np.sum(np.abs(x))) + 1e-30
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(min_value=1, max_value=4096),
+       st.integers(min_value=0, max_value=2**31 - 1),
+       st.booleans())
+def test_neumaier_error_bound_property(n, seed, mix):
+    """|kahan_sum(x) - exact| <= c·eps·Σ|x| for any input distribution."""
+    x = _rand(n, seed, mix_magnitudes=mix)
+    got = float(kahan.kahan_sum(jnp.asarray(x)))
+    exact = ref.exact_sum(x)
+    abs_sum = float(np.sum(np.abs(x)))
+    bound = (4 * F32_EPS + 64 * n * F32_EPS**2) * abs_sum + 1e-30
+    assert abs(got - exact) <= bound
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(min_value=2, max_value=2048),
+       st.integers(min_value=0, max_value=2**31 - 1))
+def test_combine_matches_sequential(n, seed):
+    """Splitting a stream and merging partials must keep the error bound."""
+    x = _rand(n, seed, mix_magnitudes=True)
+    half = n // 2
+    xa, xb = jnp.asarray(x[:half]), jnp.asarray(x[half:])
+
+    def merged(xa, xb):
+        sa, ca = _scan_acc(xa)
+        sb, cb = _scan_acc(xb)
+        s, c = kahan.combine(sa, ca, sb, cb)
+        return s + c
+
+    got = float(jax.jit(merged)(xa, xb))
+    exact = ref.exact_sum(x)
+    bound = (8 * F32_EPS + 64 * n * F32_EPS**2) * float(np.sum(np.abs(x))) + 1e-30
+    assert abs(got - exact) <= bound
+
+
+def _scan_acc(x):
+    def body(carry, xi):
+        return kahan.neumaier_step(carry[0], carry[1], xi), None
+    (s, c), _ = jax.lax.scan(body, (jnp.float32(0), jnp.float32(0)), x)
+    return s, c
+
+
+def test_tree_accumulator_matches_leafwise():
+    tree = {"a": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+            "b": [jnp.float32(1.5), jnp.ones((5,), jnp.float32)]}
+    acc = kahan.KahanState.zeros_like(tree)
+    for k in range(7):
+        upd = jax.tree.map(lambda t: t * (0.1 * (k + 1)), tree)
+        acc = acc.add(upd)
+    expected = jax.tree.map(lambda t: t * float(sum(0.1 * (i + 1) for i in range(7))), tree)
+    got = acc.value()
+    for g, e in zip(jax.tree.leaves(got), jax.tree.leaves(expected)):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(e), rtol=2e-6)
+
+
+def test_kahan_state_merge():
+    tree = jnp.asarray(_rand(1000, 7, mix_magnitudes=True))
+    a = kahan.KahanState.zeros_like(tree).add(tree).add(tree * 2)
+    b = kahan.KahanState.zeros_like(tree).add(tree * 3)
+    merged = a.merge(b)
+    np.testing.assert_allclose(np.asarray(merged.value()),
+                               np.asarray(tree) * 6.0, rtol=3e-6)
+
+
+def test_kahan_sum_axis_semantics():
+    x = jnp.asarray(np.arange(24, dtype=np.float32).reshape(2, 3, 4))
+    got = kahan.kahan_sum(x, axis=1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(jnp.sum(x, axis=1)),
+                               rtol=1e-6)

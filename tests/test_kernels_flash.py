@@ -1,0 +1,65 @@
+"""Pallas flash attention vs pure-jnp oracle (interpret mode), shape/dtype
+sweep per the kernel-validation contract."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import flash_attention_pallas
+
+
+def _oracle(q, k, v, causal):
+    qf, kf, vf = (x.astype(jnp.float32) for x in (q, k, v))
+    s = jnp.einsum("bqd,bkd->bqk", qf, kf) * q.shape[-1] ** -0.5
+    if causal:
+        lq, lk = q.shape[1], k.shape[1]
+        mask = jnp.tril(jnp.ones((lq, lk), bool), k=lk - lq)
+        s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, vf)
+
+
+@pytest.mark.parametrize("lq,lk,d,qb,kb,causal", [
+    (256, 256, 64, 128, 128, True),
+    (256, 256, 64, 128, 128, False),
+    (512, 512, 128, 256, 256, True),
+    (128, 384, 64, 128, 128, False),     # cross-attention shape
+    (256, 256, 32, 64, 128, True),       # uneven blocks
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_pallas_vs_oracle(lq, lk, d, qb, kb, causal, dtype):
+    key = jax.random.key(0)
+    kq, kk, kv = jax.random.split(key, 3)
+    bh = 3
+    q = jax.random.normal(kq, (bh, lq, d), jnp.float32).astype(dtype)
+    k = jax.random.normal(kk, (bh, lk, d), jnp.float32).astype(dtype)
+    v = jax.random.normal(kv, (bh, lk, d), jnp.float32).astype(dtype)
+    got = flash_attention_pallas(q, k, v, causal=causal, q_block=qb,
+                                 kv_block=kb, interpret=True)
+    want = _oracle(q, k, v, causal)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=tol, rtol=tol)
+
+
+def test_flash_pallas_matches_model_flash():
+    """The Pallas kernel and the model-side chunked flash agree."""
+    from repro.models.attention import flash_attention
+    key = jax.random.key(1)
+    b, l, h, d = 2, 256, 2, 64
+    q = jax.random.normal(key, (b, l, h, d), jnp.float32)
+    k = jax.random.normal(jax.random.key(2), (b, l, h, d), jnp.float32)
+    v = jax.random.normal(jax.random.key(3), (b, l, h, d), jnp.float32)
+    model_out = flash_attention(q, k, v, causal=True, q_chunk=128,
+                                kv_chunk=128)
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, l, d)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * h, l, d)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * h, l, d)
+    pallas_out = flash_attention_pallas(qf, kf, vf, causal=True,
+                                        q_block=128, kv_block=128,
+                                        interpret=True)
+    pallas_out = pallas_out.reshape(b, h, l, d).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(pallas_out), np.asarray(model_out),
+                               atol=3e-5, rtol=3e-5)

@@ -1,0 +1,145 @@
+"""Per-kernel validation: Pallas (interpret=True) vs pure-jnp oracle.
+
+Sweeps shapes and dtypes per the assignment; asserts against the ref.py
+oracles and the fsum ground truth.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+F32_EPS = float(np.finfo(np.float32).eps)
+
+SHAPES = [
+    (8,),            # sub-block, forces block shrink + padding
+    (100,),          # padding required
+    (1024,),         # exactly one (8,128) tile
+    (4096,),
+    (32768,),        # one default block
+    (32768 * 3,),    # multi-block grid
+    (257, 129),      # 2-D, awkward primes
+    (16, 16, 33),    # 3-D
+]
+
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+def _inputs(shape, dtype, seed, mix=False):
+    rng = np.random.default_rng(seed)
+    n = int(np.prod(shape))
+    x = rng.standard_normal(n).astype(np.float32)
+    y = rng.standard_normal(n).astype(np.float32)
+    if mix:
+        x *= 2.0 ** rng.integers(-10, 10, n)
+    x = jnp.asarray(x.reshape(shape), dtype=dtype)
+    y = jnp.asarray(y.reshape(shape), dtype=dtype)
+    return x, y
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_kahan_dot_vs_exact(shape, dtype):
+    x, y = _inputs(shape, dtype, seed=hash((shape, str(dtype))) % 2**31)
+    got = float(ops.kahan_dot(x, y, interpret=True))
+    exact = ref.exact_dot(x, y)
+    abs_bound = float(np.sum(np.abs(np.float64(np.asarray(x, np.float32))
+                                    * np.float64(np.asarray(y, np.float32)))))
+    # compensated: error independent of N up to O(N eps^2)
+    assert abs(got - exact) <= 8 * F32_EPS * abs_bound + 1e-20
+
+
+@pytest.mark.parametrize("shape", [(4096,), (257, 129)])
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_kahan_dot_vs_scan_ref(shape, dtype):
+    """Kernel (blocked+lane-parallel) vs sequential-scan oracle: both are
+    compensated, so they must agree to a few eps even though op order differs."""
+    x, y = _inputs(shape, dtype, seed=11)
+    got = float(ops.kahan_dot(x, y, interpret=True))
+    want = float(jax.jit(ref.kahan_dot_ref)(x.reshape(-1), y.reshape(-1)))
+    scale = float(np.sum(np.abs(np.asarray(x, np.float64) * np.asarray(y, np.float64))))
+    assert abs(got - want) <= 8 * F32_EPS * scale + 1e-20
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+def test_kahan_sum_vs_exact(shape):
+    x, _ = _inputs(shape, jnp.float32, seed=5, mix=True)
+    got = float(ops.kahan_sum(x, interpret=True))
+    exact = ref.exact_sum(np.asarray(x))
+    bound = 8 * F32_EPS * float(np.sum(np.abs(np.asarray(x)))) + 1e-20
+    assert abs(got - exact) <= bound
+
+
+@pytest.mark.parametrize("shape", [(1024,), (32768,), (100,)])
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_naive_dot_matches_jnp(shape, dtype):
+    x, y = _inputs(shape, dtype, seed=3)
+    got = float(ops.naive_dot(x, y, interpret=True))
+    want = float(ref.naive_dot_ref(x.reshape(-1), y.reshape(-1)))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_kahan_beats_naive_cancellation_dot():
+    """Paper motivation, kernel level: ill-conditioned dot."""
+    n = 1 << 15
+    rng = np.random.default_rng(9)
+    a = rng.standard_normal(n // 2).astype(np.float32) * 3e5
+    x = np.concatenate([a, a]).astype(np.float32)
+    y = np.concatenate([np.ones(n // 2), -np.ones(n // 2)]).astype(np.float32)
+    # interleave so partial blocks see cancellation too
+    perm = rng.permutation(n)
+    x, y = x[perm], y[perm]
+    x = x + rng.standard_normal(n).astype(np.float32)  # non-trivial exact value
+    exact = ref.exact_dot(x, y)
+    naive = float(ops.naive_dot(jnp.asarray(x), jnp.asarray(y), interpret=True))
+    comp = float(ops.kahan_dot(jnp.asarray(x), jnp.asarray(y), interpret=True))
+    assert abs(comp - exact) <= abs(naive - exact) + 1e-30
+    assert abs(comp - exact) <= 8 * F32_EPS * float(np.sum(np.abs(x * y))) + 1e-20
+
+
+@pytest.mark.parametrize("shape", [(1024,), (100, 7), (512, 128)])
+def test_kahan_acc_matches_ref(shape):
+    rng = np.random.default_rng(17)
+    s = jnp.asarray(rng.standard_normal(shape).astype(np.float32)) * 100
+    c = jnp.asarray(rng.standard_normal(shape).astype(np.float32)) * 1e-5
+    u = jnp.asarray(rng.standard_normal(shape).astype(np.float32))
+    ns, nc = ops.kahan_accumulate(s, c, u, interpret=True)
+    rs, rc = jax.jit(ref.kahan_acc_ref)(s, c, u)
+    np.testing.assert_array_equal(np.asarray(ns), np.asarray(rs))
+    np.testing.assert_array_equal(np.asarray(nc), np.asarray(rc))
+
+
+def test_kahan_acc_long_chain_accuracy():
+    """1000 accumulations of 1e-4 onto 1e4: naive loses everything, the
+    compensated accumulator keeps full precision — the gradient-accumulation
+    failure mode the framework feature exists for."""
+    n_steps, base, inc = 1000, 1e4, 1e-4
+    s = jnp.full((256,), base, jnp.float32)
+    c = jnp.zeros((256,), jnp.float32)
+    naive = jnp.full((256,), base, jnp.float32)
+    u = jnp.full((256,), inc, jnp.float32)
+    for _ in range(n_steps):
+        s, c = ops.kahan_accumulate(s, c, u, interpret=True)
+        naive = naive + u
+    exact = base + n_steps * inc
+    comp_err = abs(float((s + c)[0]) - exact)
+    naive_err = abs(float(naive[0]) - exact)
+    assert comp_err < 1e-3
+    assert naive_err > 1e-2  # naive drops every increment (1e-4 < eps*1e4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(min_value=1, max_value=5000),
+       st.integers(min_value=0, max_value=2**31 - 1))
+def test_property_kahan_dot_error_bound(n, seed):
+    rng = np.random.default_rng(seed)
+    x = (rng.standard_normal(n) * 2.0 ** rng.integers(-8, 8, n)).astype(np.float32)
+    y = (rng.standard_normal(n) * 2.0 ** rng.integers(-8, 8, n)).astype(np.float32)
+    got = float(ops.kahan_dot(jnp.asarray(x), jnp.asarray(y), interpret=True))
+    exact = ref.exact_dot(x, y)
+    abs_terms = float(np.sum(np.abs(np.float64(x) * np.float64(y))))
+    bound = (8 * F32_EPS + 64 * n * F32_EPS**2) * abs_terms + 1e-25
+    assert abs(got - exact) <= bound

@@ -1,0 +1,210 @@
+"""Layer-level oracles: chunked-flash attention vs naive softmax attention,
+SSD chunked dual form vs the sequential state recurrence, MoE routing
+invariants, and the compensated-accumulator variants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import attention as A
+from repro.models import moe as M
+from repro.models import ssd as S
+
+
+def _naive_attention(q, k, v, causal):
+    b, lq, hq, d = q.shape
+    _, lk, hkv, dv = v.shape
+    g = hq // hkv
+    qf = q.astype(jnp.float32).reshape(b, lq, hkv, g, d)
+    kf = k.astype(jnp.float32)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qf, kf) * d ** -0.5
+    if causal:
+        mask = jnp.tril(jnp.ones((lq, lk), bool), k=lk - lq)
+        s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return o.reshape(b, lq, hq, dv)
+
+
+@pytest.mark.parametrize("lq,lk,hq,hkv,causal,qc,kc", [
+    (128, 128, 4, 4, True, 32, 32),
+    (128, 128, 8, 2, True, 32, 64),     # GQA
+    (96, 96, 4, 4, True, 32, 32),
+    (100, 100, 4, 2, True, 32, 32),     # padding path
+    (64, 160, 4, 4, False, 32, 32),     # cross attention
+])
+def test_flash_vs_naive(lq, lk, hq, hkv, causal, qc, kc):
+    key = jax.random.key(0)
+    kq, kk, kv_ = jax.random.split(key, 3)
+    d, dv, b = 16, 16, 2
+    q = jax.random.normal(kq, (b, lq, hq, d), jnp.float32)
+    k = jax.random.normal(kk, (b, lk, hkv, d), jnp.float32)
+    v = jax.random.normal(kv_, (b, lk, hkv, dv), jnp.float32)
+    got = A.flash_attention(q, k, v, causal=causal, q_chunk=qc, kv_chunk=kc)
+    want = _naive_attention(q, k, v, causal)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_flash_kahan_acc_matches():
+    """Compensated online-softmax accumulator: same math, tighter error."""
+    key = jax.random.key(1)
+    q = jax.random.normal(key, (1, 64, 4, 16), jnp.float32)
+    k = jax.random.normal(jax.random.key(2), (1, 64, 4, 16), jnp.float32)
+    v = jax.random.normal(jax.random.key(3), (1, 64, 4, 16), jnp.float32)
+    plain = A.flash_attention(q, k, v, causal=True, q_chunk=16, kv_chunk=16)
+    comp = A.flash_attention(q, k, v, causal=True, q_chunk=16, kv_chunk=16,
+                             kahan_acc=True)
+    want = _naive_attention(q, k, v, True)
+    err_plain = float(jnp.max(jnp.abs(plain - want)))
+    err_comp = float(jnp.max(jnp.abs(comp - want)))
+    assert err_comp <= err_plain + 1e-6
+    np.testing.assert_allclose(np.asarray(comp), np.asarray(want), atol=2e-5)
+
+
+def test_decode_attention_matches_full():
+    key = jax.random.key(4)
+    b, s, h, d = 2, 32, 4, 16
+    q = jax.random.normal(key, (b, 1, h, d))
+    kc = jax.random.normal(jax.random.key(5), (b, s, h, d))
+    vc = jax.random.normal(jax.random.key(6), (b, s, h, d))
+    lens = jnp.array([s, s // 2], jnp.int32)
+    got = A.decode_attention(q, kc, vc, lens)
+    for i, ln in enumerate([s, s // 2]):
+        want = _naive_attention(q[i:i + 1], kc[i:i + 1, :ln], vc[i:i + 1, :ln],
+                                causal=False)
+        np.testing.assert_allclose(np.asarray(got[i:i + 1]), np.asarray(want),
+                                   atol=3e-5, rtol=1e-4)
+
+
+# ------------------------------------------------------------ SSD ----------
+
+def _ssd_sequential(x, dt, a, bmat, cmat):
+    """Token-by-token recurrence oracle: S_t = exp(dt_t A) S_{t-1} +
+    dt_t B_t x_t ; y_t = C_t · S_t."""
+    b, l, h, p = x.shape
+    n = bmat.shape[-1]
+    s = np.zeros((b, h, n, p))
+    ys = []
+    for t in range(l):
+        decay = np.exp(dt[:, t] * a)[:, :, None, None]
+        outer = np.einsum("bn,bhp,bh->bhnp", bmat[:, t], x[:, t], dt[:, t])
+        s = s * decay + outer
+        ys.append(np.einsum("bn,bhnp->bhp", cmat[:, t], s))
+    return np.stack(ys, axis=1), s
+
+
+@pytest.mark.parametrize("l,chunk", [(64, 16), (100, 32), (16, 16)])
+def test_ssd_chunked_vs_sequential(l, chunk):
+    rng = np.random.default_rng(0)
+    b, h, p, n = 2, 3, 8, 4
+    x = rng.standard_normal((b, l, h, p)).astype(np.float32)
+    dt = np.abs(rng.standard_normal((b, l, h))).astype(np.float32) * 0.5
+    a = -np.abs(rng.standard_normal(h)).astype(np.float32)
+    bm = rng.standard_normal((b, l, n)).astype(np.float32)
+    cm = rng.standard_normal((b, l, n)).astype(np.float32)
+    y, state = S._ssd_chunk_scan(jnp.asarray(x), jnp.asarray(dt),
+                                 jnp.asarray(dt * a), jnp.asarray(bm),
+                                 jnp.asarray(cm), chunk, False)
+    y_ref, s_ref = _ssd_sequential(x, dt, a, bm, cm)
+    np.testing.assert_allclose(np.asarray(y), y_ref, atol=2e-4, rtol=2e-4)
+    np.testing.assert_allclose(np.asarray(state), s_ref, atol=2e-4, rtol=2e-4)
+
+
+def test_ssd_kahan_state_matches():
+    rng = np.random.default_rng(1)
+    b, l, h, p, n, chunk = 1, 128, 2, 4, 4, 16
+    x = rng.standard_normal((b, l, h, p)).astype(np.float32)
+    dt = np.abs(rng.standard_normal((b, l, h))).astype(np.float32)
+    a = -np.abs(rng.standard_normal(h)).astype(np.float32) * 0.01
+    bm = rng.standard_normal((b, l, n)).astype(np.float32)
+    cm = rng.standard_normal((b, l, n)).astype(np.float32)
+    _, s_plain = S._ssd_chunk_scan(jnp.asarray(x), jnp.asarray(dt),
+                                   jnp.asarray(dt * a), jnp.asarray(bm),
+                                   jnp.asarray(cm), chunk, False)
+    _, s_comp = S._ssd_chunk_scan(jnp.asarray(x), jnp.asarray(dt),
+                                  jnp.asarray(dt * a), jnp.asarray(bm),
+                                  jnp.asarray(cm), chunk, True)
+    _, s_ref = _ssd_sequential(x, dt, a, bm, cm)
+    err_comp = np.max(np.abs(np.asarray(s_comp) - s_ref))
+    assert err_comp < 5e-4
+
+
+# ------------------------------------------------------------ MoE ----------
+
+def test_moe_routing_invariants():
+    cfg = M.MoEConfig(num_experts=8, top_k=2, d_ff=16,
+                      capacity_factor=8.0)  # big cf => nothing dropped
+    d = 32
+    from repro.models import common
+    params = common.init_params(M.moe_schema(d, cfg), jax.random.key(0))
+    x = jax.random.normal(jax.random.key(1), (2, 16, d), jnp.float32)
+    y, aux = M.moe_forward(params, x, cfg)
+    assert y.shape == x.shape
+    assert float(aux["moe_drop_fraction"]) == 0.0
+    assert np.isfinite(float(aux["moe_load_balance"]))
+    # grad must flow to every active path
+    def loss(p):
+        out, _ = M.moe_forward(p, x, cfg)
+        return jnp.sum(out ** 2)
+    g = jax.grad(loss)(params)
+    assert float(jnp.sum(jnp.abs(g["router"]))) > 0
+
+
+def test_moe_matches_dense_when_one_expert():
+    """E=1, top-1 MoE must equal a plain MLP with the same weights."""
+    cfg = M.MoEConfig(num_experts=1, top_k=1, d_ff=16, capacity_factor=1.0)
+    d = 8
+    from repro.models import common, mlp
+    params = common.init_params(M.moe_schema(d, cfg), jax.random.key(0))
+    x = jax.random.normal(jax.random.key(1), (1, 8, d), jnp.float32)
+    y, _ = M.moe_forward(params, x, cfg)
+    dense_params = {"w_gate_up": params["w_gate_up"][0],
+                    "w_down": params["w_down"][0]}
+    want = mlp.mlp_forward(dense_params, x)
+    # bf16 rounding points differ between the two paths: structural check
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=0.1, rtol=6e-2)
+
+
+def test_moe_capacity_drops_deterministically():
+    cfg = M.MoEConfig(num_experts=4, top_k=1, d_ff=8, capacity_factor=0.5)
+    d = 8
+    from repro.models import common
+    params = common.init_params(M.moe_schema(d, cfg), jax.random.key(0))
+    x = jax.random.normal(jax.random.key(2), (1, 64, d), jnp.float32)
+    y1, aux1 = M.moe_forward(params, x, cfg)
+    y2, aux2 = M.moe_forward(params, x, cfg)
+    np.testing.assert_array_equal(np.asarray(y1), np.asarray(y2))
+    assert float(aux1["moe_drop_fraction"]) >= 0.0
+
+
+@pytest.mark.parametrize("lq,qc", [(128, 32), (96, 32), (256, 64)])
+def test_causal_packing_matches_full(lq, qc):
+    """Triangular-packed causal flash == masked full grid == naive oracle."""
+    key = jax.random.key(7)
+    b, h, d = 2, 4, 16
+    q = jax.random.normal(key, (b, lq, h, d), jnp.float32)
+    k = jax.random.normal(jax.random.key(8), (b, lq, h, d), jnp.float32)
+    v = jax.random.normal(jax.random.key(9), (b, lq, h, d), jnp.float32)
+    full = A.flash_attention(q, k, v, causal=True, q_chunk=qc, kv_chunk=qc)
+    packed = A.flash_attention(q, k, v, causal=True, q_chunk=qc, kv_chunk=qc,
+                               causal_packing=True)
+    want = _naive_attention(q, k, v, True)
+    np.testing.assert_allclose(np.asarray(packed), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+    np.testing.assert_allclose(np.asarray(packed), np.asarray(full),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_causal_packing_grad_finite():
+    q = jax.random.normal(jax.random.key(1), (1, 64, 2, 8), jnp.float32)
+
+    def loss(q):
+        o = A.flash_attention(q, q, q, causal=True, q_chunk=16, kv_chunk=16,
+                              causal_packing=True)
+        return jnp.sum(o ** 2)
+    g = jax.grad(loss)(q)
+    assert np.isfinite(np.asarray(g)).all()

@@ -1,0 +1,137 @@
+"""Per-architecture smoke tests: reduced config, one forward/train step on
+CPU, asserting output shapes and absence of NaNs; plus prefill+decode parity
+for the serving path (decode after prefill must match teacher-forced logits).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import REGISTRY, get_config, reduced
+from repro.data import synthetic
+from repro.models import api
+
+ARCHS = sorted(REGISTRY)
+
+SEQ = 64
+BATCH = 2
+
+
+def _reduced(name):
+    return reduced(get_config(name))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_full_config_exact_assignment(arch):
+    """The full (non-reduced) configs carry the assigned hyperparameters."""
+    cfg = get_config(arch)
+    expected = {
+        "mamba2-780m": dict(num_layers=48, d_model=1536, vocab_size=50280),
+        "stablelm-3b": dict(num_layers=32, d_model=2560, d_ff=6912,
+                            vocab_size=50304),
+        "qwen1.5-110b": dict(num_layers=80, d_model=8192, num_heads=64,
+                             num_kv_heads=8, d_ff=49152, vocab_size=152064),
+        "qwen1.5-32b": dict(num_layers=64, d_model=5120, num_heads=40,
+                            num_kv_heads=40, d_ff=27392, vocab_size=152064),
+        "qwen1.5-0.5b": dict(num_layers=24, d_model=1024, num_heads=16,
+                             d_ff=2816, vocab_size=151936),
+        "llava-next-mistral-7b": dict(num_layers=32, d_model=4096,
+                                      num_heads=32, num_kv_heads=8,
+                                      d_ff=14336, vocab_size=32000),
+        "olmoe-1b-7b": dict(num_layers=16, d_model=2048, vocab_size=50304),
+        "deepseek-v2-236b": dict(num_layers=60, d_model=5120,
+                                 vocab_size=102400),
+        "whisper-tiny": dict(num_layers=4, d_model=384, d_ff=1536,
+                             vocab_size=51865),
+        "zamba2-1.2b": dict(num_layers=38, d_model=2048, vocab_size=32000),
+    }[arch]
+    for k, v in expected.items():
+        assert getattr(cfg, k) == v, (arch, k, getattr(cfg, k), v)
+    if arch == "olmoe-1b-7b":
+        assert cfg.moe.num_experts == 64 and cfg.moe.top_k == 8
+    if arch == "deepseek-v2-236b":
+        assert cfg.moe.num_experts == 160 and cfg.moe.top_k == 6
+        assert cfg.mla.kv_lora == 512 and cfg.moe.num_shared == 2
+    if arch == "mamba2-780m":
+        assert cfg.ssm.state_dim == 128
+    if arch == "zamba2-1.2b":
+        assert cfg.ssm.state_dim == 64
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_train_step_smoke(arch):
+    """One forward+backward on the reduced config: finite loss, finite grads."""
+    cfg = _reduced(arch)
+    sch = api.schema(cfg)
+    from repro.models import common
+    params = common.init_params(sch, jax.random.key(0))
+    batch = synthetic.make_batch(cfg, SEQ, BATCH, kind="train", seed=1)
+    loss_fn = api.loss_fn(cfg)
+
+    @jax.jit
+    def step(p, b):
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(p, b)
+        gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                             for g in jax.tree.leaves(grads)))
+        return loss, metrics, gnorm
+
+    loss, metrics, gnorm = step(params, batch)
+    assert np.isfinite(float(loss)), arch
+    assert np.isfinite(float(gnorm)) and float(gnorm) > 0, arch
+    # a random-init model on a |V|=256 vocab should sit near ln(256)
+    assert 2.0 < float(metrics["ce_loss"]) < 10.0, (arch, float(loss))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_shapes(arch):
+    cfg = _reduced(arch)
+    from repro.models import common
+    params = common.init_params(api.schema(cfg), jax.random.key(0))
+    batch = synthetic.make_batch(cfg, SEQ, BATCH, kind="train", seed=2)
+    logits, _ = jax.jit(api.forward_fn(cfg))(params, batch)
+    assert logits.shape == (BATCH, SEQ, cfg.vocab_size), (arch, logits.shape)
+    assert not bool(jnp.any(jnp.isnan(logits.astype(jnp.float32))))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_decode_parity(arch):
+    """Greedy parity: logits for position L from (prefill L) vs
+    (prefill L-1 tokens, then one decode step of token L) must agree."""
+    cfg = _reduced(arch)
+    from repro.models import common
+    params = common.init_params(api.schema(cfg), jax.random.key(0))
+    cache_size = SEQ + 8
+    batch = synthetic.make_batch(cfg, SEQ, BATCH, kind="prefill", seed=3)
+
+    logits_full, _ = jax.jit(api.prefill_fn(cfg, cache_size))(params, batch)
+
+    # prefill on the first L-1 tokens, then decode the last token
+    tokens = batch["tokens"]
+    batch_short = dict(batch, tokens=tokens[:, :-1])
+    _, caches = jax.jit(api.prefill_fn(cfg, cache_size))(params, batch_short)
+    logits_step, _ = jax.jit(api.decode_fn(cfg))(params, tokens[:, -1:], caches)
+
+    np.testing.assert_allclose(
+        np.asarray(logits_step, np.float32),
+        np.asarray(logits_full, np.float32), atol=0.25, rtol=0.05)
+
+
+def test_param_counts_full_configs():
+    """Full configs land near their nominal parameter counts."""
+    from repro.models import common as C
+    expect = {
+        "qwen1.5-110b": (100e9, 120e9),
+        "qwen1.5-32b": (30e9, 36e9),
+        "qwen1.5-0.5b": (0.4e9, 0.7e9),
+        "deepseek-v2-236b": (215e9, 250e9),
+        "olmoe-1b-7b": (6.0e9, 7.5e9),
+        "llava-next-mistral-7b": (6.5e9, 8e9),
+        "mamba2-780m": (0.6e9, 0.95e9),
+        "stablelm-3b": (2.5e9, 3.4e9),
+        "whisper-tiny": (0.02e9, 0.08e9),
+        "zamba2-1.2b": (1.0e9, 1.6e9),
+    }
+    for arch, (lo, hi) in expect.items():
+        n = C.count_params(api.schema(get_config(arch)))
+        assert lo <= n <= hi, (arch, f"{n/1e9:.2f}B not in [{lo/1e9}, {hi/1e9}]")

@@ -1,0 +1,158 @@
+"""Hypothesis property tests on system invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax.sharding import PartitionSpec as P
+
+from repro.core import kahan
+from repro.distributed import sharding
+from repro.ecm import hlo_cost
+from repro.models import attention as A
+from repro.models import common
+
+
+# ------------------------------------------------------- causality ---------
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(1, 62))
+def test_causal_future_independence(seed, pos):
+    """Changing tokens after position p must not change outputs at <= p."""
+    key = jax.random.key(seed)
+    b, l, h, d = 1, 64, 2, 8
+    q = jax.random.normal(key, (b, l, h, d))
+    k = jax.random.normal(jax.random.key(seed + 1), (b, l, h, d))
+    v = jax.random.normal(jax.random.key(seed + 2), (b, l, h, d))
+    out1 = A.flash_attention(q, k, v, causal=True, q_chunk=16, kv_chunk=16)
+    k2 = k.at[:, pos:].set(jax.random.normal(jax.random.key(99),
+                                             (b, l - pos, h, d)))
+    v2 = v.at[:, pos:].set(jax.random.normal(jax.random.key(98),
+                                             (b, l - pos, h, d)))
+    out2 = A.flash_attention(q, k2, v2, causal=True, q_chunk=16, kv_chunk=16)
+    np.testing.assert_allclose(np.asarray(out1[:, :pos]),
+                               np.asarray(out2[:, :pos]), atol=1e-5)
+
+
+# ------------------------------------------------------- sharding ----------
+
+_mesh_strategy = st.sampled_from([(4, 2), (2, 2, 2), (16, 16), (2, 16, 16)])
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    _mesh_strategy,
+    st.lists(st.integers(1, 8), min_size=1, max_size=4),
+    st.lists(st.sampled_from(["embed", "vocab", "q_heads", "kv_heads",
+                              "mlp", "experts", "layers", None]),
+             min_size=1, max_size=4),
+)
+def test_spec_engine_invariants(mesh_shape, dim_factors, names):
+    """The rules engine never repeats a mesh axis in one spec and never
+    shards a non-divisible dim."""
+    if len(dim_factors) != len(names):
+        dim_factors = (dim_factors * 4)[: len(names)]
+    axes_names = {2: ("data", "model"), 3: ("pod", "data", "model")}[
+        len(mesh_shape)]
+    devs = np.arange(int(np.prod(mesh_shape)))
+    mesh = jax.sharding.Mesh(devs.reshape(mesh_shape), axes_names)
+    shape = tuple(f * 16 for f in dim_factors)
+    spec = sharding.spec_for_axes(tuple(names), mesh, shape,
+                                  sharding.DEFAULT_RULES)
+    used = []
+    for dim, entry in zip(shape, spec):
+        if entry is None:
+            continue
+        entries = entry if isinstance(entry, tuple) else (entry,)
+        for a in entries:
+            assert a not in used, (spec, names)
+            used.append(a)
+        size = int(np.prod([mesh.shape[a] for a in entries]))
+        assert dim % size == 0, (shape, spec)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 1024), _mesh_strategy)
+def test_batch_axes_always_divide(batch, mesh_shape):
+    axes_names = {2: ("data", "model"), 3: ("pod", "data", "model")}[
+        len(mesh_shape)]
+    devs = np.arange(int(np.prod(mesh_shape)))
+    mesh = jax.sharding.Mesh(devs.reshape(mesh_shape), axes_names)
+    ba = sharding.batch_axes(mesh, batch)
+    size = int(np.prod([mesh.shape[a] for a in ba])) if ba else 1
+    assert batch % size == 0
+
+
+# ------------------------------------------------------- RoPE --------------
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(0, 50))
+def test_rope_relative_position_invariance(seed, shift):
+    """q_i · k_j after RoPE depends only on (i - j)."""
+    d = 32
+    q = jax.random.normal(jax.random.key(seed), (1, 1, d))
+    k = jax.random.normal(jax.random.key(seed + 1), (1, 1, d))
+    def score(i, j):
+        qi = common.apply_rope(q, jnp.array([[i]], jnp.float32))
+        kj = common.apply_rope(k, jnp.array([[j]], jnp.float32))
+        return float(jnp.sum(qi * kj))
+    s1 = score(5, 3)
+    s2 = score(5 + shift, 3 + shift)
+    assert abs(s1 - s2) < 1e-4 * max(1.0, abs(s1))
+
+
+# ------------------------------------------------------- kahan -------------
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(1, 64))
+def test_kahan_adding_zeros_is_exact(seed, n_zeros):
+    rng = np.random.default_rng(seed)
+    x = jnp.float32(rng.standard_normal()
+                    * 10.0 ** float(rng.integers(-8, 8)))
+    s, c = x, jnp.float32(0)
+    for _ in range(n_zeros):
+        s, c = kahan.neumaier_step(s, c, jnp.float32(0))
+    assert float(s) == float(x) and float(c) == 0.0
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_kahan_merge_with_zero_identity(seed):
+    rng = np.random.default_rng(seed)
+    s = jnp.float32(rng.standard_normal())
+    c = jnp.float32(rng.standard_normal() * 1e-8)
+    ms, mc = kahan.combine(s, c, jnp.float32(0), jnp.float32(0))
+    assert float(ms + mc) == float(s + c)
+
+
+# ------------------------------------------------------- hlo parser --------
+
+@settings(max_examples=50, deadline=None)
+@given(st.sampled_from(["f32", "bf16", "s32", "pred", "f64"]),
+       st.lists(st.integers(1, 64), min_size=0, max_size=4))
+def test_shape_parser_property(dtype, dims):
+    s = f"{dtype}[{','.join(str(d) for d in dims)}]"
+    elems, nbytes = hlo_cost._shape_elems_bytes(s)
+    expect_elems = int(np.prod(dims)) if dims else 1
+    assert elems == expect_elems
+    assert nbytes == expect_elems * hlo_cost._DTYPE_BYTES[dtype]
+
+
+# ------------------------------------------------------- data --------------
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10_000))
+def test_pipeline_step_determinism(step):
+    from repro.configs import get_config, reduced
+    from repro.data.pipeline import SyntheticTokenPipeline
+    cfg = reduced(get_config("qwen1.5-0.5b"))
+    p = SyntheticTokenPipeline(cfg, 16, 2, seed=11)
+    a = p.batch_for_step(step)
+    b = p.batch_for_step(step)
+    np.testing.assert_array_equal(np.asarray(a["tokens"]),
+                                  np.asarray(b["tokens"]))
+    if step > 0:
+        c = p.batch_for_step(step - 1)
+        assert not np.array_equal(np.asarray(a["tokens"]),
+                                  np.asarray(c["tokens"]))

@@ -1,0 +1,84 @@
+"""Serving engine tests: batched continuous decoding must match
+one-request-at-a-time greedy generation exactly."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.models import api, common
+from repro.serving.engine import DecodeEngine, Request
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = reduced(get_config("qwen1.5-0.5b")).with_(num_layers=2)
+    params = common.init_params(api.schema(cfg), jax.random.key(0))
+    return cfg, params
+
+
+def _reference_generate(cfg, params, prompt, n_new):
+    prefill = jax.jit(api.prefill_fn(cfg, 64))
+    decode = jax.jit(api.decode_fn(cfg))
+    logits, caches = prefill(params, {"tokens": jnp.asarray([prompt],
+                                                            jnp.int32)})
+    out = [int(jnp.argmax(logits[0]))]
+    while len(out) < n_new:
+        logits, caches = decode(params, jnp.asarray([[out[-1]]], jnp.int32),
+                                caches)
+        out.append(int(jnp.argmax(logits[0])))
+    return out
+
+
+def test_single_request_matches_reference(setup):
+    cfg, params = setup
+    engine = DecodeEngine(cfg, params, max_slots=2, cache_size=64)
+    req = Request(rid=0, prompt=[5, 9, 11], max_new_tokens=6)
+    engine.submit(req)
+    engine.run_until_done()
+    assert req.done
+    assert req.output == _reference_generate(cfg, params, [5, 9, 11], 6)
+
+
+def test_continuous_batching_mid_stream_join(setup):
+    """A request joining mid-decode must not perturb the resident request,
+    and both must match their solo generations."""
+    cfg, params = setup
+    engine = DecodeEngine(cfg, params, max_slots=2, cache_size=64)
+    r1 = Request(rid=1, prompt=[1, 2, 3, 4], max_new_tokens=8)
+    engine.submit(r1)
+    engine.step()
+    engine.step()                      # r1 two tokens in
+    r2 = Request(rid=2, prompt=[7, 8], max_new_tokens=5)
+    engine.submit(r2)                  # joins mid-stream
+    engine.run_until_done()
+    assert r1.done and r2.done
+    assert r1.output == _reference_generate(cfg, params, [1, 2, 3, 4], 8)
+    assert r2.output == _reference_generate(cfg, params, [7, 8], 5)
+
+
+def test_slot_reuse(setup):
+    cfg, params = setup
+    engine = DecodeEngine(cfg, params, max_slots=1, cache_size=64)
+    r1 = Request(rid=1, prompt=[3, 1], max_new_tokens=3)
+    engine.submit(r1)
+    engine.run_until_done()
+    r2 = Request(rid=2, prompt=[9, 9, 9], max_new_tokens=3)
+    engine.submit(r2)                  # reuses the slot
+    engine.run_until_done()
+    assert r2.output == _reference_generate(cfg, params, [9, 9, 9], 3)
+
+
+def test_ssm_family_engine():
+    """The engine also serves SSM archs (constant-size state caches)."""
+    from repro.configs import get_config, reduced
+    cfg = reduced(get_config("mamba2-780m"))
+    params = common.init_params(api.schema(cfg), jax.random.key(1))
+    engine = DecodeEngine(cfg, params, max_slots=2, cache_size=64)
+    req = Request(rid=0, prompt=[4, 8, 15], max_new_tokens=5)
+    engine.submit(req)
+    engine.run_until_done()
+    assert req.done and len(req.output) == 5
+    # parity with the reference path
+    assert req.output == _reference_generate(cfg, params, [4, 8, 15], 5)
