@@ -52,6 +52,15 @@ def run() -> list[tuple]:
             f"traffic_kahan={kahan_traffic:.2f}x"
             f"{' (free)' if kahan_traffic <= psum_traffic else ''}",
         ))
+    # pre-reduce shard statistics (one fused engine pass per shard): the
+    # dynamic-range probe that sizes the compensated-vs-plain decision
+    from repro.distributed import collectives as C
+    st = C.pre_reduce_stats(jnp.asarray(shards[0]), interpret=True)
+    rows.append((
+        "collectives/pre_reduce_stats", f"{float(st['l2']):.3e}",
+        f"sum={float(st['sum']):.3e} l2={float(st['l2']):.3e} "
+        f"maxabs={float(st['maxabs']):.3e} (single fused pass)",
+    ))
     return rows
 
 

@@ -1,23 +1,41 @@
 """Paper Figs. 5-7 analog, MEASURED on this host: naive vs Kahan dot
-throughput across working-set sizes spanning the cache hierarchy.
+throughput across working-set sizes AND unroll factors U in {1, 2, 4, 8}.
 
-The paper's claim — compensation is free once the loop is bandwidth-bound —
-is hardware-independent; this benchmark reproduces it on the container's
-x86 core with XLA-compiled kernels: a SIMD-vectorized compensated dot
-(lane-parallel Neumaier, the Pallas kernel's algorithm in jnp form) vs
-jnp.dot. In-cache the compensated version pays its ~4× arithmetic; as the
-working set leaves LLC the ratio collapses toward 1.
+The paper's claim — compensation is free once the loop is bandwidth-bound
+*and* the serial ADD chain is broken by unrolling — is hardware-
+independent; this benchmark reproduces both halves on the container's
+x86 core with XLA-compiled analogs of the Pallas engine's algorithm:
+
+  * the mod-U unrolled compensated dot keeps U * 1024 independent
+    (sum, carry) accumulator lanes (the engine's U streams of (8, 128)
+    vregs) and scans the operands in chunks of that width — the serial
+    Neumaier chain shrinks by U exactly as in the Pallas kernel;
+  * ``jnp.dot`` is the naive baseline.
+
+Each row emits the measured us/slowdown next to the ECM-predicted
+slowdown for v5e at the same U (``repro.ecm.tpu`` with the unroll-aware
+latency term), so the U-sweep can be compared against the model: the
+model predicts latency-bound behavior (slowdown > 1) below
+``min_free_unroll`` and "free" compensation above it.
+
+A second section measures the fused multi-reduction claim: one pass
+emitting (dot, sum, sumsq) vs separate passes over the same operands —
+the fused form pays the operand traffic once.
 """
 
 from __future__ import annotations
 
+import functools
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-LANES = 4096  # wide lanes so XLA vectorizes the compensated inner ops
+from repro.ecm import tpu
+
+STREAM_LANES = 1024          # one (8, 128) vreg worth of f32 lanes
+UNROLLS = (1, 2, 4, 8)
 
 
 @jax.jit
@@ -25,48 +43,129 @@ def _naive_dot(x, y):
     return jnp.dot(x, y)
 
 
-@jax.jit
-def _kahan_dot_lanes(x2, y2):
-    """Lane-parallel compensated dot: scan rows, (sum, carry) per lane."""
+@functools.partial(jax.jit, static_argnames=("width",))
+def _kahan_dot_unrolled(x, y, width):
+    """Engine-analog compensated dot: U*1024 parallel (sum, carry) lanes
+    (width = U * STREAM_LANES), sequential Neumaier scan over chunks,
+    compensated fold at exit. The scan's dependency-chain length is
+    n / width — the mod-U unroll effect, in XLA form."""
     from repro.core import kahan
+
+    x2 = x.reshape(-1, width)
+    y2 = y.reshape(-1, width)
 
     def body(carry, xy):
         s, c = carry
         xi, yi = xy
         return kahan.neumaier_step(s, c, xi * yi), None
 
-    zeros = jnp.zeros((x2.shape[1],), jnp.float32)
+    zeros = jnp.zeros((width,), jnp.float32)
     (s, c), _ = jax.lax.scan(body, (zeros, zeros), (x2, y2))
+    # compensated fold of the surviving lanes (cheap: width elements)
+    def fold(carry, pair):
+        fs, fc = carry
+        return kahan.combine(fs, fc, pair[0], pair[1]), None
+    (fs, fc), _ = jax.lax.scan(fold, (jnp.float32(0), jnp.float32(0)),
+                               (s, c))
+    return fs + fc
+
+
+@functools.partial(jax.jit, static_argnames=("width",))
+def _fused_dot_stats(x, y, width):
+    """One pass, three compensated outputs (dot, sum, sumsq): the fused
+    engine's strategy — operands cross memory once for the family."""
+    from repro.core import kahan
+
+    x2 = x.reshape(-1, width)
+    y2 = y.reshape(-1, width)
+
+    def body(carry, xy):
+        (sd, cd), (ss, cs), (sq, cq) = carry
+        xi, yi = xy
+        return (kahan.neumaier_step(sd, cd, xi * yi),
+                kahan.neumaier_step(ss, cs, xi),
+                kahan.neumaier_step(sq, cq, xi * xi)), None
+
+    z = lambda: (jnp.zeros((width,), jnp.float32),
+                 jnp.zeros((width,), jnp.float32))
+    (d, s, q), _ = jax.lax.scan(body, (z(), z(), z()), (x2, y2))
+    return (jnp.sum(d[0] + d[1]), jnp.sum(s[0] + s[1]),
+            jnp.sum(q[0] + q[1]))
+
+
+@functools.partial(jax.jit, static_argnames=("width",))
+def _kahan_sum_w(x, width):
+    from repro.core import kahan
+
+    x2 = x.reshape(-1, width)
+
+    def body(carry, xi):
+        s, c = carry
+        return kahan.neumaier_step(s, c, xi), None
+
+    zeros = jnp.zeros((width,), jnp.float32)
+    (s, c), _ = jax.lax.scan(body, (zeros, zeros), x2)
     return jnp.sum(s + c)
 
 
 def _time(fn, *args, reps: int = 5) -> float:
-    fn(*args).block_until_ready()
+    out = fn(*args)
+    jax.tree.map(lambda a: a.block_until_ready(), out)
     t0 = time.perf_counter()
     for _ in range(reps):
-        fn(*args).block_until_ready()
+        out = fn(*args)
+        jax.tree.map(lambda a: a.block_until_ready(), out)
     return (time.perf_counter() - t0) / reps * 1e6   # us
 
 
-def run() -> list[tuple]:
+def run_unroll_sweep() -> list[tuple]:
     rows = []
-    for n in (1 << 12, 1 << 15, 1 << 18, 1 << 21, 1 << 24):
+    for n in (1 << 15, 1 << 18, 1 << 21, 1 << 24):
         rng = np.random.default_rng(0)
         x = jnp.asarray(rng.standard_normal(n).astype(np.float32))
         y = jnp.asarray(rng.standard_normal(n).astype(np.float32))
-        x2 = x.reshape(-1, LANES) if n >= LANES else x.reshape(1, -1)
-        y2 = y.reshape(-1, LANES) if n >= LANES else y.reshape(1, -1)
         t_naive = _time(_naive_dot, x, y)
-        t_kahan = _time(_kahan_dot_lanes, x2, y2)
         ws_kb = 2 * n * 4 / 1024
-        rows.append((
-            f"throughput/n={n}", f"{t_kahan:.0f}",
-            f"ws={ws_kb:.0f}KB naive_us={t_naive:.0f} "
-            f"kahan_us={t_kahan:.0f} slowdown={t_kahan/max(t_naive,1e-9):.2f}"
-            f" gup_naive={n/max(t_naive,1e-9)/1e3:.2f}"
-            f" gup_kahan={n/max(t_kahan,1e-9)/1e3:.2f}",
-        ))
+        for u in UNROLLS:
+            t_k = _time(_kahan_dot_unrolled, x, y, u * STREAM_LANES)
+            meas = t_k / max(t_naive, 1e-9)
+            pred = tpu.kahan_overhead("HBM", unroll=u)   # >= 1: kahan slower
+            p = tpu.predict_level(tpu.KAHAN_DOT, "HBM", unroll=u)
+            rows.append((
+                f"throughput/U{u}/n={n}", f"{t_k:.0f}",
+                f"ws={ws_kb:.0f}KB naive_us={t_naive:.0f} "
+                f"kahan_us={t_k:.0f} slowdown_meas={meas:.2f} "
+                f"slowdown_ecm_v5e={pred:.2f} ecm_bound={p.bound} "
+                f"pred_v5e_us={tpu.predicted_runtime_s(tpu.KAHAN_DOT, n, 'HBM', unroll=u)*1e6:.1f}",
+            ))
+    rows.append((
+        "throughput/min_free_unroll", f"{tpu.min_free_unroll()}",
+        "ECM-predicted smallest U with non-latency-bound kahan_dot on v5e",
+    ))
     return rows
+
+
+def run_fused() -> list[tuple]:
+    n = 1 << 22
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.standard_normal(n).astype(np.float32))
+    y = jnp.asarray(rng.standard_normal(n).astype(np.float32))
+    w = 4 * STREAM_LANES
+    t_fused = _time(_fused_dot_stats, x, y, w)
+    t_dot = _time(_kahan_dot_unrolled, x, y, w)
+    t_sum = _time(_kahan_sum_w, x, w)
+    t_sq = _time(_kahan_sum_w, x * x, w)   # separate nrm2 pass
+    t_sep = t_dot + t_sum + t_sq
+    return [(
+        "fused/dot+sum+nrm2", f"{t_fused:.0f}",
+        f"fused_us={t_fused:.0f} separate_us={t_sep:.0f} "
+        f"(dot={t_dot:.0f} sum={t_sum:.0f} sumsq={t_sq:.0f}) "
+        f"speedup={t_sep/max(t_fused,1e-9):.2f}",
+    )]
+
+
+def run() -> list[tuple]:
+    return run_unroll_sweep() + run_fused()
 
 
 def main() -> None:

@@ -3,7 +3,8 @@
 
   bench_ecm_predictions   paper §4 / Eqs. 1-3 (ECM cycle predictions)
   bench_accuracy          paper §1 motivation (error vs N, naive vs Kahan)
-  bench_kernel_throughput paper Figs. 5-7 analog, measured on this host
+  bench_kernel_throughput paper Figs. 5-7 analog + unroll (U) sweep,
+                          measured vs ECM-predicted (repro.ecm.tpu)
   bench_scaling           paper Figs. 8-9 analog (saturation curves)
   bench_tpu_kahan         DESIGN.md §2.3 (the paper's question on v5e)
   bench_collectives       compensated all-reduce numerics + bandwidth model

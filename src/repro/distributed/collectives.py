@@ -35,12 +35,23 @@ def _ring_perm(n: int) -> list[tuple[int, int]]:
     return [(i, (i + 1) % n) for i in range(n)]
 
 
+def _axis_size(axis_name: str) -> int:
+    """Static size of a named mesh axis, inside shard_map.
+
+    ``jax.lax.axis_size`` only exists in newer jax; ``psum`` of a Python
+    constant is special-cased to fold to ``constant * axis_size`` without
+    emitting a collective, so this is a concrete int at trace time on
+    every jax this repo supports.
+    """
+    return int(jax.lax.psum(1, axis_name))
+
+
 def kahan_all_reduce(x: jax.Array, axis_name: str) -> jax.Array:
     """Compensated all-reduce of ``x`` over ``axis_name`` (inside shard_map).
 
     Returns the compensated sum on every device.
     """
-    n = jax.lax.axis_size(axis_name)
+    n = _axis_size(axis_name)
     if n == 1:
         return x
     if n == 2:
@@ -92,7 +103,7 @@ def _kahan_ring_rs_ag(x: jax.Array, axis_name: str, n: int) -> jax.Array:
 def naive_ring_all_reduce(x: jax.Array, axis_name: str) -> jax.Array:
     """Uncompensated ring (baseline for the accuracy comparison): same
     communication schedule, plain adds."""
-    n = jax.lax.axis_size(axis_name)
+    n = _axis_size(axis_name)
     if n == 1:
         return x
     perm = _ring_perm(n)
@@ -104,6 +115,24 @@ def naive_ring_all_reduce(x: jax.Array, axis_name: str) -> jax.Array:
 
     (acc, _), _ = jax.lax.scan(step, (x, x), jnp.arange(n - 1))
     return acc
+
+
+def pre_reduce_stats(x: jax.Array, *, interpret: bool | None = None
+                     ) -> dict[str, jax.Array]:
+    """Local-shard statistics before a cross-device reduction, in ONE
+    fused engine pass: compensated sum + sum-of-squares and max|x|.
+
+    Used to size the compensation decision (is the compensated ring's
+    1.5x payload worth it for this tensor's dynamic range?), to seed the
+    int8 compression scale, and as the debug/monitoring hook before a
+    gradient all-reduce — previously three separate passes over the
+    shard, now one HBM read (repro.kernels.engine fused multi-reduction).
+    """
+    from repro.kernels import ops
+    st = ops.fused_reduce(x, outputs=("sum", "sumsq", "maxabs"),
+                          interpret=interpret)
+    return {"sum": st["sum"], "l2": jnp.sqrt(st["sumsq"]),
+            "maxabs": st["maxabs"]}
 
 
 def make_all_reduce_fn(mesh: Mesh, axis: str, *, compensated: bool = True):

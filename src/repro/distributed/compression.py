@@ -51,7 +51,8 @@ def ef_quantized_all_reduce(grad: jax.Array, state: EFState,
                             axis_name: str) -> tuple[jax.Array, EFState]:
     """Inside shard_map: compress (grad + residual), exchange int8 over the
     axis, sum dequantized, keep the local quantization error as residual."""
-    n = jax.lax.axis_size(axis_name)
+    from repro.distributed.collectives import _axis_size
+    n = _axis_size(axis_name)
     x = grad.astype(jnp.float32) + state.residual
     q, scale, pad = _quantize(x)
     local_deq = _dequantize(q, scale, pad, grad.shape)

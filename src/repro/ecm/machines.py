@@ -92,6 +92,12 @@ TPU_V5E = dict(
     # kernels (reductions cannot use the MXU). 8x128 lanes, ~4 f32 ALU ops
     # per lane-cycle at ~0.94 GHz — documented assumption, see DESIGN.md.
     vpu_f32_flops=4e12,
+    # VPU pipeline timing for the latency-bound (un-unrolled) analysis:
+    # vector clock and effective ADD result latency in cycles. ~0.94 GHz
+    # vector clock; dependent-ADD latency on the VPU estimated at 4 cy
+    # (documented assumption, same role as the paper's 3-cy AVX ADD).
+    vpu_freq_ghz=0.94,
+    vpu_add_latency_cy=4.0,
     hbm_bw=819e9,
     # VMEM load bandwidth: ~2 vector loads of (8,128) f32 per cycle at
     # ~0.94 GHz ≈ 8 TB/s (the TPU analogue of the paper's L1 64 B/cy).

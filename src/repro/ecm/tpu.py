@@ -9,6 +9,20 @@ to the overlap form the paper derives for saturated multicore operation:
 which is a per-level roofline. This module evaluates that form for the
 reduction kernels (naive vs Kahan) and answers the paper's central question
 — "what does compensation cost?" — per memory-hierarchy level of the TPU.
+
+**Unroll-aware compute term.** The paper's §4.2 observation is that the
+throughput numbers above are only reachable once the serial ADD dependency
+chain is broken by mod-U unrolling; an un-unrolled compensated loop runs at
+*latency*, not throughput. The engine (``repro.kernels.engine``) keeps U
+independent (8, 128) accumulator streams; its per-chain-step work is one
+Neumaier update of U vregs, so the compute term becomes
+
+    T_compute(U) = max( flops / peak_throughput,
+                        dep_chain_ops · add_latency / (U · vreg_elems) )
+
+per element. ``predict_level(..., unroll=U)`` evaluates this; ``unroll=None``
+keeps the pure-throughput (infinite-unroll) prediction for backward
+compatibility with the hierarchy-level analysis.
 """
 
 from __future__ import annotations
@@ -17,6 +31,8 @@ from dataclasses import dataclass
 
 from repro.ecm.machines import TPU_V5E
 
+VREG_ELEMS = 8 * 128      # one (sublane, lane) vector register of f32
+
 
 @dataclass(frozen=True)
 class TpuKernelSpec:
@@ -24,6 +40,11 @@ class TpuKernelSpec:
     name: str
     bytes_per_update: float     # HBM traffic (f32 dot: two 4-B loads)
     flops_per_update: float     # VPU flops (f32 ops)
+    # Serially *dependent* VPU ops per accumulator update — the length the
+    # dependency chain grows by per (8,128) chunk folded into one stream.
+    # Naive: 1 (the running add). Neumaier: the TwoSum critical path
+    # (s+x -> t-x -> s-s' -> +) plus the carry add ≈ 5 of the 7 ops.
+    dep_chain_ops: float = 1.0
 
     @property
     def arithmetic_intensity(self) -> float:
@@ -31,15 +52,26 @@ class TpuKernelSpec:
 
 
 # Our kernel zoo, f32 elements. Neumaier step = TwoSum (6) + carry add (1).
-NAIVE_DOT = TpuKernelSpec("naive_dot", bytes_per_update=8, flops_per_update=2)
-KAHAN_DOT = TpuKernelSpec("kahan_dot", bytes_per_update=8, flops_per_update=8)
-NAIVE_SUM = TpuKernelSpec("naive_sum", bytes_per_update=4, flops_per_update=1)
-KAHAN_SUM = TpuKernelSpec("kahan_sum", bytes_per_update=4, flops_per_update=7)
+NAIVE_DOT = TpuKernelSpec("naive_dot", bytes_per_update=8,
+                          flops_per_update=2, dep_chain_ops=1)
+KAHAN_DOT = TpuKernelSpec("kahan_dot", bytes_per_update=8,
+                          flops_per_update=8, dep_chain_ops=5)
+NAIVE_SUM = TpuKernelSpec("naive_sum", bytes_per_update=4,
+                          flops_per_update=1, dep_chain_ops=1)
+KAHAN_SUM = TpuKernelSpec("kahan_sum", bytes_per_update=4,
+                          flops_per_update=7, dep_chain_ops=5)
 # grad accumulation: 3 streams in (sum, carry, grad), 2 out -> 20 B/elem
-NAIVE_ACC = TpuKernelSpec("naive_acc", bytes_per_update=12, flops_per_update=1)
-KAHAN_ACC = TpuKernelSpec("kahan_acc", bytes_per_update=20, flops_per_update=7)
+NAIVE_ACC = TpuKernelSpec("naive_acc", bytes_per_update=12,
+                          flops_per_update=1, dep_chain_ops=1)
+KAHAN_ACC = TpuKernelSpec("kahan_acc", bytes_per_update=20,
+                          flops_per_update=7, dep_chain_ops=5)
+# fused dot + sum + sumsq + maxabs in ONE pass: same 8 B/update traffic as
+# the dot alone (the whole point of the fused engine), ~4x the VPU work.
+FUSED_DOT_STATS = TpuKernelSpec("fused_dot_stats", bytes_per_update=8,
+                                flops_per_update=25, dep_chain_ops=5)
 
-TPU_KERNELS = [NAIVE_DOT, KAHAN_DOT, NAIVE_SUM, KAHAN_SUM, NAIVE_ACC, KAHAN_ACC]
+TPU_KERNELS = [NAIVE_DOT, KAHAN_DOT, NAIVE_SUM, KAHAN_SUM, NAIVE_ACC,
+               KAHAN_ACC, FUSED_DOT_STATS]
 
 
 @dataclass(frozen=True)
@@ -48,36 +80,83 @@ class TpuLevelPrediction:
     level: str                 # "VMEM" | "HBM"
     t_compute_s: float         # per-update seconds on the VPU
     t_data_s: float            # per-update data-path seconds
-    bound: str                 # "compute" | "data"
+    bound: str                 # "compute" | "data" | "latency"
     updates_per_s: float
+    unroll: int | None = None
+    t_latency_s: float = 0.0   # dependency-chain term (0 when unroll=None)
 
 
-def predict_level(kernel: TpuKernelSpec, level: str, hw: dict = TPU_V5E
-                  ) -> TpuLevelPrediction:
-    """Per-level throughput: T = max(T_compute, T_data) (full-overlap ECM)."""
+def _latency_term(kernel: TpuKernelSpec, unroll: int, hw: dict) -> float:
+    """Per-element seconds imposed by the serial accumulator chain at
+    unroll U: one chain step (dep_chain_ops dependent VPU ops) retires
+    U * VREG_ELEMS elements."""
+    cy = kernel.dep_chain_ops * hw["vpu_add_latency_cy"]
+    return cy / (hw["vpu_freq_ghz"] * 1e9) / (unroll * VREG_ELEMS)
+
+
+def predict_level(kernel: TpuKernelSpec, level: str, hw: dict = TPU_V5E,
+                  unroll: int | None = None) -> TpuLevelPrediction:
+    """Per-level throughput: T = max(T_compute(U), T_data) (full-overlap ECM).
+
+    ``unroll=None`` reproduces the pure-throughput prediction (the
+    infinite-unroll limit); an integer U adds the paper's latency term for
+    a U-stream accumulator.
+    """
     bw = hw["vmem_bw"] if level == "VMEM" else hw["hbm_bw"]
-    t_c = kernel.flops_per_update / hw["vpu_f32_flops"]
+    t_tp = kernel.flops_per_update / hw["vpu_f32_flops"]
+    t_lat = 0.0 if unroll is None else _latency_term(kernel, unroll, hw)
+    t_c = max(t_tp, t_lat)
     t_d = kernel.bytes_per_update / bw
     t = max(t_c, t_d)
+    if t_d >= t_c:
+        bound = "data"
+    elif t_lat > t_tp:
+        bound = "latency"
+    else:
+        bound = "compute"
     return TpuLevelPrediction(
         kernel=kernel.name, level=level, t_compute_s=t_c, t_data_s=t_d,
-        bound="compute" if t_c >= t_d else "data",
-        updates_per_s=1.0 / t,
+        bound=bound, updates_per_s=1.0 / t, unroll=unroll,
+        t_latency_s=t_lat,
     )
 
 
 def kahan_overhead(level: str, naive=NAIVE_DOT, comp=KAHAN_DOT,
-                   hw: dict = TPU_V5E) -> float:
+                   hw: dict = TPU_V5E,
+                   unroll: int | None = None) -> float:
     """Throughput ratio naive/Kahan at a given level (1.0 == 'for free').
 
     The paper's headline result: ==1.0 wherever the kernel is data-bound at
     that level. On v5e HBM, kahan_dot needs 8 flops per 8 bytes = AI 1.0,
     far below the VPU ridge (vpu_f32_flops / hbm_bw ≈ 4.9 flops/B), so the
-    compensated kernel saturates HBM exactly like the naive one.
+    compensated kernel saturates HBM exactly like the naive one — but ONLY
+    at sufficient unroll: pass ``unroll=1`` to see the latency-bound
+    un-unrolled slowdown the engine exists to remove.
     """
-    p_naive = predict_level(naive, level, hw)
-    p_comp = predict_level(comp, level, hw)
+    p_naive = predict_level(naive, level, hw, unroll=unroll)
+    p_comp = predict_level(comp, level, hw, unroll=unroll)
     return p_naive.updates_per_s / p_comp.updates_per_s
+
+
+def min_free_unroll(kernel: TpuKernelSpec = KAHAN_DOT, level: str = "HBM",
+                    hw: dict = TPU_V5E, max_u: int = 64) -> int:
+    """Smallest power-of-two U at which the latency term sinks below the
+    data term — the engine's predicted 'compensation is free' threshold."""
+    u = 1
+    while u <= max_u:
+        p = predict_level(kernel, level, hw, unroll=u)
+        if p.bound != "latency":
+            return u
+        u *= 2
+    return max_u
+
+
+def predicted_runtime_s(kernel: TpuKernelSpec, n_elems: int, level: str,
+                        hw: dict = TPU_V5E,
+                        unroll: int | None = None) -> float:
+    """ECM-predicted wall-clock for an n-element streaming reduction."""
+    p = predict_level(kernel, level, hw, unroll=unroll)
+    return n_elems / p.updates_per_s
 
 
 def vpu_ridge_flops_per_byte(hw: dict = TPU_V5E) -> float:

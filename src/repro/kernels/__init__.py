@@ -1,16 +1,51 @@
 """Pallas TPU kernels for the paper's compute hot-spots.
 
-  kahan_dot / kahan_sum   compensated reductions (the paper's kernel)
-  naive_dot               the paper's baseline
-  kahan_acc               fused elementwise compensated accumulate
-  kahan_matmul            compensated K-loop matmul accumulation
-  flash_attention         VMEM-resident online softmax (§Perf-motivated)
+Reduction kernel strategy (one engine, many fronts)
+---------------------------------------------------
+All streaming reductions lower to a single configurable kernel family,
+``repro.kernels.engine``, which implements the paper's (arXiv:1604.01890)
+three performance prerequisites on the TPU VPU:
 
-Each kernel: <name>.py (pl.pallas_call + BlockSpec VMEM tiling), jit'd
-wrappers in ops.py, pure-jnp oracles in ref.py. Validated in interpret mode
-on CPU; targeted at TPU v5e vreg/VMEM geometry.
+  1. one compensated ``(sum, carry)`` accumulator per (sublane, lane) —
+     the SIMD-lane parallelism of §4.2;
+  2. **mod-U unrolling**: ``U`` independent accumulator *streams* updated
+     by one vectorized Neumaier step per chunk, cutting the serial ADD
+     dependency chain by U (un-unrolled compensated loops are latency-
+     bound — the paper's central measurement, modeled for v5e by the
+     unroll-aware term in ``repro.ecm.tpu``);
+  3. compensated (TwoSum) binary fold of streams → sublanes → lanes at
+     loop exit, the paper's "reduce partials scalar-ly at the end".
+
+``U`` is a static parameter (default from ``engine.DEFAULT_UNROLL``,
+swept in ``benchmarks/bench_kernel_throughput.py``). The final partial
+block is masked in-kernel against the static element count, so host-side
+canonicalization never materializes a zero-padded copy of the operands.
+
+The engine also **fuses** multi-reductions — any subset of (dot, sum,
+sumsq/nrm2, max, maxabs) in one pass, paying the HBM traffic once — and
+batches independent row reductions (many dots per launch). Consumers:
+the serving engine's logprob/metric path, the optimizer's gradient-norm
+clip + max|g| stats, and the pre-reduce shard statistics in
+``repro.distributed.collectives``.
+
+Public entry points:
+
+  ops.kahan_dot / kahan_sum      compensated reductions (engine-backed)
+  ops.naive_dot                  the paper's baseline (engine, no carry)
+  ops.fused_reduce               one pass -> {dot,sum,sumsq,max,maxabs}
+  ops.batched_fused_reduce       (B, N) -> per-row statistic family
+  ops.batched_kahan_dot          many independent dots per launch
+  ops.kahan_accumulate           fused elementwise compensated accumulate
+  kahan_matmul                   compensated K-loop matmul accumulation
+  flash_attention                VMEM-resident online softmax
+
+Each wrapper module (kahan_dot.py, kahan_sum.py, naive_dot.py) keeps its
+historical ``*_blocked`` entry point as a thin shim over the engine;
+pure-jnp oracles live in ref.py. Validated in interpret mode on CPU
+(tests/test_engine.py, tests/test_kernels_kahan.py); targeted at TPU
+v5e vreg/VMEM geometry.
 """
 
-from repro.kernels import ops, ref  # noqa: F401
+from repro.kernels import engine, ops, ref  # noqa: F401
 from repro.kernels.flash_attention import flash_attention_pallas  # noqa: F401
 from repro.kernels.kahan_matmul import kahan_matmul  # noqa: F401

@@ -7,6 +7,11 @@ elementwise form: 3 streams in, 2 streams out, 20 B/element f32 — purely
 HBM-bound, so (per the paper's result) compensation costs no wall-clock over
 a naive `acc += g` (12 B/element) beyond the carry stream it must maintain.
 
+Streams flat 1-D blocks like the reduction engine: the final partial block
+needs no host-side zero padding — out-of-bounds lanes compute garbage that
+Pallas discards on the partial write-back (elementwise, so no cross-lane
+contamination is possible).
+
 The same kernel backs the compensated optimizer's state update and the SSD
 inter-chunk state carry.
 """
@@ -14,32 +19,32 @@ inter-chunk state carry.
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core import kahan
-from repro.kernels.kahan_dot import LANES
+from repro.kernels.engine import LANES  # noqa: F401 (re-export)
 
 
 def _kahan_acc_kernel(s_ref, c_ref, u_ref, s_out, c_out):
-    s, c = kahan.neumaier_step(s_ref[...], c_ref[...], u_ref[...].astype(s_ref.dtype))
+    s, c = kahan.neumaier_step(s_ref[...], c_ref[...],
+                               u_ref[...].astype(s_ref.dtype))
     s_out[...] = s
     c_out[...] = c
 
 
-def kahan_acc_blocked(acc_sum: jax.Array, acc_carry: jax.Array,
-                      update: jax.Array, *, block_rows: int = 512,
-                      interpret: bool = False) -> tuple[jax.Array, jax.Array]:
-    """(M, 128) compensated accumulate: returns (new_sum, new_carry)."""
-    assert acc_sum.ndim == 2 and acc_sum.shape[1] == LANES
+def kahan_acc_flat(acc_sum: jax.Array, acc_carry: jax.Array,
+                   update: jax.Array, *, block_rows: int = 512,
+                   interpret: bool = False) -> tuple[jax.Array, jax.Array]:
+    """Flat 1-D compensated accumulate: returns (new_sum, new_carry)."""
+    assert acc_sum.ndim == 1
     assert acc_sum.shape == acc_carry.shape == update.shape
-    m = acc_sum.shape[0]
-    assert m % block_rows == 0
-    spec = pl.BlockSpec((block_rows, LANES), lambda g: (g, 0))
+    n = acc_sum.shape[0]
+    block_elems = min(block_rows * LANES, max(LANES, n))
+    spec = pl.BlockSpec((block_elems,), lambda g: (g,))
 
     return pl.pallas_call(
         _kahan_acc_kernel,
-        grid=(m // block_rows,),
+        grid=(pl.cdiv(n, block_elems),),
         in_specs=[spec, spec, spec],
         out_specs=[spec, spec],
         out_shape=[
@@ -49,3 +54,15 @@ def kahan_acc_blocked(acc_sum: jax.Array, acc_carry: jax.Array,
         input_output_aliases={0: 0, 1: 1},
         interpret=interpret,
     )(acc_sum, acc_carry, update)
+
+
+def kahan_acc_blocked(acc_sum: jax.Array, acc_carry: jax.Array,
+                      update: jax.Array, *, block_rows: int = 512,
+                      interpret: bool = False) -> tuple[jax.Array, jax.Array]:
+    """(M, 128) compensated accumulate (legacy 2-D entry point)."""
+    assert acc_sum.ndim == 2 and acc_sum.shape[1] == LANES
+    shape = acc_sum.shape
+    ns, nc = kahan_acc_flat(acc_sum.reshape(-1), acc_carry.reshape(-1),
+                            update.reshape(-1), block_rows=block_rows,
+                            interpret=interpret)
+    return ns.reshape(shape), nc.reshape(shape)

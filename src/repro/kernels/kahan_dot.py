@@ -1,122 +1,47 @@
-"""Pallas TPU kernel: Kahan-compensated scalar product (the paper's kernel).
+"""Compensated scalar product — thin wrapper over the reduction engine.
 
-TPU-native adaptation of the paper's SIMD strategy (§4.2, DESIGN.md §2.3):
-
-  * The paper keeps one compensation register per SIMD lane and unrolls to
-    hide ADD latency. Here each grid step streams a ``(block_rows, 128)``
-    VMEM block of each operand, forms the products on the VPU, and folds them
-    into persistent ``(8, 128)`` sum/carry accumulators in VMEM scratch —
-    one compensated accumulator per (sublane, lane), the vreg shape of the
-    v5e VPU. Latency hiding is Mosaic's job; the numerics structure is ours.
-  * The final grid step performs a compensated binary-fold reduction over
-    sublanes then lanes, merging (sum, carry) pairs with TwoSum so the lane
-    reduction does not reintroduce O(lanes·eps) error (the paper reduces its
-    SIMD partial sums at loop exit the same way, scalar-ly).
-  * HBM→VMEM traffic is identical to the naive dot kernel: 8 B/update for
-    f32 (2 operands). The extra VPU flops (~7 vs 2 per update) ride under the
-    memory term — the paper's "Kahan for free when bandwidth-bound" result,
-    restated for HBM instead of L3/Mem (quantified in repro.ecm.tpu).
-
-Inputs are zero-padded and reshaped to ``(M, 128)`` by ``ops.py``; padding
-with exact zeros is exact for compensated accumulation.
+The actual kernel lives in ``repro.kernels.engine`` (one Pallas kernel
+family for every reduction: mod-U unrolled multi-stream Neumaier
+accumulation, compensated binary fold at loop exit, in-kernel masked
+tail). This module keeps the historical ``kahan_dot_blocked`` entry point
+for callers holding pre-blocked ``(M, 128)`` operands.
 """
 
 from __future__ import annotations
 
-import functools
-
 import jax
-import jax.numpy as jnp
-from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
-from repro.core import kahan
-
-SUBLANES = 8
-LANES = 128
+from repro.kernels import engine
+from repro.kernels.engine import (  # noqa: F401 (re-exports)
+    LANES, SUBLANES, _binary_fold_axis)
 
 
 def _compensated_fold(s, c):
-    """Binary-fold a (8, 128) compensated accumulator to a scalar.
+    """Binary-fold a (8, 128) compensated accumulator to (1, 1).
 
-    Each halving merges (sum, carry) pairs with TwoSum (kahan.combine) so no
-    compensation is lost. log2(8) + log2(128) = 10 merge levels.
+    Kept for callers of the historical helper; the engine's
+    ``_fold_streams`` is the (U, 8, 128) generalization.
     """
-    # Fold sublanes: (8,128) -> (1,128)
-    rows = s.shape[0]
-    while rows > 1:
-        half = rows // 2
-        s_hi, s_lo = s[:half], s[half:rows]
-        c_hi, c_lo = c[:half], c[half:rows]
-        s, c = kahan.combine(s_hi, c_hi, s_lo, c_lo)
-        rows = half
-    # Fold lanes: (1,128) -> (1,1)
-    cols = s.shape[1]
-    while cols > 1:
-        half = cols // 2
-        s_hi, s_lo = s[:, :half], s[:, half:cols]
-        c_hi, c_lo = c[:, :half], c[:, half:cols]
-        s, c = kahan.combine(s_hi, c_hi, s_lo, c_lo)
-        cols = half
+    s, c = _binary_fold_axis(s, c, 0)
+    s, c = _binary_fold_axis(s, c, 1)
     return s, c
 
 
-def _kahan_dot_kernel(x_ref, y_ref, out_ref, acc_s, acc_c, *, acc_dtype):
-    """Grid-sequential kernel body. Scratch persists across grid steps."""
-
-    @pl.when(pl.program_id(0) == 0)
-    def _init():
-        acc_s[...] = jnp.zeros_like(acc_s)
-        acc_c[...] = jnp.zeros_like(acc_c)
-
-    x = x_ref[...].astype(acc_dtype)
-    y = y_ref[...].astype(acc_dtype)
-    prod = x * y  # exact in f32 for bf16 inputs
-
-    n_sub = prod.shape[0] // SUBLANES
-
-    def body(i, carry):
-        s, c = carry
-        chunk = jax.lax.dynamic_slice_in_dim(prod, i * SUBLANES, SUBLANES, 0)
-        return kahan.neumaier_step(s, c, chunk)
-
-    s, c = jax.lax.fori_loop(0, n_sub, body, (acc_s[...], acc_c[...]))
-    acc_s[...] = s
-    acc_c[...] = c
-
-    @pl.when(pl.program_id(0) == pl.num_programs(0) - 1)
-    def _finish():
-        fs, fc = _compensated_fold(acc_s[...], acc_c[...])
-        out_ref[...] = (fs + fc).astype(out_ref.dtype)
-
-
-def kahan_dot_blocked(x2d: jax.Array, y2d: jax.Array, *, block_rows: int = 256,
+def kahan_dot_blocked(x2d: jax.Array, y2d: jax.Array, *,
+                      block_rows: int = 256, unroll: int | None = None,
                       interpret: bool = False) -> jax.Array:
-    """Compensated dot of two (M, 128) arrays (M % block_rows == 0).
+    """Compensated dot of two (M, 128) arrays -> () scalar.
 
-    Returns a () scalar in the accumulation dtype (f32, or f64 for f64
-    inputs — f64 exercised in interpret mode only).
+    Returns the accumulation dtype (f32, or f64 for f64 inputs — f64
+    exercised in interpret mode only).
     """
     assert x2d.ndim == 2 and x2d.shape[1] == LANES, x2d.shape
     assert x2d.shape == y2d.shape, (x2d.shape, y2d.shape)
-    m = x2d.shape[0]
-    assert m % block_rows == 0 and block_rows % SUBLANES == 0
-    acc_dtype = jnp.promote_types(x2d.dtype, jnp.float32)
-    grid = (m // block_rows,)
-
-    out = pl.pallas_call(
-        functools.partial(_kahan_dot_kernel, acc_dtype=acc_dtype),
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((block_rows, LANES), lambda g: (g, 0)),
-            pl.BlockSpec((block_rows, LANES), lambda g: (g, 0)),
-        ],
-        out_specs=pl.BlockSpec((1, 1), lambda g: (0, 0)),
-        out_shape=jax.ShapeDtypeStruct((1, 1), acc_dtype),
-        scratch_shapes=[
-            pltpu.VMEM((SUBLANES, LANES), acc_dtype),
-            pltpu.VMEM((SUBLANES, LANES), acc_dtype),
-        ],
-        interpret=interpret,
-    )(x2d, y2d)
-    return out[0, 0]
+    u = engine.default_unroll(("dot",)) if unroll is None else unroll
+    flat_x, flat_y = x2d.reshape(-1), y2d.reshape(-1)
+    (out,) = engine.fused_reduce_flat(
+        (flat_x, flat_y), outputs=("dot",), unroll=u,
+        block_elems=engine.pick_block_elems(flat_x.shape[0], u,
+                                            requested=block_rows * LANES),
+        interpret=interpret)
+    return out

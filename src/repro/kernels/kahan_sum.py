@@ -1,67 +1,30 @@
-"""Pallas TPU kernel: Kahan-compensated sum (reduction-only variant).
+"""Compensated sum — thin wrapper over the reduction engine.
 
-Identical accumulator structure to kahan_dot (per-(sublane,lane) compensated
-accumulators in VMEM scratch, compensated binary fold at the last grid step)
-minus the elementwise product. 4 B/update HBM traffic for f32 — twice the
-arithmetic intensity of the dot, still far below the VPU ridge point, so
-compensation remains free in the HBM-bound regime (repro.ecm.tpu quantifies).
+Same engine as ``kahan_dot`` minus the elementwise product: 4 B/update
+HBM traffic for f32, twice the arithmetic intensity of the dot, still far
+below the VPU ridge point, so compensation remains free in the HBM-bound
+regime (``repro.ecm.tpu`` quantifies, including the unroll-dependent
+latency term).
 """
 
 from __future__ import annotations
 
-import functools
-
 import jax
-import jax.numpy as jnp
-from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
-from repro.core import kahan
-from repro.kernels.kahan_dot import LANES, SUBLANES, _compensated_fold
-
-
-def _kahan_sum_kernel(x_ref, out_ref, acc_s, acc_c, *, acc_dtype):
-    @pl.when(pl.program_id(0) == 0)
-    def _init():
-        acc_s[...] = jnp.zeros_like(acc_s)
-        acc_c[...] = jnp.zeros_like(acc_c)
-
-    x = x_ref[...].astype(acc_dtype)
-    n_sub = x.shape[0] // SUBLANES
-
-    def body(i, carry):
-        s, c = carry
-        chunk = jax.lax.dynamic_slice_in_dim(x, i * SUBLANES, SUBLANES, 0)
-        return kahan.neumaier_step(s, c, chunk)
-
-    s, c = jax.lax.fori_loop(0, n_sub, body, (acc_s[...], acc_c[...]))
-    acc_s[...] = s
-    acc_c[...] = c
-
-    @pl.when(pl.program_id(0) == pl.num_programs(0) - 1)
-    def _finish():
-        fs, fc = _compensated_fold(acc_s[...], acc_c[...])
-        out_ref[...] = (fs + fc).astype(out_ref.dtype)
+from repro.kernels import engine
+from repro.kernels.engine import LANES, SUBLANES  # noqa: F401
 
 
 def kahan_sum_blocked(x2d: jax.Array, *, block_rows: int = 512,
+                      unroll: int | None = None,
                       interpret: bool = False) -> jax.Array:
-    """Compensated sum of an (M, 128) array (M % block_rows == 0) -> scalar."""
+    """Compensated sum of an (M, 128) array -> () scalar."""
     assert x2d.ndim == 2 and x2d.shape[1] == LANES, x2d.shape
-    m = x2d.shape[0]
-    assert m % block_rows == 0 and block_rows % SUBLANES == 0
-    acc_dtype = jnp.promote_types(x2d.dtype, jnp.float32)
-
-    out = pl.pallas_call(
-        functools.partial(_kahan_sum_kernel, acc_dtype=acc_dtype),
-        grid=(m // block_rows,),
-        in_specs=[pl.BlockSpec((block_rows, LANES), lambda g: (g, 0))],
-        out_specs=pl.BlockSpec((1, 1), lambda g: (0, 0)),
-        out_shape=jax.ShapeDtypeStruct((1, 1), acc_dtype),
-        scratch_shapes=[
-            pltpu.VMEM((SUBLANES, LANES), acc_dtype),
-            pltpu.VMEM((SUBLANES, LANES), acc_dtype),
-        ],
-        interpret=interpret,
-    )(x2d)
-    return out[0, 0]
+    u = engine.default_unroll(("sum",)) if unroll is None else unroll
+    flat = x2d.reshape(-1)
+    (out,) = engine.fused_reduce_flat(
+        (flat,), outputs=("sum",), unroll=u,
+        block_elems=engine.pick_block_elems(flat.shape[0], u,
+                                            requested=block_rows * LANES),
+        interpret=interpret)
+    return out

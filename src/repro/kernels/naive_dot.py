@@ -1,59 +1,30 @@
-"""Pallas TPU kernel: naive (uncompensated) scalar product — paper baseline.
+"""Naive (uncompensated) scalar product — paper baseline, engine-backed.
 
-Same blocking, same HBM traffic, same scratch layout as kahan_dot, but plain
-accumulation (1 FMA-equivalent per update instead of Kahan's ~7 VPU flops).
-This is the paper's Fig. 2a kernel; the ECM/TPU analysis compares the two to
+Same blocking, same HBM traffic, same grid as the compensated dot, but
+plain per-vreg accumulation (the engine's ``compensated=False`` mode: 1
+FMA-equivalent per update instead of Neumaier's ~7 VPU flops). This is
+the paper's Fig. 2a kernel; the ECM/TPU analysis compares the two to
 restate the paper's headline result on v5e.
 """
 
 from __future__ import annotations
 
-import functools
-
 import jax
-import jax.numpy as jnp
-from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.kahan_dot import LANES, SUBLANES
+from repro.kernels import engine
+from repro.kernels.engine import LANES, SUBLANES  # noqa: F401
 
 
-def _naive_dot_kernel(x_ref, y_ref, out_ref, acc_s, *, acc_dtype):
-    @pl.when(pl.program_id(0) == 0)
-    def _init():
-        acc_s[...] = jnp.zeros_like(acc_s)
-
-    x = x_ref[...].astype(acc_dtype)
-    y = y_ref[...].astype(acc_dtype)
-    prod = x * y
-    # per-(sublane,lane) partial sums: reshape block rows onto the vreg shape
-    partial = prod.reshape(-1, SUBLANES, LANES).sum(axis=0)
-    acc_s[...] = acc_s[...] + partial
-
-    @pl.when(pl.program_id(0) == pl.num_programs(0) - 1)
-    def _finish():
-        out_ref[...] = jnp.sum(acc_s[...]).reshape(1, 1).astype(out_ref.dtype)
-
-
-def naive_dot_blocked(x2d: jax.Array, y2d: jax.Array, *, block_rows: int = 256,
+def naive_dot_blocked(x2d: jax.Array, y2d: jax.Array, *,
+                      block_rows: int = 256,
                       interpret: bool = False) -> jax.Array:
-    """Naive dot of two (M, 128) arrays -> scalar (accumulation dtype)."""
+    """Naive dot of two (M, 128) arrays -> () scalar (accumulation dtype)."""
     assert x2d.ndim == 2 and x2d.shape[1] == LANES, x2d.shape
     assert x2d.shape == y2d.shape
-    m = x2d.shape[0]
-    assert m % block_rows == 0 and block_rows % SUBLANES == 0
-    acc_dtype = jnp.promote_types(x2d.dtype, jnp.float32)
-
-    out = pl.pallas_call(
-        functools.partial(_naive_dot_kernel, acc_dtype=acc_dtype),
-        grid=(m // block_rows,),
-        in_specs=[
-            pl.BlockSpec((block_rows, LANES), lambda g: (g, 0)),
-            pl.BlockSpec((block_rows, LANES), lambda g: (g, 0)),
-        ],
-        out_specs=pl.BlockSpec((1, 1), lambda g: (0, 0)),
-        out_shape=jax.ShapeDtypeStruct((1, 1), acc_dtype),
-        scratch_shapes=[pltpu.VMEM((SUBLANES, LANES), acc_dtype)],
-        interpret=interpret,
-    )(x2d, y2d)
-    return out[0, 0]
+    flat_x, flat_y = x2d.reshape(-1), y2d.reshape(-1)
+    (out,) = engine.fused_reduce_flat(
+        (flat_x, flat_y), outputs=("dot",), unroll=1, compensated=False,
+        block_elems=engine.pick_block_elems(flat_x.shape[0], 1,
+                                            requested=block_rows * LANES),
+        interpret=interpret)
+    return out

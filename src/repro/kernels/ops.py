@@ -1,9 +1,14 @@
-"""Public jit'd wrappers for the reduction kernels.
+"""Public jit'd wrappers for the reduction-engine kernels.
 
-Handles shape canonicalization (flatten → zero-pad → reshape to (M, 128)),
-interpret-mode selection (auto-on for CPU, i.e. this container; off on real
-TPU), and dtype policy. Padding with exact zeros is exact for both naive and
-compensated accumulation.
+Handles canonicalization (flatten only — the engine masks the final
+partial block in-kernel, so NO zero-padded copy of the input is ever
+materialized), interpret-mode selection (auto-on for CPU, i.e. this
+container; off on real TPU), dtype policy, and the unroll default.
+
+Single-output reductions (``kahan_dot``, ``kahan_sum``, ``naive_dot``)
+and the fused multi-reductions (``fused_reduce``, ``batched_fused_reduce``,
+``batched_kahan_dot``) all lower to the same engine
+(``repro.kernels.engine``); see that module for the unrolling strategy.
 """
 
 from __future__ import annotations
@@ -13,11 +18,9 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import engine
 from repro.kernels import kahan_acc as _kacc
-from repro.kernels import kahan_dot as _kdot
-from repro.kernels import kahan_sum as _ksum
-from repro.kernels import naive_dot as _ndot
-from repro.kernels.kahan_dot import LANES
+from repro.kernels.engine import LANES, SUBLANES  # noqa: F401 (re-export)
 
 
 def _auto_interpret(interpret):
@@ -26,81 +29,158 @@ def _auto_interpret(interpret):
     return interpret
 
 
-def _to_blocked_2d(x: jax.Array, block_rows: int) -> jax.Array:
-    """Flatten, zero-pad to a multiple of block_rows*LANES, reshape (M,128)."""
-    flat = x.reshape(-1)
-    tile = block_rows * LANES
-    n = flat.shape[0]
-    pad = (-n) % tile
-    if pad:
-        flat = jnp.concatenate([flat, jnp.zeros((pad,), dtype=flat.dtype)])
-    return flat.reshape(-1, LANES)
+def _block_elems(block_rows: int | None, unroll: int | None, n: int) -> int:
+    """Map the legacy ``block_rows`` knob to engine block elements."""
+    u = engine.default_unroll(("dot",)) if unroll is None else unroll
+    if block_rows is None:
+        return engine.pick_block_elems(n, u)
+    return engine.pick_block_elems(n, u, requested=block_rows * LANES)
 
 
-def _pick_block_rows(n: int, requested: int) -> int:
-    """Shrink the block if the input is tiny so the grid is non-trivial."""
-    br = requested
-    while br > 8 and n < br * LANES:
-        br //= 2
-    return max(br, 8)
+# ------------------------------------------------------------ scalars -----
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_rows", "unroll", "interpret"))
+def _kahan_dot_impl(x, y, block_rows, unroll, interpret):
+    flat_x, flat_y = x.reshape(-1), y.reshape(-1)
+    (out,) = engine.fused_reduce_flat(
+        (flat_x, flat_y), outputs=("dot",), unroll=unroll,
+        block_elems=_block_elems(block_rows, unroll, flat_x.shape[0]),
+        interpret=interpret)
+    return out
 
 
-@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
-def _kahan_dot_impl(x, y, block_rows, interpret):
-    x2 = _to_blocked_2d(x, block_rows)
-    y2 = _to_blocked_2d(y, block_rows)
-    return _kdot.kahan_dot_blocked(x2, y2, block_rows=block_rows,
-                                   interpret=interpret)
-
-
-def kahan_dot(x: jax.Array, y: jax.Array, *, block_rows: int = 256,
+def kahan_dot(x: jax.Array, y: jax.Array, *, block_rows: int | None = None,
+              unroll: int | None = None,
               interpret: bool | None = None) -> jax.Array:
     """Compensated scalar product of two same-shape arrays -> scalar."""
     assert x.shape == y.shape, (x.shape, y.shape)
-    br = _pick_block_rows(x.size, block_rows)
-    return _kahan_dot_impl(x, y, br, _auto_interpret(interpret))
+    return _kahan_dot_impl(x, y, block_rows, unroll,
+                           _auto_interpret(interpret))
 
 
-@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
-def _kahan_sum_impl(x, block_rows, interpret):
-    x2 = _to_blocked_2d(x, block_rows)
-    return _ksum.kahan_sum_blocked(x2, block_rows=block_rows,
-                                   interpret=interpret)
+@functools.partial(jax.jit,
+                   static_argnames=("block_rows", "unroll", "interpret"))
+def _kahan_sum_impl(x, block_rows, unroll, interpret):
+    flat = x.reshape(-1)
+    (out,) = engine.fused_reduce_flat(
+        (flat,), outputs=("sum",), unroll=unroll,
+        block_elems=_block_elems(block_rows, unroll, flat.shape[0]),
+        interpret=interpret)
+    return out
 
 
-def kahan_sum(x: jax.Array, *, block_rows: int = 512,
+def kahan_sum(x: jax.Array, *, block_rows: int | None = None,
+              unroll: int | None = None,
               interpret: bool | None = None) -> jax.Array:
     """Compensated full-array sum -> scalar."""
-    br = _pick_block_rows(x.size, block_rows)
-    return _kahan_sum_impl(x, br, _auto_interpret(interpret))
+    return _kahan_sum_impl(x, block_rows, unroll, _auto_interpret(interpret))
 
 
-@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
-def _naive_dot_impl(x, y, block_rows, interpret):
-    x2 = _to_blocked_2d(x, block_rows)
-    y2 = _to_blocked_2d(y, block_rows)
-    return _ndot.naive_dot_blocked(x2, y2, block_rows=block_rows,
-                                   interpret=interpret)
+@functools.partial(jax.jit,
+                   static_argnames=("block_rows", "unroll", "interpret"))
+def _naive_dot_impl(x, y, block_rows, unroll, interpret):
+    flat_x, flat_y = x.reshape(-1), y.reshape(-1)
+    (out,) = engine.fused_reduce_flat(
+        (flat_x, flat_y), outputs=("dot",), unroll=unroll, compensated=False,
+        block_elems=_block_elems(block_rows, unroll, flat_x.shape[0]),
+        interpret=interpret)
+    return out
 
 
-def naive_dot(x: jax.Array, y: jax.Array, *, block_rows: int = 256,
+def naive_dot(x: jax.Array, y: jax.Array, *, block_rows: int | None = None,
+              unroll: int | None = None,
               interpret: bool | None = None) -> jax.Array:
     """Baseline (uncompensated) scalar product -> scalar."""
     assert x.shape == y.shape
-    br = _pick_block_rows(x.size, block_rows)
-    return _naive_dot_impl(x, y, br, _auto_interpret(interpret))
+    return _naive_dot_impl(x, y, block_rows, unroll,
+                           _auto_interpret(interpret))
 
+
+# ------------------------------------------------------------ fused -------
+
+@functools.partial(jax.jit,
+                   static_argnames=("outputs", "unroll", "interpret",
+                                    "has_y"))
+def _fused_reduce_impl(x, y, outputs, unroll, interpret, has_y):
+    flat_x = x.reshape(-1)
+    ops = (flat_x, y.reshape(-1)) if has_y else (flat_x,)
+    outs = engine.fused_reduce_flat(ops, outputs=outputs, unroll=unroll,
+                                    interpret=interpret)
+    return dict(zip(outputs, outs))
+
+
+def fused_reduce(x: jax.Array, y: jax.Array | None = None, *,
+                 outputs=("sum", "sumsq", "maxabs"),
+                 unroll: int | None = None,
+                 interpret: bool | None = None) -> dict[str, jax.Array]:
+    """One streaming pass -> {output: scalar} for any subset of
+    ``dot | sum | sumsq | max | maxabs`` (``dot`` needs ``y``).
+
+    HBM traffic is paid once for the whole statistic family — e.g. the
+    gradient-norm + max-|g| pair in ``repro.optim`` or the pre-reduce
+    shard statistics in ``repro.distributed.collectives``.
+    """
+    outputs = tuple(outputs)
+    if "dot" in outputs and y is None:
+        raise ValueError("'dot' output requires the second operand y")
+    if y is not None:
+        assert x.shape == y.shape
+    else:
+        y = x  # placeholder operand; has_y=False keeps it out of the call
+    return _fused_reduce_impl(x, y, outputs, unroll,
+                              _auto_interpret(interpret),
+                              "dot" in outputs)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("outputs", "unroll", "interpret",
+                                    "has_y"))
+def _batched_fused_impl(x2, y2, outputs, unroll, interpret, has_y):
+    ops = (x2, y2) if has_y else (x2,)
+    outs = engine.fused_reduce_rows(ops, outputs=outputs, unroll=unroll,
+                                    interpret=interpret)
+    return dict(zip(outputs, outs))
+
+
+def batched_fused_reduce(x: jax.Array, y: jax.Array | None = None, *,
+                         outputs=("sum", "sumsq", "maxabs"),
+                         unroll: int | None = None,
+                         interpret: bool | None = None
+                         ) -> dict[str, jax.Array]:
+    """Row-wise fused reduction: (B, N) -> {output: (B,)} in one launch."""
+    assert x.ndim == 2, x.shape
+    outputs = tuple(outputs)
+    if "dot" in outputs and y is None:
+        raise ValueError("'dot' output requires the second operand y")
+    if y is not None:
+        assert x.shape == y.shape
+    else:
+        y = x
+    return _batched_fused_impl(x, y, outputs, unroll,
+                               _auto_interpret(interpret),
+                               "dot" in outputs)
+
+
+def batched_kahan_dot(x: jax.Array, y: jax.Array, *,
+                      unroll: int | None = None,
+                      interpret: bool | None = None) -> jax.Array:
+    """Many independent compensated dots in one launch:
+    (B, N) x (B, N) -> (B,)."""
+    assert x.ndim == 2 and x.shape == y.shape, (x.shape, y.shape)
+    return batched_fused_reduce(x, y, outputs=("dot",), unroll=unroll,
+                                interpret=interpret)["dot"]
+
+
+# ------------------------------------------------------------ acc ---------
 
 @functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
 def _kahan_acc_impl(s, c, u, block_rows, interpret):
     shape = s.shape
-    s2 = _to_blocked_2d(s, block_rows)
-    c2 = _to_blocked_2d(c, block_rows)
-    u2 = _to_blocked_2d(u, block_rows)
-    ns, nc = _kacc.kahan_acc_blocked(s2, c2, u2, block_rows=block_rows,
-                                     interpret=interpret)
-    n = s.size
-    return (ns.reshape(-1)[:n].reshape(shape), nc.reshape(-1)[:n].reshape(shape))
+    ns, nc = _kacc.kahan_acc_flat(s.reshape(-1), c.reshape(-1),
+                                  u.reshape(-1), block_rows=block_rows,
+                                  interpret=interpret)
+    return ns.reshape(shape), nc.reshape(shape)
 
 
 def kahan_accumulate(acc_sum: jax.Array, acc_carry: jax.Array,
@@ -109,6 +189,5 @@ def kahan_accumulate(acc_sum: jax.Array, acc_carry: jax.Array,
                      ) -> tuple[jax.Array, jax.Array]:
     """Elementwise compensated accumulate on arbitrary-shape arrays."""
     assert acc_sum.shape == acc_carry.shape == update.shape
-    br = _pick_block_rows(acc_sum.size, block_rows)
-    return _kahan_acc_impl(acc_sum, acc_carry, update, br,
+    return _kahan_acc_impl(acc_sum, acc_carry, update, block_rows,
                            _auto_interpret(interpret))

@@ -57,6 +57,30 @@ def accumulate_gradients(loss_fn: Callable, params: PyTree, batches: PyTree,
     return loss, grads, metrics
 
 
+def gradient_stats(grads: PyTree, *, interpret: bool | None = None
+                   ) -> dict[str, jax.Array]:
+    """Fused gradient statistics: {'global_norm', 'max_abs'} in ONE
+    streaming pass per leaf.
+
+    Uses the reduction engine's fused multi-reduction (compensated sumsq +
+    running max|g| share the same HBM read), then merges per-leaf partials
+    with TwoSum — so the monitored norm is compensated end to end and the
+    gradient tensor crosses memory once instead of once per statistic.
+    """
+    from repro.core import kahan as K
+    from repro.kernels import ops
+
+    s = jnp.float32(0)
+    c = jnp.float32(0)
+    max_abs = jnp.float32(0)
+    for g in jax.tree.leaves(grads):
+        st = ops.fused_reduce(g, outputs=("sumsq", "maxabs"),
+                              interpret=interpret)
+        s, c = K.neumaier_step(s, c, st["sumsq"].astype(jnp.float32))
+        max_abs = jnp.maximum(max_abs, st["maxabs"].astype(jnp.float32))
+    return {"global_norm": jnp.sqrt(s + c), "max_abs": max_abs}
+
+
 def split_microbatches(batch: PyTree, n_micro: int) -> PyTree:
     """[B, ...] -> [n_micro, B/n_micro, ...] on every leaf."""
     def split(x):

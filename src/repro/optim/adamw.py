@@ -101,14 +101,35 @@ def update(grads: PyTree, state: AdamWState, params: PyTree,
                                   carry=new_carry, master=new_master)
 
 
-def global_norm(tree: PyTree) -> jax.Array:
+def global_norm(tree: PyTree, *, fused: bool = False,
+                interpret: bool | None = None) -> jax.Array:
+    """Global L2 norm of a pytree.
+
+    ``fused=True`` routes each leaf through the reduction engine's fused
+    compensated sum-of-squares kernel (one streaming pass per leaf, no
+    intermediate square array materialized, per-leaf partials merged with
+    TwoSum) — delegated to ``accumulate.gradient_stats``, the single
+    implementation of that pass. The default jnp form is kept for
+    sharded/lowering contexts (dry-run mesh compilation) where a Pallas
+    call per leaf is unnecessary cost.
+    """
+    if fused:
+        from repro.optim import accumulate
+        return accumulate.gradient_stats(tree,
+                                         interpret=interpret)["global_norm"]
     return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
                         for g in jax.tree.leaves(tree)))
 
 
-def clip_by_global_norm(grads: PyTree, max_norm: float
+def clip_by_global_norm(grads: PyTree, max_norm: float, *,
+                        fused: bool = False,
+                        norm: jax.Array | None = None,
+                        interpret: bool | None = None
                         ) -> tuple[PyTree, jax.Array]:
-    norm = global_norm(grads)
+    """Clip to ``max_norm``. Pass a precomputed ``norm`` (e.g. from
+    ``accumulate.gradient_stats``) to avoid recomputing it."""
+    if norm is None:
+        norm = global_norm(grads, fused=fused, interpret=interpret)
     scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
     return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
                                    ).astype(g.dtype), grads), norm

@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels import ops
 from repro.models import api
 from repro.models.config import ModelConfig
 
@@ -29,8 +30,33 @@ class Request:
     max_new_tokens: int
     eos_id: int | None = None
     output: list = field(default_factory=list)
+    logprobs: list = field(default_factory=list)   # per emitted token
     slot: int | None = None
     done: bool = False
+
+
+@jax.jit
+def _logit_stats(logits: jax.Array, tokens: jax.Array
+                 ) -> dict[str, jax.Array]:
+    """Per-row logit statistics for the whole batch in ONE fused engine
+    pass: running max (for the stable logsumexp), compensated sum and
+    sum-of-squares (mean / RMS health metrics). The logits cross memory
+    once for all four statistics instead of once per jnp reduction.
+
+    ``tokens`` (B,) selects each row's chosen token; the logprob gather
+    happens device-side so only (B,)-sized results ever reach the host.
+    """
+    l32 = logits.astype(jnp.float32)
+    st = ops.batched_fused_reduce(l32, outputs=("max", "sum", "sumsq"))
+    # Second (transformed) pass for the exp-sum: logsumexp = m + log Σe^(l-m).
+    sumexp = ops.batched_fused_reduce(
+        jnp.exp(l32 - st["max"][:, None]), outputs=("sum",))["sum"]
+    lse = st["max"] + jnp.log(sumexp)
+    chosen = jnp.take_along_axis(l32, tokens[:, None], axis=-1)[:, 0]
+    vocab = logits.shape[-1]
+    return {"logprob": chosen - lse, "logsumexp": lse, "max": st["max"],
+            "mean": st["sum"] / vocab,
+            "rms": jnp.sqrt(st["sumsq"] / vocab)}
 
 
 class DecodeEngine:
@@ -72,6 +98,9 @@ class DecodeEngine:
         logits, one_cache = self._prefill(self.params, batch)
         first = int(jnp.argmax(logits[0]))
         req.output.append(first)
+        stats = _logit_stats(logits.reshape(1, -1),
+                             jnp.asarray([first], jnp.int32))
+        req.logprobs.append(float(stats["logprob"][0]))
         self.caches = self._insert(self.caches, one_cache,
                                    jnp.asarray(slot))
         self._next_tokens = self._next_tokens.at[slot, 0].set(first)
@@ -83,11 +112,20 @@ class DecodeEngine:
             return
         logits, self.caches = self._decode(self.params, self._next_tokens,
                                            self.caches)
-        tokens = np.asarray(jnp.argmax(logits, axis=-1))
+        rows = logits.reshape(logits.shape[0], -1)
+        tokens_dev = jnp.argmax(rows, axis=-1).astype(jnp.int32)
+        # Fused logprob/metric pass: one batched engine launch covers every
+        # slot's chosen-token logprob, logsumexp and health stats. Only
+        # (B,)-sized arrays cross to the host — never the full logits.
+        stats = _logit_stats(rows, tokens_dev)
+        tokens = np.asarray(tokens_dev)
+        logprobs = np.asarray(stats["logprob"])
+        self.last_logit_stats = {k: np.asarray(v) for k, v in stats.items()}
         retired = []
         for slot, req in self._active.items():
             tok = int(tokens[slot])
             req.output.append(tok)
+            req.logprobs.append(float(logprobs[slot]))
             self._next_tokens = self._next_tokens.at[slot, 0].set(tok)
             if (len(req.output) >= req.max_new_tokens
                     or (req.eos_id is not None and tok == req.eos_id)):

@@ -52,7 +52,11 @@ class Trainer:
                  global_batch: int = 8, lr: float = 3e-4,
                  opt_kahan: bool = True, n_microbatches: int = 1,
                  ckpt_dir: str | None = None, ckpt_every: int = 50,
-                 warmup: int = 100, total_steps: int = 1000,
+                 # Warmup sized for this repo's runs (CLI default 100
+                 # steps, smoke tests ~25): the old default of 100 kept
+                 # short runs inside warmup forever (lr ~ 0, no learning).
+                 warmup: int = 10, total_steps: int = 1000,
+                 fused_grad_stats: bool = True,
                  seed: int = 0):
         self.cfg = cfg
         self.seq_len = seq_len
@@ -61,9 +65,13 @@ class Trainer:
         self.pipeline = SyntheticTokenPipeline(cfg, seq_len, global_batch)
         schedule = lambda s: adamw.warmup_cosine(s, warmup=warmup,
                                                  total=total_steps)
+        # Single-host trainer: the fused engine grad-stats pass (clip norm
+        # + max|g| in one HBM read) is on by default; the sharded dry-run
+        # path builds its own step with the plain jnp norm.
         self._step_fn = jax.jit(step_builders.build_train_step(
             cfg, self.opt_cfg, schedule=schedule,
-            n_microbatches=n_microbatches), donate_argnums=(0, 1))
+            n_microbatches=n_microbatches,
+            fused_grad_stats=fused_grad_stats), donate_argnums=(0, 1))
         self.ckpt = (CheckpointManager(ckpt_dir, keep_last=3)
                      if ckpt_dir else None)
         self.ckpt_every = ckpt_every

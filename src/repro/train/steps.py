@@ -17,8 +17,16 @@ def build_train_step(cfg: ModelConfig, opt_cfg: adamw.AdamWConfig, *,
                      clip_norm: float = 1.0,
                      schedule: Callable | None = None,
                      n_microbatches: int = 1,
-                     kahan_grad_acc: bool = True) -> Callable:
-    """(params, opt_state, batch, step) -> (params, opt_state, metrics)."""
+                     kahan_grad_acc: bool = True,
+                     fused_grad_stats: bool = False) -> Callable:
+    """(params, opt_state, batch, step) -> (params, opt_state, metrics).
+
+    ``fused_grad_stats=True`` computes the clip norm with the reduction
+    engine's fused compensated sumsq kernel and adds a ``grad_maxabs``
+    metric from the SAME streaming pass (one HBM read of the gradients
+    for both statistics). Default off for sharded/dry-run lowering paths,
+    which keep the plain jnp norm.
+    """
     loss_fn = api.loss_fn(cfg)
 
     def train_step(params, opt_state, batch, step):
@@ -30,7 +38,13 @@ def build_train_step(cfg: ModelConfig, opt_cfg: adamw.AdamWConfig, *,
         else:
             (loss, metrics), grads = jax.value_and_grad(
                 loss_fn, has_aux=True)(params, batch)
-        grads, gnorm = adamw.clip_by_global_norm(grads, clip_norm)
+        if fused_grad_stats:
+            gstats = accumulate.gradient_stats(grads)
+            grads, gnorm = adamw.clip_by_global_norm(
+                grads, clip_norm, norm=gstats["global_norm"])
+            metrics = dict(metrics, grad_maxabs=gstats["max_abs"])
+        else:
+            grads, gnorm = adamw.clip_by_global_norm(grads, clip_norm)
         lr_scale = schedule(step) if schedule is not None else 1.0
         new_params, new_state = adamw.update(grads, opt_state, params,
                                              opt_cfg, lr_scale)

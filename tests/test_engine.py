@@ -1,0 +1,233 @@
+"""Reduction-engine validation: unroll sweep, masked tail, fused families,
+batched rows — all against the sequential scan reference in core/kahan.py
+and the fsum ground truth."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import kahan
+from repro.ecm import tpu
+from repro.kernels import engine, ops, ref
+
+F32_EPS = float(np.finfo(np.float32).eps)
+
+# Odd / tiny / non-multiple-of-1024 sizes: all exercise the in-kernel
+# masked-tail path (the engine never zero-pads on the host).
+SIZES = [1, 3, 8, 100, 127, 129, 1000, 1024, 1025, 4097, 32768, 33000,
+         100_000]
+UNROLLS = [1, 2, 4, 8]
+
+
+def _mixed(n, seed, span=8):
+    rng = np.random.default_rng(seed)
+    return (rng.standard_normal(n)
+            * 2.0 ** rng.integers(-span, span, n)).astype(np.float32)
+
+
+def _ulp_bound(ref_val, abs_terms, k=2):
+    """k ulps of the reference plus the compensated-rounding floor."""
+    return (k * float(np.spacing(np.float32(abs(ref_val)) + 1e-30))
+            + 8 * F32_EPS**2 * abs_terms + 1e-30)
+
+
+# ------------------------------------------------------ scan agreement ----
+
+@pytest.mark.parametrize("n", SIZES)
+@pytest.mark.parametrize("unroll", UNROLLS)
+def test_dot_matches_scan_reference(n, unroll):
+    """Every (size, U) engine variant agrees with the core/kahan.py scan
+    reference to <= 2 ulp — both are compensated, so reordering the
+    accumulation across U streams only moves O(eps^2) terms."""
+    x = _mixed(n, seed=n * 31 + unroll)
+    y = _mixed(n, seed=n * 37 + unroll + 1)
+    got = float(ops.kahan_dot(jnp.asarray(x), jnp.asarray(y),
+                              unroll=unroll, interpret=True))
+    want = float(jax.jit(kahan.kahan_dot)(jnp.asarray(x), jnp.asarray(y)))
+    abs_terms = float(np.sum(np.abs(x.astype(np.float64) * y.astype(np.float64))))
+    assert abs(got - want) <= _ulp_bound(want, abs_terms), (n, unroll)
+
+
+@pytest.mark.parametrize("n", SIZES)
+@pytest.mark.parametrize("unroll", UNROLLS)
+def test_sum_matches_scan_reference(n, unroll):
+    x = _mixed(n, seed=n * 41 + unroll)
+    got = float(ops.kahan_sum(jnp.asarray(x), unroll=unroll,
+                              interpret=True))
+    want = float(jax.jit(lambda v: kahan.kahan_sum(v, axis=0))(jnp.asarray(x)))
+    abs_terms = float(np.sum(np.abs(x.astype(np.float64))))
+    assert abs(got - want) <= _ulp_bound(want, abs_terms), (n, unroll)
+
+
+@pytest.mark.parametrize("n", [100, 4097, 33000])
+def test_dot_exact_bound_all_unrolls(n):
+    """Engine output within the Neumaier bound of the fsum ground truth at
+    every unroll, and all unrolls agree with each other to the same bound."""
+    x = _mixed(n, seed=7)
+    y = _mixed(n, seed=8)
+    exact = ref.exact_dot(x, y)
+    abs_terms = float(np.sum(np.abs(x.astype(np.float64) * y.astype(np.float64))))
+    outs = [float(ops.kahan_dot(jnp.asarray(x), jnp.asarray(y), unroll=u,
+                                interpret=True)) for u in UNROLLS]
+    bound = 8 * F32_EPS * abs_terms + 1e-25
+    for u, got in zip(UNROLLS, outs):
+        assert abs(got - exact) <= bound, (u, got, exact)
+    assert max(outs) - min(outs) <= 2 * bound
+
+
+# ------------------------------------------------------ masked tail -------
+
+@pytest.mark.parametrize("n", [1, 5, 1023, 1025, 4095, 4097, 50_001])
+def test_masked_tail_independent_of_block(n):
+    """Non-multiple-of-block sizes: result must not depend on how much of
+    the final block is masked (no contamination from the unspecified
+    Pallas tail padding)."""
+    x = _mixed(n, seed=n)
+    ref_val = float(jax.jit(lambda v: kahan.kahan_sum(v, axis=0))(jnp.asarray(x)))
+    abs_terms = float(np.sum(np.abs(x.astype(np.float64))))
+    for block_rows in (8, 64, 512):
+        got = float(ops.kahan_sum(jnp.asarray(x), block_rows=block_rows,
+                                  interpret=True))
+        assert abs(got - ref_val) <= _ulp_bound(ref_val, abs_terms), \
+            (n, block_rows)
+
+
+# ------------------------------------------------------ dtype policy ------
+
+@pytest.mark.parametrize("unroll", UNROLLS)
+def test_bf16_promotes_to_f32(unroll):
+    n = 4097
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.standard_normal(n), jnp.bfloat16)
+    y = jnp.asarray(rng.standard_normal(n), jnp.bfloat16)
+    got = ops.kahan_dot(x, y, unroll=unroll, interpret=True)
+    assert got.dtype == jnp.float32
+    # accumulation happens in f32: exact products of bf16 inputs
+    exact = ref.exact_dot(np.asarray(x, np.float32),
+                          np.asarray(y, np.float32))
+    abs_terms = float(np.sum(np.abs(np.float64(np.asarray(x, np.float32))
+                                    * np.float64(np.asarray(y, np.float32)))))
+    assert abs(float(got) - exact) <= 8 * F32_EPS * abs_terms + 1e-25
+
+
+# ------------------------------------------------------ fused family ------
+
+def test_fused_outputs_bitwise_match_single():
+    """A fused pass must produce bit-identical results to single-output
+    calls: same engine, same block schedule, same accumulator streams."""
+    n = 5000
+    x = _mixed(n, seed=11)
+    y = _mixed(n, seed=12)
+    xd, yd = jnp.asarray(x), jnp.asarray(y)
+    fused = ops.fused_reduce(xd, yd, outputs=("dot", "sum", "sumsq",
+                                              "max", "maxabs"),
+                             interpret=True)
+    assert float(fused["dot"]) == float(ops.kahan_dot(xd, yd,
+                                                      interpret=True))
+    assert float(fused["sum"]) == float(ops.kahan_sum(xd, interpret=True))
+    assert float(fused["max"]) == float(x.max())
+    assert float(fused["maxabs"]) == float(np.abs(x).max())
+    exact_sq = float(np.sum(x.astype(np.float64) ** 2))
+    assert abs(float(fused["sumsq"]) - exact_sq) <= \
+        8 * F32_EPS * exact_sq + 1e-25
+
+
+def test_fused_nrm2_accuracy():
+    n = 33000
+    x = _mixed(n, seed=21, span=4)
+    got = float(jnp.sqrt(ops.fused_reduce(jnp.asarray(x),
+                                          outputs=("sumsq",),
+                                          interpret=True)["sumsq"]))
+    want = float(np.linalg.norm(np.float64(x)))
+    assert abs(got - want) <= 4 * F32_EPS * want + 1e-30
+
+
+# ------------------------------------------------------ batched rows ------
+
+@pytest.mark.parametrize("shape", [(1, 100), (4, 1024), (5, 4097),
+                                   (3, 33000)])
+def test_batched_rows_match_flat(shape):
+    """Each row of the batched variant is bit-identical to the flat engine
+    on that row (same block schedule per row)."""
+    b, n = shape
+    rng = np.random.default_rng(b * 100 + 7)
+    x = rng.standard_normal((b, n)).astype(np.float32)
+    y = rng.standard_normal((b, n)).astype(np.float32)
+    got = np.asarray(ops.batched_kahan_dot(jnp.asarray(x), jnp.asarray(y),
+                                           interpret=True))
+    for i in range(b):
+        flat = float(ops.kahan_dot(jnp.asarray(x[i]), jnp.asarray(y[i]),
+                                   interpret=True))
+        assert got[i] == flat, i
+
+
+def test_batched_fused_stats():
+    b, n = 6, 2500
+    rng = np.random.default_rng(9)
+    x = rng.standard_normal((b, n)).astype(np.float32)
+    st = ops.batched_fused_reduce(jnp.asarray(x),
+                                  outputs=("max", "sum", "sumsq"),
+                                  interpret=True)
+    np.testing.assert_array_equal(np.asarray(st["max"]), x.max(axis=1))
+    np.testing.assert_allclose(np.asarray(st["sum"]),
+                               np.float64(x).sum(axis=1), rtol=1e-6,
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(st["sumsq"]),
+                               (x.astype(np.float64) ** 2).sum(axis=1), rtol=1e-6)
+
+
+# ------------------------------------------------------ naive mode --------
+
+@pytest.mark.parametrize("n", [100, 1025, 33000])
+def test_naive_mode_matches_jnp(n):
+    rng = np.random.default_rng(n)
+    x = rng.standard_normal(n).astype(np.float32)
+    y = rng.standard_normal(n).astype(np.float32)
+    got = float(ops.naive_dot(jnp.asarray(x), jnp.asarray(y),
+                              interpret=True))
+    np.testing.assert_allclose(got, float(np.dot(x, y)), rtol=1e-5,
+                               atol=1e-5)
+
+
+# ------------------------------------------------------ engine plumbing ---
+
+def test_pick_block_elems_invariants():
+    for n in (1, 100, 10_000, 10_000_000):
+        for u in UNROLLS:
+            be = engine.pick_block_elems(n, u)
+            assert be % (u * engine.TILE) == 0
+            assert be >= u * engine.TILE
+
+
+def test_default_unroll_table():
+    assert engine.default_unroll(("dot",)) in (2, 4, 8)
+    assert engine.default_unroll(("maxabs",)) >= 1
+
+
+# ------------------------------------------------------ ECM unroll model --
+
+def test_ecm_unroll_latency_transition():
+    """The unroll-aware ECM term reproduces the paper's shape: the
+    un-unrolled compensated dot is latency-bound and slower; past
+    min_free_unroll it is data-bound and free (ratio == 1)."""
+    p1 = tpu.predict_level(tpu.KAHAN_DOT, "HBM", unroll=1)
+    assert p1.bound == "latency"
+    assert tpu.kahan_overhead("HBM", unroll=1) > 1.5
+    u_free = tpu.min_free_unroll()
+    assert 2 <= u_free <= 8
+    pfree = tpu.predict_level(tpu.KAHAN_DOT, "HBM", unroll=u_free)
+    assert pfree.bound == "data"
+    assert abs(tpu.kahan_overhead("HBM", unroll=u_free) - 1.0) < 1e-9
+    # infinite-unroll limit (back-compat default) unchanged: free at HBM
+    assert abs(tpu.kahan_overhead("HBM") - 1.0) < 1e-9
+    # throughput prediction is monotone in U
+    ups = [tpu.predict_level(tpu.KAHAN_DOT, "HBM", unroll=u).updates_per_s
+           for u in (1, 2, 4, 8)]
+    assert all(b >= a for a, b in zip(ups, ups[1:]))
+
+
+def test_ecm_default_unroll_is_free():
+    """The engine's autotuned default U must sit at or past the ECM
+    free-compensation threshold."""
+    assert engine.default_unroll(("dot",)) >= tpu.min_free_unroll()

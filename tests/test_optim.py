@@ -123,3 +123,28 @@ def test_kahan_grad_accumulation_long_chain():
     eps = np.finfo(np.float32).eps
     assert err_c <= 8 * eps * np.abs(gs).sum() / n_micro + 1e-12
     assert err_c <= err_n + 1e-12          # adversarial: naive must not win
+
+
+def test_fused_gradient_stats_match_plain():
+    """accumulate.gradient_stats (one fused engine pass per leaf) must
+    agree with the plain jnp global norm and per-leaf max|g|."""
+    rng = np.random.default_rng(5)
+    tree = {"a": jnp.asarray(rng.standard_normal((257, 33)), jnp.float32),
+            "b": [jnp.asarray(rng.standard_normal(1000) * 100, jnp.float32),
+                  jnp.asarray(rng.standard_normal((8,)), jnp.bfloat16)]}
+    st = accumulate.gradient_stats(tree, interpret=True)
+    plain = adamw.global_norm(tree)
+    np.testing.assert_allclose(float(st["global_norm"]), float(plain),
+                               rtol=1e-6)
+    want_max = max(float(jnp.max(jnp.abs(g.astype(jnp.float32))))
+                   for g in jax.tree.leaves(tree))
+    assert float(st["max_abs"]) == want_max
+    # fused clip path agrees with the plain one
+    clipped_f, n_f = adamw.clip_by_global_norm(tree, 1.0, fused=True,
+                                               interpret=True)
+    clipped_p, n_p = adamw.clip_by_global_norm(tree, 1.0)
+    np.testing.assert_allclose(float(n_f), float(n_p), rtol=1e-6)
+    for a, b in zip(jax.tree.leaves(clipped_f), jax.tree.leaves(clipped_p)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), rtol=1e-5,
+                                   atol=1e-7)
