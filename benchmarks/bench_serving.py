@@ -1,0 +1,95 @@
+"""Paged-KV serving benchmark: tok/s and KV-bytes-touched vs. the
+contiguous-cache baseline, across slot counts and prompt-length mixes.
+
+The traffic model is ECM-style analytic accounting (the paper's method:
+count the bytes each step must move, don't guess): every decode step a
+slot touches ``ceil(len/block) * block`` cached tokens under paging vs. a
+fixed ``max_context`` row under the contiguous layout, times the model's
+per-token KV bytes (summed over layers/pools by ``KVCache.token_bytes``).
+The engine records both counters as it runs (``DecodeEngine.kv_stats``),
+so the reported reduction comes from the actual scheduled workload —
+admission order, chunked prefill and early retirement included. It is
+the LAYOUT bound: the TPU paged-decode kernel moves exactly these
+blocks; the pure-JAX gather fallback used on CPU (and the chunk-prefill
+gather) materializes full virtual rows, so wall-clock tok/s here is a
+scheduling metric, not a proxy for the traffic column.
+
+Shapes are CPU-tiny so the CI smoke step (benchmarks/run.py --only
+bench_serving --json ...) produces a perf-trajectory point on every PR.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, reduced
+from repro.models import api, common
+from repro.serving.engine import DecodeEngine, Request
+
+MAX_CONTEXT = 128
+BLOCK = 16
+MAX_NEW = 8
+
+
+def _prompts(kind: str, rng) -> list[list[int]]:
+    short = lambda: rng.integers(1, 250, rng.integers(2, 6)).tolist()
+    long = lambda: rng.integers(1, 250, rng.integers(60, 100)).tolist()
+    if kind == "short":
+        return [short() for _ in range(8)]
+    if kind == "long":
+        return [long() for _ in range(4)]
+    # mixed: the workload where contiguous reservation hurts most — every
+    # short request would pay the long requests' max_context row
+    return [short() if i % 2 else long() for i in range(6)]
+
+
+_MIX_SEED = {"short": 1, "mixed": 2, "long": 3}
+
+
+def _run_mix(cfg, params, kind: str, slots: int) -> tuple:
+    # fixed seed per cell: the CI perf-trajectory JSON must measure the
+    # SAME workload every run (hash() is salted per process)
+    rng = np.random.default_rng(100 * _MIX_SEED[kind] + slots)
+    engine = DecodeEngine(cfg, params, max_slots=slots,
+                          max_context=MAX_CONTEXT, block_size=BLOCK,
+                          prefill_chunk=32)
+    reqs = [Request(rid=i, prompt=p, max_new_tokens=MAX_NEW)
+            for i, p in enumerate(_prompts(kind, rng))]
+    for r in reqs:
+        engine.submit(r)
+    t0 = time.perf_counter()
+    engine.run_until_done()
+    dt = time.perf_counter() - t0
+    assert all(r.done for r in reqs)
+    toks = sum(len(r.output) for r in reqs)
+    st = engine.kv_stats
+    steps = max(st["decode_steps"] + st["prefill_chunks"], 1)
+    reduction = st["contiguous_bytes"] / max(st["paged_bytes"], 1)
+    return (f"serving/{kind}/slots={slots}",
+            f"{dt * 1e6 / steps:.0f}",
+            f"tok_s={toks / dt:.1f}"
+            f" paged_kv_kib={st['paged_bytes'] / 1024:.0f}"
+            f" contig_kv_kib={st['contiguous_bytes'] / 1024:.0f}"
+            f" kv_reduction={reduction:.2f}x")
+
+
+def run() -> list[tuple]:
+    cfg = reduced(get_config("qwen1.5-0.5b")).with_(num_layers=2)
+    params = common.init_params(api.schema(cfg), jax.random.key(0))
+    rows = []
+    for kind in ("short", "mixed", "long"):
+        for slots in (2, 4):
+            rows.append(_run_mix(cfg, params, kind, slots))
+    return rows
+
+
+def main() -> None:
+    for r in run():
+        print(",".join(str(c) for c in r))
+
+
+if __name__ == "__main__":
+    main()

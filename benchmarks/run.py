@@ -8,16 +8,25 @@
   bench_scaling           paper Figs. 8-9 analog (saturation curves)
   bench_tpu_kahan         DESIGN.md §2.3 (the paper's question on v5e)
   bench_collectives       compensated all-reduce numerics + bandwidth model
+  bench_serving           paged-KV engine: tok/s + KV-bytes-touched
   roofline_report         §Roofline table from the dry-run artifacts
+
+CLI:
+  --only SUBSTR   run only modules whose name contains SUBSTR (repeatable)
+  --json PATH     also write rows as JSON [{name, us_per_call, derived}]
+                  — the CI smoke step's perf-trajectory artifact
 """
 
 from __future__ import annotations
 
+import argparse
+import json
 import traceback
 
 from benchmarks import (bench_accuracy, bench_collectives,
                         bench_ecm_predictions, bench_kernel_throughput,
-                        bench_scaling, bench_tpu_kahan, roofline_report)
+                        bench_scaling, bench_serving, bench_tpu_kahan,
+                        roofline_report)
 
 MODULES = [
     bench_ecm_predictions,
@@ -26,26 +35,51 @@ MODULES = [
     bench_scaling,
     bench_tpu_kahan,
     bench_collectives,
+    bench_serving,
 ]
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", action="append", default=None, metavar="SUBSTR",
+                    help="run only modules whose name contains SUBSTR")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write results as JSON to PATH")
+    args = ap.parse_args()
+
+    modules = MODULES
+    if args.only:
+        modules = [m for m in MODULES
+                   if any(s in m.__name__ for s in args.only)]
+        if not modules:
+            raise SystemExit(f"--only {args.only}: no module matches "
+                             f"(have {[m.__name__ for m in MODULES]})")
+
     print("name,us_per_call,derived")
+    collected = []
     failures = 0
-    for mod in MODULES:
+    for mod in modules:
         try:
             for row in mod.run():
                 print(",".join(str(c) for c in row), flush=True)
+                collected.append({"name": row[0],
+                                  "us_per_call": row[1],
+                                  "derived": row[2] if len(row) > 2 else ""})
         except Exception:
             failures += 1
             print(f"# FAILED {mod.__name__}")
             traceback.print_exc()
-    print("#")
-    print("# --- §Roofline table (from results/dryrun) ---")
-    try:
-        roofline_report.main()
-    except Exception:
-        traceback.print_exc()
+    if args.json is not None:
+        with open(args.json, "w") as f:
+            json.dump(collected, f, indent=1)
+        print(f"# wrote {len(collected)} rows to {args.json}")
+    if args.only is None:
+        print("#")
+        print("# --- §Roofline table (from results/dryrun) ---")
+        try:
+            roofline_report.main()
+        except Exception:
+            traceback.print_exc()
     if failures:
         raise SystemExit(failures)
 

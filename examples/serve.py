@@ -1,5 +1,5 @@
-"""Serving example: continuous-batching decode engine with staggered
-request arrival (slot reuse + mid-stream joins).
+"""Serving example: paged-KV continuous-batching engine with staggered
+request arrival (admission queue, chunked prefill, slot + block reuse).
 
     PYTHONPATH=src python examples/serve.py
 """
@@ -17,32 +17,40 @@ def main() -> None:
     cfg = reduced(get_config("llava-next-mistral-7b")).with_(vlm=None,
                                                              family="dense")
     params = common.init_params(api.schema(cfg), jax.random.key(0))
-    engine = DecodeEngine(cfg, params, max_slots=3, cache_size=128)
+    engine = DecodeEngine(cfg, params, max_slots=3, max_context=128,
+                          block_size=16, prefill_chunk=8)
 
     requests = [
         Request(rid=1, prompt=[12, 7, 99, 3], max_new_tokens=12),
         Request(rid=2, prompt=[5, 5, 5], max_new_tokens=8),
         Request(rid=3, prompt=[200, 40], max_new_tokens=10),
         Request(rid=4, prompt=[17, 2, 90, 33, 8], max_new_tokens=6),
+        # longer prompt: prefilled 8 tokens per step, interleaved with the
+        # others' decode steps instead of stalling them
+        Request(rid=5, prompt=list(range(40, 70)), max_new_tokens=4),
     ]
 
     t0 = time.time()
     engine.submit(requests[0])
     engine.submit(requests[1])
-    for step in range(60):
+    for step in range(120):
         engine.step()
-        if step == 3:                   # mid-stream join
-            engine.submit(requests[2])
-        if requests[1].done and requests[3].slot is None and engine._free:
-            engine.submit(requests[3])  # slot reuse after retirement
-        if all(r.done for r in requests):
+        if step == 3:                   # mid-stream joins; the admission
+            engine.submit(requests[2])  # queue holds whatever exceeds the
+            engine.submit(requests[3])  # slot pool until a slot retires
+            engine.submit(requests[4])
+        if not engine.num_unfinished:
             break
     dt = time.time() - t0
     total_tokens = sum(len(r.output) for r in requests)
     for r in requests:
-        print(f"request {r.rid}: prompt={r.prompt} -> {r.output}")
+        tail = "" if len(r.prompt) <= 6 else f"(+{len(r.prompt)-6} more)"
+        print(f"request {r.rid}: prompt={r.prompt[:6]}{tail} -> {r.output}")
+    st = engine.kv_stats
     print(f"\n{total_tokens} tokens in {dt:.2f}s "
-          f"({total_tokens/dt:.1f} tok/s, batched decode on CPU)")
+          f"({total_tokens/dt:.1f} tok/s, batched decode on CPU); "
+          f"KV bytes touched: {st['paged_bytes']/2**20:.2f} MiB paged vs "
+          f"{st['contiguous_bytes']/2**20:.2f} MiB contiguous")
 
 
 if __name__ == "__main__":

@@ -171,13 +171,13 @@ def batch_shardings(batch_struct: dict, mesh: Mesh, global_batch: int,
 
 def cache_spec_for(struct: jax.ShapeDtypeStruct, mesh: Mesh,
                    global_batch: int, *, stacked: int = 1) -> P:
-    """Sharding for one cache leaf.
+    """Sharding for one per-slot cache leaf (paged POOL leaves and block
+    tables take the dedicated branches in ``serve_cache_shardings``).
 
-    Cache leaves are (after optional leading layer-stack dims):
-      KV cache    [B, S, KV, DH]      -> batch over (pod,data) if divisible,
-                                         else S over (pod,data); heads over
+    Leaves are (after optional leading layer-stack dims):
+      cross-attn KV [B, Lm, KV, DH]   -> batch over (pod,data) if divisible,
+                                         else Lm over (pod,data); heads over
                                          model if divisible, else head_dim.
-      MLA latent  [B, S, C]           -> batch/S as above, C over model.
       SSD state   [B, H, N, P]        -> batch, then H over model.
       conv state  [B, W, C]           -> batch, C over model.
       lengths     [B]                 -> batch.
@@ -219,8 +219,15 @@ def serve_cache_shardings(cfg, cache_struct, mesh: Mesh, global_batch: int):
 
     The number of leading layer-stack dims is family/path dependent
     (hybrid's per-segment mamba states carry (n_seg, seg, ...) stacks).
+    Paged-cache leaves get dedicated treatment: the shared block pools
+    [stack, NB, bs, ...] must never shard their block/position axes
+    (block addressing is indirect — any rank may own any slot's block),
+    so they replicate except for a model split on a divisible feature
+    dim; block tables and lengths shard over batch only.
     """
     from jax.tree_util import tree_map_with_path
+
+    from repro.models.paged import POOL_KEYS
 
     def one(path, s):
         lead = 1
@@ -228,6 +235,30 @@ def serve_cache_shardings(cfg, cache_struct, mesh: Mesh, global_batch: int):
             names = {str(getattr(p, "key", "")) for p in path}
             if "mamba" in names:
                 lead = 2
+        name = str(getattr(path[-1], "key", path[-1]))
+        if name in POOL_KEYS:
+            # [stack, NB, bs, *feat]: partition the pool's BLOCK axis over
+            # the data axes when it divides (block addressing is indirect,
+            # GSPMD turns the table gather into collectives; per-chip KV
+            # memory stays 1/data of the pool — dryrun pads NB to make
+            # this divide, see paged.padded_num_blocks). Never shard the
+            # within-block position axis.
+            dims: list = [None] * len(s.shape)
+            ba = tuple(a for a in ("pod", "data") if a in mesh.shape)
+            if ba and s.shape[lead] % _axis_size(mesh, ba) == 0:
+                dims[lead] = ba if len(ba) > 1 else ba[0]
+            model = mesh.shape.get("model", 1)
+            for i in range(lead + 2, len(s.shape)):
+                if model > 1 and s.shape[i] % model == 0:
+                    dims[i] = "model"
+                    break
+            return NamedSharding(mesh, P(*dims))
+        if name == "block_table":
+            dims = [None] * len(s.shape)
+            ba = batch_axes(mesh, global_batch)
+            if ba and s.shape[lead] % _axis_size(mesh, ba) == 0:
+                dims[lead] = ba if len(ba) > 1 else ba[0]
+            return NamedSharding(mesh, P(*dims))
         return NamedSharding(mesh, cache_spec_for(s, mesh, global_batch,
                                                   stacked=lead))
     return tree_map_with_path(one, cache_struct)

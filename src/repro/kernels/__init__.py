@@ -36,6 +36,7 @@ Public entry points:
   ops.batched_fused_reduce       (B, N) -> per-row statistic family
   ops.batched_kahan_dot          many independent dots per launch
   ops.kahan_accumulate           fused elementwise compensated accumulate
+  ops.paged_decode_attention     block-table decode attention (serving)
   kahan_matmul                   compensated K-loop matmul accumulation
   flash_attention                VMEM-resident online softmax
 
@@ -49,3 +50,5 @@ v5e vreg/VMEM geometry.
 from repro.kernels import engine, ops, ref  # noqa: F401
 from repro.kernels.flash_attention import flash_attention_pallas  # noqa: F401
 from repro.kernels.kahan_matmul import kahan_matmul  # noqa: F401
+from repro.kernels.paged_attention import (  # noqa: F401
+    paged_decode_attention_pallas)

@@ -14,6 +14,13 @@ Grid: (batch·heads, nq, nk), sequential over nk with scratch carrying
 pl.when (Mosaic still schedules the DMA, but the MXU work is skipped —
 the packing optimization lives in the XLA path; see attention.py).
 
+Ragged sequence lengths are handled in-kernel: the grid rounds up with
+``pl.cdiv`` and the final partial tiles are masked against the true
+(lq, lk) via ``tile_mask`` — the same helper the paged-decode kernel
+(``paged_attention.py``) uses for its ragged per-sequence lengths — so no
+host-side padding of Q/K/V is ever materialized (the reduction engine's
+masked-tail idiom, engine.py).
+
 Validated in interpret mode against the pure-jnp oracle
 (tests/test_kernels_flash.py); ops.py exposes the jit wrapper.
 """
@@ -30,8 +37,31 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
+def tile_mask(q_start, k_start, qc: int, kc: int, *, causal: bool = False,
+              q_limit=None, k_limit=None):
+    """Boolean [qc, kc] validity mask for one score tile.
+
+    ``q_start``/``k_start`` are the tile's global offsets; ``q_limit`` /
+    ``k_limit`` are exclusive ragged bounds (dynamic scalars allowed —
+    the paged kernel passes a per-sequence length). Returns None when no
+    constraint applies, so callers can skip the select entirely.
+    """
+    mask = None
+    q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32, (qc, kc), 0)
+    k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, (qc, kc), 1)
+    if causal:
+        mask = q_pos >= k_pos
+    if q_limit is not None:
+        lim = q_pos < q_limit
+        mask = lim if mask is None else mask & lim
+    if k_limit is not None:
+        lim = k_pos < k_limit
+        mask = lim if mask is None else mask & lim
+    return mask
+
+
 def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
-                  scale: float, causal: bool, qc: int, kc: int):
+                  scale: float, causal: bool, qc: int, kc: int, lk: int):
     qi = pl.program_id(1)
     ki = pl.program_id(2)
     nk = pl.num_programs(2)
@@ -47,23 +77,35 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
         # block is live unless strictly above the diagonal
         run = (ki * kc) <= (qi * qc + qc - 1)
 
+    # Ragged tails: out-of-range K columns poison every query row, so they
+    # are masked in-kernel; out-of-range Q rows are private to their row
+    # (their garbage never mixes) and the partial out-block write drops
+    # them, so no q_limit term is needed.
+    mask = tile_mask(qi * qc, ki * kc, qc, kc, causal=causal,
+                     k_limit=lk if lk % kc else None)
+
     @pl.when(run)
     def _block():
         q = q_ref[0].astype(jnp.float32)          # [qc, d]
         k = k_ref[0].astype(jnp.float32)          # [kc, d]
         v = v_ref[0].astype(jnp.float32)          # [kc, dv]
+        if lk % kc:
+            # zero the tail rows: the out-of-bounds part of the last block
+            # is unspecified (NaN in interpret mode) and 0 · NaN would
+            # poison the p·V product even under a zero probability mask
+            kvalid = (ki * kc + jax.lax.broadcasted_iota(
+                jnp.int32, (kc, 1), 0)) < lk
+            k = jnp.where(kvalid, k, 0.0)
+            v = jnp.where(kvalid, v, 0.0)
         s = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())),
             preferred_element_type=jnp.float32) * scale   # [qc, kc]
-        if causal:
-            q_pos = qi * qc + jax.lax.broadcasted_iota(jnp.int32, (qc, kc), 0)
-            k_pos = ki * kc + jax.lax.broadcasted_iota(jnp.int32, (qc, kc), 1)
-            mask = q_pos >= k_pos
+        if mask is not None:
             s = jnp.where(mask, s, NEG_INF)
         m_prev = m_scr[...][:, :1]                 # [qc, 1]
         m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
         p = jnp.exp(s - m_new)
-        if causal:
+        if mask is not None:
             p = p * mask
         corr = jnp.exp(m_prev - m_new)             # [qc, 1]
         l_new = l_scr[...][:, :1] * corr + p.sum(axis=-1, keepdims=True)
@@ -85,17 +127,20 @@ def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
                            causal: bool = True, q_block: int = 256,
                            kv_block: int = 256,
                            interpret: bool = False) -> jax.Array:
-    """q/k/v: [BH, L, D] (batch×heads flattened). Returns [BH, Lq, Dv]."""
+    """q/k/v: [BH, L, D] (batch×heads flattened). Returns [BH, Lq, Dv].
+
+    Lq/Lk need not divide the block sizes — ragged tails are masked
+    in-kernel (tile_mask), never padded host-side.
+    """
     bh, lq, d = q.shape
     _, lk, dv = v.shape
     qc = min(q_block, lq)
     kc = min(kv_block, lk)
-    assert lq % qc == 0 and lk % kc == 0, (lq, qc, lk, kc)
-    nq, nk = lq // qc, lk // kc
+    nq, nk = pl.cdiv(lq, qc), pl.cdiv(lk, kc)
     scale = d ** -0.5
 
     kernel = functools.partial(_flash_kernel, scale=scale, causal=causal,
-                               qc=qc, kc=kc)
+                               qc=qc, kc=kc, lk=lk)
     return pl.pallas_call(
         kernel,
         grid=(bh, nq, nk),

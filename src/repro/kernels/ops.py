@@ -172,6 +172,33 @@ def batched_kahan_dot(x: jax.Array, y: jax.Array, *,
                                 interpret=interpret)["dot"]
 
 
+# ------------------------------------------------------------ paged -------
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _paged_decode_impl(q, kpool, vpool, table, lens, interpret):
+    from repro.kernels import paged_attention
+    return paged_attention.paged_decode_attention_pallas(
+        q, kpool, vpool, table, lens, interpret=interpret)
+
+
+def paged_decode_attention(q: jax.Array, kpool: jax.Array, vpool: jax.Array,
+                           block_table: jax.Array, lens: jax.Array, *,
+                           interpret: bool | None = None) -> jax.Array:
+    """Serving decode attention over block-paged KV (one token/sequence).
+
+    q: [B, Hq, D]; kpool/vpool: [num_blocks, bs, Hkv, Dh]; block_table:
+    [B, max_blocks]; lens: [B]. The kernel walks each sequence's block
+    table with scalar prefetch and keeps compensated (sum, carry) streams
+    for the softmax normalizer and output accumulator; see
+    ``repro.kernels.paged_attention``.
+    """
+    assert q.ndim == 3 and kpool.ndim == 4, (q.shape, kpool.shape)
+    assert block_table.shape[0] == q.shape[0] == lens.shape[0]
+    return _paged_decode_impl(q, kpool, vpool, block_table,
+                              lens.astype(jnp.int32),
+                              _auto_interpret(interpret))
+
+
 # ------------------------------------------------------------ acc ---------
 
 @functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))

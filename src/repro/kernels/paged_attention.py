@@ -1,0 +1,144 @@
+"""Pallas TPU kernel: paged decode attention with compensated accumulators.
+
+The serving engine's decode step attends one new query token per sequence
+against that sequence's KV blocks, addressed through a block table
+(``repro.models.paged``). This kernel walks the table with scalar prefetch
+— the block index feeds the BlockSpec index map, so each grid step DMAs
+exactly one pool block from HBM — and runs the online softmax entirely in
+VMEM. KV bytes touched per sequence are ``ceil(len / block_size) ·
+block_size`` tokens instead of the contiguous layout's ``max_context``:
+the paper's pay-for-what-you-stream discipline applied to the KV cache.
+
+The online-softmax running statistics are long accumulation chains over
+the block walk, so — unlike the train-side flash kernel, where the fused
+backward dominates — both the normalizer ``l`` and the output accumulator
+keep the engine's compensated (sum, carry) stream pairs
+(``kahan.neumaier_step``, with the rescaling correction applied to sum and
+carry alike, the DESIGN.md §4.2 decay-scaling rule). Ragged sequence
+lengths are masked in-kernel with the ``tile_mask`` helper shared with
+``flash_attention.py``; blocks past a sequence's length skip their MXU
+work via ``pl.when`` (their DMA is still scheduled — the traffic win comes
+from the block table never pointing shorter sequences at dead blocks).
+
+Exposed through ``ops.paged_decode_attention`` (auto-interpret on CPU) and
+validated against the gather-based jnp oracle in tests/test_paged_kv.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import kahan
+from repro.kernels.flash_attention import NEG_INF, tile_mask
+
+
+def _paged_kernel(table_ref, lens_ref, q_ref, k_ref, v_ref, o_ref,
+                  m_scr, ls_scr, lc_scr, accs_scr, accc_scr, *,
+                  scale: float, bs: int, groups: int):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+    nj = pl.num_programs(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        ls_scr[...] = jnp.zeros_like(ls_scr)
+        lc_scr[...] = jnp.zeros_like(lc_scr)
+        accs_scr[...] = jnp.zeros_like(accs_scr)
+        accc_scr[...] = jnp.zeros_like(accc_scr)
+
+    length = lens_ref[b]
+
+    # Dead blocks (entirely past the sequence length) are exact identity
+    # updates — skip their MXU work.
+    @pl.when(j * bs < length)
+    def _block():
+        q = q_ref[0, 0].astype(jnp.float32)            # [g, d]
+        k = k_ref[0, :, 0, :].astype(jnp.float32)      # [bs, dh]
+        v = v_ref[0, :, 0, :].astype(jnp.float32)      # [bs, dv]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale        # [g, bs]
+        # ragged tail of the last live block (shared helper w/ flash kernel)
+        mask = tile_mask(0, j * bs, groups, bs, k_limit=length)
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_scr[...][:, :1]                     # [g, 1]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new) * mask
+        corr = jnp.exp(m_prev - m_new)                 # [g, 1]
+        # compensated (sum, carry) streams for l and the output accumulator;
+        # the softmax rescale multiplies sum AND carry (decay-scaling rule)
+        ls, lc = kahan.neumaier_step(ls_scr[...][:, :1] * corr,
+                                     lc_scr[...][:, :1] * corr,
+                                     p.sum(axis=-1, keepdims=True))
+        pv = jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)        # [g, dv]
+        accs, accc = kahan.neumaier_step(accs_scr[...] * corr,
+                                         accc_scr[...] * corr, pv)
+        m_scr[...] = jnp.broadcast_to(m_new, m_scr.shape)
+        ls_scr[...] = jnp.broadcast_to(ls, ls_scr.shape)
+        lc_scr[...] = jnp.broadcast_to(lc, lc_scr.shape)
+        accs_scr[...] = accs
+        accc_scr[...] = accc
+
+    @pl.when(j == nj - 1)
+    def _emit():
+        l = ls_scr[...][:, :1] + lc_scr[...][:, :1]
+        acc = accs_scr[...] + accc_scr[...]
+        o_ref[0, 0] = (acc / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+def paged_decode_attention_pallas(q: jax.Array, kpool: jax.Array,
+                                  vpool: jax.Array, block_table: jax.Array,
+                                  lens: jax.Array, *,
+                                  interpret: bool = False) -> jax.Array:
+    """One decode token per sequence against paged KV.
+
+    q: [B, Hq, D]; kpool/vpool: [num_blocks, bs, Hkv, Dh/Dv];
+    block_table: [B, max_blocks] int32; lens: [B] valid tokens (the new
+    token's K/V must already be scattered at lens-1). Returns [B, Hq, Dv].
+    """
+    b, hq, d = q.shape
+    _, bs, hkv, _ = kpool.shape
+    dv = vpool.shape[-1]
+    mb = block_table.shape[1]
+    groups = hq // hkv
+    qg = q.reshape(b, hkv, groups, d)
+    scale = d ** -0.5
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,               # (block_table, lens)
+        grid=(b, hkv, mb),
+        in_specs=[
+            pl.BlockSpec((1, 1, groups, d),
+                         lambda i, h, j, table, lens: (i, h, 0, 0)),
+            pl.BlockSpec((1, bs, 1, kpool.shape[-1]),
+                         lambda i, h, j, table, lens: (table[i, j], 0, h, 0)),
+            pl.BlockSpec((1, bs, 1, dv),
+                         lambda i, h, j, table, lens: (table[i, j], 0, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, groups, dv),
+                               lambda i, h, j, table, lens: (i, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((groups, 128), jnp.float32),   # m (col 0 used)
+            pltpu.VMEM((groups, 128), jnp.float32),   # l sum
+            pltpu.VMEM((groups, 128), jnp.float32),   # l carry
+            pltpu.VMEM((groups, dv), jnp.float32),    # acc sum
+            pltpu.VMEM((groups, dv), jnp.float32),    # acc carry
+        ],
+    )
+    kernel = functools.partial(_paged_kernel, scale=scale, bs=bs,
+                               groups=groups)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, groups, dv), q.dtype),
+        interpret=interpret,
+    )(block_table, lens, qg, kpool, vpool)
+    return out.reshape(b, hq, dv)

@@ -123,8 +123,17 @@ def _build_cell(arch: str, shape_name: str, multi_pod: bool, variant: str,
         jitted = jax.jit(fn, in_shardings=(pshard, bshard))
         with mesh, sharding.activation_sharding(mesh, act_rules):
             lowered = jitted.lower(params_struct, batch_struct)
-    else:  # decode: one new token against a seq_len cache
-        cache_struct = api.cache_specs(cfg, shape.global_batch, shape.seq_len)
+    else:  # decode: one new token against a seq_len paged cache
+        from repro.models import paged
+        layout = paged.PagedLayout.for_context(shape.seq_len)
+        # pad the pool so its block axis divides the (pod, data) degree —
+        # serve_cache_shardings then keeps per-chip KV at pool/data bytes
+        data_degree = math.prod(
+            n for a, n in mesh.shape.items() if a in ("pod", "data"))
+        cache_struct = api.cache_specs(
+            cfg, shape.global_batch, layout,
+            num_blocks=paged.padded_num_blocks(layout, shape.global_batch,
+                                               data_degree))
         cshard = sharding.serve_cache_shardings(cfg, cache_struct, mesh,
                                                 shape.global_batch)
         tokens_struct = synthetic.decode_tokens_struct(shape.global_batch)

@@ -1,5 +1,5 @@
 """Serving launcher: ``python -m repro.launch.serve --arch <id>`` —
-random-weight continuous-batching demo of the decode engine (see
+random-weight continuous-batching demo of the paged-KV decode engine (see
 examples/serve.py for the scripted walkthrough)."""
 
 from __future__ import annotations
@@ -22,7 +22,9 @@ def main() -> None:
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=16)
-    ap.add_argument("--cache-size", type=int, default=256)
+    ap.add_argument("--max-context", type=int, default=256)
+    ap.add_argument("--block-size", type=int, default=16)
+    ap.add_argument("--prefill-chunk", type=int, default=32)
     args = ap.parse_args()
 
     cfg = reduced(get_config(args.arch))
@@ -33,24 +35,38 @@ def main() -> None:
         cfg = cfg.with_(vlm=None, family="dense")   # text-only serving demo
     params = common.init_params(api.schema(cfg), jax.random.key(0))
     engine = DecodeEngine(cfg, params, max_slots=args.slots,
-                          cache_size=args.cache_size)
+                          max_context=args.max_context,
+                          block_size=args.block_size,
+                          prefill_chunk=args.prefill_chunk)
 
     rng = np.random.default_rng(0)
-    pending = [Request(rid=i,
-                       prompt=rng.integers(0, cfg.vocab_size, 4).tolist(),
-                       max_new_tokens=args.max_new)
-               for i in range(args.requests)]
-    done: list[Request] = []
+    requests = [Request(rid=i,
+                        prompt=rng.integers(0, cfg.vocab_size, 4).tolist(),
+                        max_new_tokens=args.max_new,
+                        eos_id=int(rng.integers(0, cfg.vocab_size)))
+                for i in range(args.requests)]
     t0 = time.time()
-    while pending or engine.num_active:
-        while pending and engine._free:
-            engine.submit(pending.pop(0))
+    for req in requests:        # queue everything; admission is the engine's
+        engine.submit(req)
+    while engine.num_unfinished:
         engine.step()
-        done = [r for r in done]  # noqa: PLW2901 (kept for clarity)
     dt = time.time() - t0
-    total = sum(args.max_new for _ in range(args.requests))
-    print(f"{args.requests} requests × {args.max_new} tokens in {dt:.1f}s "
-          f"({total/dt:.1f} tok/s, {args.slots} slots, CPU)")
+    done = [r for r in requests if r.done]
+    assert len(done) == len(requests), "engine finished with pending work"
+    # EOS can retire a request early — count the tokens actually emitted,
+    # not requests × max_new.
+    total = sum(len(r.output) for r in done)
+    st = engine.kv_stats
+    line = (f"{len(done)} requests, {total} tokens in {dt:.1f}s "
+            f"({total/dt:.1f} tok/s, {args.slots} slots, CPU)")
+    if st["paged_bytes"]:
+        ratio = st["contiguous_bytes"] / st["paged_bytes"]
+        line += (f" | KV touched {st['paged_bytes']/2**20:.1f} MiB paged vs "
+                 f"{st['contiguous_bytes']/2**20:.1f} MiB contiguous "
+                 f"({ratio:.1f}x less)")
+    else:   # ssm family: constant-size state, no per-token KV to page
+        line += " | constant-state family (no per-token KV)"
+    print(line)
 
 
 if __name__ == "__main__":

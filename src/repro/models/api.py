@@ -1,13 +1,26 @@
-"""Family-dispatched public model API used by train/serve/dry-run layers."""
+"""Family-dispatched public model API used by train/serve/dry-run layers.
+
+Decode caches are block-paged throughout (``repro.models.paged``): K/V
+lives in shared per-layer block pools addressed through per-sequence block
+tables, so a request only occupies the blocks its real length needs. The
+``KVCache`` class bundles a model config with a paging geometry and is the
+one-stop way to size, spec and allocate a serving cache; the function-style
+entry points below accept either a ``PagedLayout`` or a plain int
+max-context (the legacy ``cache_size`` knob) and dispatch per family.
+"""
 
 from __future__ import annotations
 
+from dataclasses import dataclass
 from typing import Any, Callable
 
 import jax
+import jax.numpy as jnp
 
 from repro.models import encdec, hybrid, lm
 from repro.models.config import ModelConfig
+from repro.models.paged import (PagedLayout, as_layout, default_num_blocks,
+                                POOL_KEYS)
 
 MAX_DEC_POSITIONS = 32768   # learned decoder positions (audio family)
 
@@ -36,12 +49,15 @@ def forward_fn(cfg: ModelConfig) -> Callable:
     return lambda p, b: lm.lm_forward(p, b, cfg)
 
 
-def prefill_fn(cfg: ModelConfig, cache_size: int) -> Callable:
+def prefill_fn(cfg: ModelConfig, cache_spec: int | PagedLayout) -> Callable:
+    """One-shot prefill -> (last logits [B, V], fresh identity-table paged
+    caches). ``cache_spec``: max context (int) or an explicit PagedLayout."""
+    layout = as_layout(cache_spec)
     if cfg.family == "audio":
-        return lambda p, b: encdec.encdec_prefill(p, b, cfg, cache_size)
+        return lambda p, b: encdec.encdec_prefill(p, b, cfg, layout)
     if cfg.family == "hybrid":
-        return lambda p, b: hybrid.hybrid_prefill(p, b, cfg, cache_size)
-    return lambda p, b: lm.lm_prefill(p, b, cfg, cache_size)
+        return lambda p, b: hybrid.hybrid_prefill(p, b, cfg, layout)
+    return lambda p, b: lm.lm_prefill(p, b, cfg, layout)
 
 
 def decode_fn(cfg: ModelConfig) -> Callable:
@@ -53,9 +69,85 @@ def decode_fn(cfg: ModelConfig) -> Callable:
     return lambda p, t, c: lm.lm_decode(p, t, c, cfg)
 
 
-def cache_specs(cfg: ModelConfig, batch: int, cache_size: int) -> Any:
+def prefill_chunk_fn(cfg: ModelConfig) -> Callable:
+    """Chunked prefill into a shared batched cache (the serving path):
+    (params, tokens [1, C], caches, slot, pos0) -> (logits [1, V], caches).
+
+    ``slot`` and ``pos0`` are dynamic; the caller must have pointed the
+    slot's block tables at allocated blocks (``paged.reset_slot``). Only
+    lm.py families are chunk-servable; audio/hybrid use the one-shot path.
+    """
+    if cfg.family in ("audio", "hybrid"):
+        raise NotImplementedError(
+            f"chunked prefill serves lm families, not {cfg.family!r}")
+    return lambda p, t, c, slot, pos0: lm.lm_prefill_chunk(
+        p, t, c, slot, pos0, cfg)
+
+
+def cache_specs(cfg: ModelConfig, batch: int, cache_spec: int | PagedLayout,
+                *, num_blocks: int | None = None) -> Any:
+    """Abstract cache pytree. ``num_blocks`` overrides the per-layer pool
+    size (oversubscription — the serving engine's admission control then
+    gates on real block availability)."""
+    layout = as_layout(cache_spec)
     if cfg.family == "audio":
-        return encdec.encdec_cache_specs(cfg, batch, cache_size)
+        return encdec.encdec_cache_specs(cfg, batch, layout,
+                                         num_blocks=num_blocks)
     if cfg.family == "hybrid":
-        return hybrid.hybrid_cache_specs(cfg, batch, cache_size)
-    return lm.lm_cache_specs(cfg, batch, cache_size)
+        return hybrid.hybrid_cache_specs(cfg, batch, layout,
+                                         num_blocks=num_blocks)
+    return lm.lm_cache_specs(cfg, batch, layout, num_blocks=num_blocks)
+
+
+# ------------------------------------------------------------ KVCache ------
+
+@dataclass(frozen=True)
+class KVCache:
+    """A model's paged KV-cache geometry: config + layout + pool size.
+
+    This is the serving layer's contract with the model stack: it knows how
+    to spec/allocate the batched cache tree, how many bytes one cached
+    token costs (the ECM-style traffic accounting in bench_serving), and
+    how many pool blocks a request of a given length needs.
+    """
+
+    cfg: ModelConfig
+    layout: PagedLayout
+    num_blocks: int            # per-layer pool blocks, incl. null block 0
+
+    @staticmethod
+    def build(cfg: ModelConfig, *, max_context: int,
+              block_size: int | None = None, max_slots: int = 1,
+              num_blocks: int | None = None) -> "KVCache":
+        from repro.models import paged as _paged
+        bs = _paged.DEFAULT_BLOCK_SIZE if block_size is None else block_size
+        layout = PagedLayout.for_context(max_context, bs)
+        if num_blocks is None:
+            num_blocks = default_num_blocks(layout, max_slots)
+        return KVCache(cfg, layout, num_blocks)
+
+    def specs(self, batch: int) -> Any:
+        return cache_specs(self.cfg, batch, self.layout,
+                           num_blocks=self.num_blocks)
+
+    def init(self, batch: int) -> Any:
+        return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                            self.specs(batch))
+
+    def blocks_for(self, num_tokens: int) -> int:
+        """Pool blocks a sequence of ``num_tokens`` occupies."""
+        return self.layout.blocks_for(num_tokens)
+
+    def token_bytes(self, batch: int = 1) -> int:
+        """Paged-cache bytes per cached token, summed over every pool leaf
+        and layer (the unit of the KV-bytes-touched accounting)."""
+        import math
+        total = 0
+        for path, leaf in jax.tree_util.tree_flatten_with_path(
+                self.specs(batch))[0]:
+            name = str(getattr(path[-1], "key", path[-1]))
+            if name in POOL_KEYS:
+                # leaf: [layer_stack, num_blocks, block_size, *feature]
+                per_tok = math.prod(leaf.shape[3:]) * leaf.dtype.itemsize
+                total += leaf.shape[0] * per_tok
+        return total

@@ -1,4 +1,4 @@
-"""Attention: chunked-flash GQA (training/prefill), cached decode, and MLA.
+"""Attention: chunked-flash GQA (training/prefill), paged decode, and MLA.
 
 Memory-efficient attention is mandatory here: the assigned shape cells go up
 to 32k prefill, and materializing [B, H, L, L] scores is impossible at those
@@ -11,6 +11,16 @@ The online-softmax accumulator is itself a long accumulation chain; the
 ``kahan_acc`` flag switches it to compensated (Neumaier) accumulation —
 the paper's technique applied inside attention (off by default; validated in
 tests/test_models_attention.py).
+
+Decode caches are block-paged (see ``repro.models.paged``): K/V live in a
+shared block pool indexed through per-sequence block tables, so a sequence
+only occupies (and the decode gather only touches) the blocks its actual
+length needs. ``flash_attention`` takes a dynamic ``q_offset`` so chunked
+prefill can extend a paged cache incrementally — queries at absolute
+positions ``q_offset..q_offset+C-1`` against the gathered prefix+chunk.
+The serving decode dispatches per backend (``paged_kernel_enabled``): the
+Pallas block-table kernel ``repro.kernels.paged_attention`` on TPU, the
+pure-JAX gather formulation elsewhere.
 """
 
 from __future__ import annotations
@@ -22,8 +32,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import kahan
-from repro.models import common
+from repro.models import common, paged
 from repro.models.common import ParamSpec
+from repro.models.paged import PagedLayout
 
 Array = jax.Array
 
@@ -89,10 +100,13 @@ def _project_qkv(p: dict, x: Array, cfg: AttnConfig, positions: Array
 def flash_attention(q: Array, k: Array, v: Array, *, causal: bool = True,
                     q_chunk: int = 512, kv_chunk: int = 512,
                     kahan_acc: bool = False, kv_len: Array | None = None,
-                    causal_packing: bool = False) -> Array:
+                    causal_packing: bool = False,
+                    q_offset: Array | int = 0) -> Array:
     """Blockwise attention. q: [B, Lq, Hq, D]; k/v: [B, Lk, Hkv, Dv].
 
     Returns [B, Lq, Hq, Dv]. GQA handled by grouping q heads over kv heads.
+    ``q_offset`` places the queries at absolute positions offset..offset+Lq-1
+    for the causal mask (chunked prefill against an already-cached prefix).
     """
     b, lq_orig, hq, d = q.shape
     _, lk_orig, hkv, dv = v.shape
@@ -135,8 +149,9 @@ def flash_attention(q: Array, k: Array, v: Array, *, causal: bool = True,
     nq, nk = lq // qc, lk // kc
     qg = qg.reshape(b, hkv, groups, nq, qc, d)
 
+    static_zero_offset = isinstance(q_offset, int) and q_offset == 0
     if causal and causal_packing and lq == lk and nq == nk \
-            and kv_len is None and not kahan_acc:
+            and kv_len is None and not kahan_acc and static_zero_offset:
         packed = jax.checkpoint(
             functools.partial(_flash_causal_packed, qc=qc, kc=kc, scale=scale),
             policy=jax.checkpoint_policies.nothing_saveable)
@@ -151,7 +166,7 @@ def flash_attention(q: Array, k: Array, v: Array, *, causal: bool = True,
         # [nk, B, H, qc, kc] probability blocks (flash attention's memory
         # win gone, ~1 GB/layer at 4k); recompute them instead.
         q_blk = qg[:, :, :, qi]                       # [B,Hkv,G,qc,D]
-        q_pos = qi * qc + jnp.arange(qc)
+        q_pos = q_offset + qi * qc + jnp.arange(qc)
 
         def kv_step(carry, ki):
             m, l, acc, acc_c = carry
@@ -255,26 +270,26 @@ def _flash_causal_packed(qg: Array, kt: Array, vt: Array, *, qc: int,
     return out
 
 
-def decode_attention(q: Array, k_cache: Array, v_cache: Array,
-                     cache_len: Array) -> Array:
-    """Single-token attention against a cache.
+def attend_cache(q: Array, k: Array, v: Array, valid_len: Array) -> Array:
+    """Single-token attention against materialized K/V rows.
 
-    q: [B, 1, Hq, D]; caches: [B, S, Hkv, D]; cache_len: [B] valid lengths
-    (the new token's K/V must already be written at cache_len-1).
+    q: [B, 1, Hq, D]; k/v: [B, S, Hkv, D]; valid_len: [B] valid lengths
+    (the new token's K/V must already be written at valid_len-1). Used on
+    block-gathered paged rows and on encoder cross-attention memory.
     """
     b, _, hq, d = q.shape
-    _, s_max, hkv, dv = v_cache.shape
+    _, s_max, hkv, dv = v.shape
     groups = hq // hkv
     scale = d ** -0.5
     qg = q.reshape(b, hkv, groups, d)
     s = jnp.einsum("bhgd,bshd->bhgs", qg.astype(jnp.float32),
-                   k_cache.astype(jnp.float32)) * scale
-    mask = jnp.arange(s_max)[None, :] < cache_len[:, None]     # [B,S]
+                   k.astype(jnp.float32)) * scale
+    mask = jnp.arange(s_max)[None, :] < valid_len[:, None]     # [B,S]
     s = jnp.where(mask[:, None, None, :], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
-    out = jnp.einsum("bhgs,bshd->bhgd", p.astype(v_cache.dtype), v_cache,
+    out = jnp.einsum("bhgs,bshd->bhgd", p.astype(v.dtype), v,
                      preferred_element_type=jnp.float32)
-    return out.reshape(b, 1, hq, dv).astype(v_cache.dtype)
+    return out.reshape(b, 1, hq, dv).astype(v.dtype)
 
 
 def gqa_forward(p: dict, x: Array, cfg: AttnConfig, *,
@@ -290,46 +305,96 @@ def gqa_forward(p: dict, x: Array, cfg: AttnConfig, *,
     return common.dense(out.reshape(b, l, -1), p["wo"])
 
 
-def gqa_prefill(p: dict, x: Array, cfg: AttnConfig, cache_size: int
+def gqa_prefill(p: dict, x: Array, cfg: AttnConfig, layout: PagedLayout
                 ) -> tuple[Array, dict]:
-    """Prefill: forward + return a KV cache padded to cache_size."""
+    """One-shot prefill: forward + emit a block-paged KV cache.
+
+    The computed K/V rows are re-laid-out into a per-batch identity-table
+    pool (a pure reshape — the later block gather reproduces them bitwise).
+    """
     b, l, _ = x.shape
     positions = jnp.broadcast_to(jnp.arange(l)[None, :], (b, l))
     q, k, v = _project_qkv(p, x, cfg, positions)
     out = flash_attention(q, k, v, causal=cfg.causal, q_chunk=cfg.q_chunk,
                           kv_chunk=cfg.kv_chunk, kahan_acc=cfg.kahan_acc,
                           causal_packing=cfg.causal_packing)
-    pad = [(0, 0), (0, cache_size - l), (0, 0), (0, 0)]
-    cache = {"k": jnp.pad(k, pad), "v": jnp.pad(v, pad),
+    cache = {"kpool": paged.pool_from_rows(k, layout),
+             "vpool": paged.pool_from_rows(v, layout),
+             "block_table": paged.identity_table(b, layout),
              "len": jnp.full((b,), l, jnp.int32)}
     return common.dense(out.reshape(b, l, -1), p["wo"]), cache
 
 
+def paged_kernel_enabled() -> bool:
+    """Dispatch policy for the serving decode: the Pallas block-table
+    kernel on TPU (it moves exactly the table's blocks — the traffic the
+    engine's kv_stats counts), the pure-JAX gather formulation elsewhere
+    (interpret-mode Pallas inside the scanned decode would crawl on CPU).
+    Evaluated at trace time; tests exercise the kernel branch by
+    monkeypatching (interpret mode picks up automatically off-TPU)."""
+    return jax.default_backend() == "tpu"
+
+
 def gqa_decode(p: dict, x: Array, cfg: AttnConfig, cache: dict
                ) -> tuple[Array, dict]:
-    """One-token decode. x: [B, 1, d]; cache k/v: [B, S, Hkv, D]."""
+    """One-token paged decode. x: [B, 1, d]; cache: paged (pool + table)."""
     b, _, _ = x.shape
-    positions = cache["len"][:, None]                 # next position
-    q, k_new, v_new = _project_qkv(p, x, cfg, positions)
     idx = cache["len"]                                 # [B]
-    k_cache = _scatter_token(cache["k"], k_new, idx)
-    v_cache = _scatter_token(cache["v"], v_new, idx)
-    out = decode_attention(q, k_cache, v_cache, idx + 1)
-    new_cache = {"k": k_cache, "v": v_cache, "len": idx + 1}
+    positions = idx[:, None]                           # next position
+    q, k_new, v_new = _project_qkv(p, x, cfg, positions)
+    kpool = paged.scatter_token(cache["kpool"], cache["block_table"], idx,
+                                k_new[:, 0])
+    vpool = paged.scatter_token(cache["vpool"], cache["block_table"], idx,
+                                v_new[:, 0])
+    if paged_kernel_enabled():
+        from repro.kernels import ops
+        out = ops.paged_decode_attention(
+            q[:, 0], kpool, vpool, cache["block_table"], idx + 1)[:, None]
+        out = out.astype(vpool.dtype)
+    else:
+        k = paged.gather_blocks(kpool, cache["block_table"])  # [B,mb*bs,H,D]
+        v = paged.gather_blocks(vpool, cache["block_table"])
+        out = attend_cache(q, k, v, idx + 1)
+    new_cache = {"kpool": kpool, "vpool": vpool,
+                 "block_table": cache["block_table"], "len": idx + 1}
     return common.dense(out.reshape(b, 1, -1), p["wo"]), new_cache
 
 
-def _scatter_token(cache: Array, new: Array, idx: Array) -> Array:
-    """Write new [B,1,H,D] into cache [B,S,H,D] at per-batch position idx."""
-    b = cache.shape[0]
-    def write_one(c, n, i):
-        return jax.lax.dynamic_update_slice_in_dim(c, n, i, axis=0)
-    return jax.vmap(write_one)(cache, new, idx)
+def gqa_prefill_chunk(p: dict, x: Array, cfg: AttnConfig, cache: dict,
+                      slot, pos0) -> tuple[Array, dict]:
+    """Prefill one chunk of ONE sequence into the shared paged cache.
+
+    x: [1, C, d]; ``slot`` indexes the batched cache, ``pos0`` is the number
+    of tokens already cached for it (both dynamic). The chunk's K/V are
+    scattered into the slot's blocks, then the chunk queries run flash
+    attention over the gathered prefix+chunk with ``q_offset=pos0`` — for
+    pos0 == 0 this is bitwise the one-shot prefill attention (the trailing
+    fully-masked KV blocks contribute exact identity updates).
+    """
+    _, c, _ = x.shape
+    positions = (pos0 + jnp.arange(c, dtype=jnp.int32))[None, :]
+    q, k_new, v_new = _project_qkv(p, x, cfg, positions)
+    table_row = cache["block_table"][slot]             # [mb]
+    kpool = paged.scatter_chunk(cache["kpool"], table_row, pos0, k_new[0])
+    vpool = paged.scatter_chunk(cache["vpool"], table_row, pos0, v_new[0])
+    k = paged.gather_blocks(kpool, table_row[None])    # [1, mb*bs, H, D]
+    v = paged.gather_blocks(vpool, table_row[None])
+    out = flash_attention(q, k, v, causal=cfg.causal, q_chunk=cfg.q_chunk,
+                          kv_chunk=cfg.kv_chunk, kahan_acc=cfg.kahan_acc,
+                          q_offset=pos0, kv_len=pos0 + c)
+    new_cache = {"kpool": kpool, "vpool": vpool,
+                 "block_table": cache["block_table"],
+                 "len": cache["len"].at[slot].set(pos0 + c)}
+    return common.dense(out.reshape(1, c, -1), p["wo"]), new_cache
 
 
-def gqa_cache_spec(batch: int, cache_size: int, cfg: AttnConfig,
-                   dtype=jnp.bfloat16) -> dict:
-    shape = (batch, cache_size, cfg.num_kv_heads, cfg.head_dim)
-    return {"k": jax.ShapeDtypeStruct(shape, dtype),
-            "v": jax.ShapeDtypeStruct(shape, dtype),
+def gqa_cache_spec(batch: int, layout: PagedLayout, cfg: AttnConfig,
+                   dtype=jnp.bfloat16, num_blocks: int | None = None) -> dict:
+    nb = (paged.default_num_blocks(layout, batch) if num_blocks is None
+          else num_blocks)
+    pool = (nb, layout.block_size, cfg.num_kv_heads, cfg.head_dim)
+    return {"kpool": jax.ShapeDtypeStruct(pool, dtype),
+            "vpool": jax.ShapeDtypeStruct(pool, dtype),
+            "block_table": jax.ShapeDtypeStruct((batch, layout.max_blocks),
+                                                jnp.int32),
             "len": jax.ShapeDtypeStruct((batch,), jnp.int32)}

@@ -14,6 +14,7 @@ from repro.models import attention as attn
 from repro.models import common, mla, moe, mlp, ssd
 from repro.models.common import ParamSpec
 from repro.models.config import ModelConfig
+from repro.models.paged import PagedLayout
 
 Array = jax.Array
 
@@ -106,9 +107,9 @@ def block_apply(p: dict, h: Array, cfg: ModelConfig, *, is_moe: bool | None = No
 
 # ------------------------------------------------------------ prefill ------
 
-def block_prefill(p: dict, h: Array, cfg: ModelConfig, cache_size: int,
+def block_prefill(p: dict, h: Array, cfg: ModelConfig, layout: PagedLayout,
                   *, dense_ffn: bool = False) -> tuple[Array, dict]:
-    """Forward + emit a decode cache for this layer."""
+    """Forward + emit a (block-paged) decode cache for this layer."""
     if cfg.family in ("ssm", "hybrid"):
         x = common.apply_norm(h, p["norm"], cfg.norm)
         y, cache = ssd.mamba2_forward(
@@ -118,15 +119,51 @@ def block_prefill(p: dict, h: Array, cfg: ModelConfig, cache_size: int,
 
     x = common.apply_norm(h, p["ln_attn"], cfg.norm)
     if cfg.mla is not None:
-        y, cache = mla.mla_prefill(p["attn"], x, cfg.mla, cache_size)
+        y, cache = mla.mla_prefill(p["attn"], x, cfg.mla, layout)
     else:
-        y, cache = attn.gqa_prefill(p["attn"], x, cfg.attn(), cache_size)
+        y, cache = attn.gqa_prefill(p["attn"], x, cfg.attn(), layout)
     h = h + y
     x = common.apply_norm(h, p["ln_mlp"], cfg.norm)
     if cfg.moe is not None and not dense_ffn:
         y, _ = moe.moe_forward(p["ffn"], x, cfg.moe)
         return h + y, cache
     return h + mlp.mlp_forward(p["ffn"], x, act=cfg.act), cache
+
+
+def block_prefill_chunk(p: dict, h: Array, cfg: ModelConfig, cache: dict,
+                        slot, pos0, *, dense_ffn: bool = False
+                        ) -> tuple[Array, dict]:
+    """Prefill one chunk of ONE sequence (batched cache, slot ``slot``).
+
+    h: [1, C, d]. Attention families scatter the chunk K/V into the slot's
+    pool blocks; SSM families continue conv window + SSD state at the
+    slot's batch slice. Returns (h, updated full-batch layer cache).
+    """
+    if cfg.family in ("ssm", "hybrid"):
+        x = common.apply_norm(h, p["norm"], cfg.norm)
+        one = jax.tree.map(
+            lambda c: jax.lax.dynamic_slice_in_dim(c, slot, 1, axis=0), cache)
+        y, one_new = ssd.mamba2_prefill_chunk(
+            p["mixer"], x, cfg.ssm._replace(kahan_state=cfg.kahan_ssm_state),
+            one)
+        new_cache = jax.tree.map(
+            lambda full, o: jax.lax.dynamic_update_slice_in_dim(
+                full, o.astype(full.dtype), slot, axis=0), cache, one_new)
+        return h + y, new_cache
+
+    x = common.apply_norm(h, p["ln_attn"], cfg.norm)
+    if cfg.mla is not None:
+        y, new_cache = mla.mla_prefill_chunk(p["attn"], x, cfg.mla, cache,
+                                             slot, pos0)
+    else:
+        y, new_cache = attn.gqa_prefill_chunk(p["attn"], x, cfg.attn(),
+                                              cache, slot, pos0)
+    h = h + y
+    x = common.apply_norm(h, p["ln_mlp"], cfg.norm)
+    if cfg.moe is not None and not dense_ffn:
+        y, _ = moe.moe_forward(p["ffn"], x, cfg.moe)
+        return h + y, new_cache
+    return h + mlp.mlp_forward(p["ffn"], x, act=cfg.act), new_cache
 
 
 # ------------------------------------------------------------ decode -------
@@ -152,9 +189,12 @@ def block_decode(p: dict, h: Array, cfg: ModelConfig, cache: dict,
     return h + mlp.mlp_forward(p["ffn"], x, act=cfg.act), new_cache
 
 
-def block_cache_spec(cfg: ModelConfig, batch: int, cache_size: int) -> dict:
+def block_cache_spec(cfg: ModelConfig, batch: int, layout: PagedLayout,
+                     num_blocks: int | None = None) -> dict:
     if cfg.family in ("ssm", "hybrid"):
         return ssd.mamba2_cache_spec(batch, cfg.ssm)
     if cfg.mla is not None:
-        return mla.mla_cache_spec(batch, cache_size, cfg.mla)
-    return attn.gqa_cache_spec(batch, cache_size, cfg.attn())
+        return mla.mla_cache_spec(batch, layout, cfg.mla,
+                                  num_blocks=num_blocks)
+    return attn.gqa_cache_spec(batch, layout, cfg.attn(),
+                               num_blocks=num_blocks)

@@ -142,7 +142,7 @@ def encdec_loss(params: dict, batch: dict, cfg: ModelConfig):
 # ------------------------------------------------------------ serving ------
 
 def encdec_prefill(params: dict, batch: dict, cfg: ModelConfig,
-                   cache_size: int):
+                   layout):
     """Encode + teacher-forced prefill of decoder self-KV and cross-KV."""
     memory = encode(params, batch["frames"], cfg)
     tokens = batch["tokens"]
@@ -153,7 +153,7 @@ def encdec_prefill(params: dict, batch: dict, cfg: ModelConfig,
 
     def body(carry, lp):
         x = common.apply_norm(carry, lp["ln_self"], cfg.norm)
-        y, self_kv = attn.gqa_prefill(lp["self_attn"], x, acfg, cache_size)
+        y, self_kv = attn.gqa_prefill(lp["self_attn"], x, acfg, layout)
         carry = carry + y
         x = common.apply_norm(carry, lp["ln_cross"], cfg.norm)
         mkv = _memory_kv(lp["cross_attn"], memory, cfg)
@@ -188,8 +188,8 @@ def encdec_decode(params: dict, tokens: Array, caches: dict,
         q = common.dense(x, lp["cross_attn"]["wq"]).reshape(
             b, 1, acfg.num_heads, acfg.head_dim)
         lm = lc["cross_k"].shape[1]
-        ctx = attn.decode_attention(q, lc["cross_k"], lc["cross_v"],
-                                    jnp.full((b,), lm, jnp.int32))
+        ctx = attn.attend_cache(q, lc["cross_k"], lc["cross_v"],
+                                jnp.full((b,), lm, jnp.int32))
         carry = carry + common.dense(ctx.reshape(b, 1, -1),
                                      lp["cross_attn"]["wo"])
         x = common.apply_norm(carry, lp["ln_mlp"], cfg.norm)
@@ -202,9 +202,11 @@ def encdec_decode(params: dict, tokens: Array, caches: dict,
     return logits, new_caches
 
 
-def encdec_cache_specs(cfg: ModelConfig, batch: int, cache_size: int):
+def encdec_cache_specs(cfg: ModelConfig, batch: int, layout,
+                       num_blocks: int | None = None):
     acfg = _acfg(cfg, causal=True)
-    self_spec = attn.gqa_cache_spec(batch, cache_size, acfg)
+    self_spec = attn.gqa_cache_spec(batch, layout, acfg,
+                                    num_blocks=num_blocks)
     lm = cfg.encdec.enc_seq
     cross = jax.ShapeDtypeStruct(
         (batch, lm, acfg.num_kv_heads, acfg.head_dim), jnp.bfloat16)

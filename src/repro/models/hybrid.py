@@ -146,7 +146,7 @@ def hybrid_loss(params: dict, batch: dict, cfg: ModelConfig):
 # ------------------------------------------------------------ serving ------
 
 def hybrid_prefill(params: dict, batch: dict, cfg: ModelConfig,
-                   cache_size: int):
+                   layout):
     """Returns (last logits [B, V], caches) with caches =
     {mamba: stacked states, attn: per-invocation KV, tail: states}."""
     seg, n_seg, tail = _segments(cfg)
@@ -166,7 +166,7 @@ def hybrid_prefill(params: dict, batch: dict, cfg: ModelConfig,
         mamba_caches.append(caches_s)
         eff = _lora_params(params, s)
         x = common.apply_norm(h, params["shared"]["ln_attn"], cfg.norm)
-        y, kv = attn.gqa_prefill(eff, x, acfg, cache_size)
+        y, kv = attn.gqa_prefill(eff, x, acfg, layout)
         h = h + y
         x = common.apply_norm(h, params["shared"]["ln_mlp"], cfg.norm)
         h = h + mlp.mlp_forward(params["shared"]["ffn"], x, act=cfg.act)
@@ -231,11 +231,12 @@ def _stack_pytrees(trees: list):
     return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
 
 
-def hybrid_cache_specs(cfg: ModelConfig, batch: int, cache_size: int):
+def hybrid_cache_specs(cfg: ModelConfig, batch: int, layout,
+                       num_blocks: int | None = None):
     seg, n_seg, tail = _segments(cfg)
     acfg = _shared_attn_cfg(cfg)
     mamba_spec = ssd.mamba2_cache_spec(batch, cfg.ssm)
-    kv_spec = attn.gqa_cache_spec(batch, cache_size, acfg)
+    kv_spec = attn.gqa_cache_spec(batch, layout, acfg, num_blocks=num_blocks)
 
     def stack(spec_tree, *dims):
         return jax.tree.map(

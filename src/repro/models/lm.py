@@ -16,10 +16,12 @@ import jax.numpy as jnp
 
 from repro.models import blocks, common
 from repro.models.blocks import (block_apply, block_cache_spec, block_decode,
-                                 block_prefill, block_schema,
-                                 dense_block_schema, stack_schema)
+                                 block_prefill, block_prefill_chunk,
+                                 block_schema, dense_block_schema,
+                                 stack_schema)
 from repro.models.common import ParamSpec
 from repro.models.config import ModelConfig
+from repro.models.paged import PagedLayout
 
 Array = jax.Array
 
@@ -124,21 +126,22 @@ def lm_loss(params: dict, batch: dict, cfg: ModelConfig
 
 # ------------------------------------------------------------ prefill ------
 
-def lm_prefill(params: dict, batch: dict, cfg: ModelConfig, cache_size: int
-               ) -> tuple[Array, Any]:
-    """Prefill the cache; returns (last-position logits [B, V], caches)."""
+def lm_prefill(params: dict, batch: dict, cfg: ModelConfig,
+               layout: PagedLayout) -> tuple[Array, Any]:
+    """One-shot prefill into fresh block-paged caches (identity tables);
+    returns (last-position logits [B, V], caches)."""
     h = _embed_inputs(params, batch, cfg)
     caches = []
     if cfg.first_k_dense:
         def step_d(carry, p):
-            new_h, cache = block_prefill(p, carry, cfg, cache_size,
+            new_h, cache = block_prefill(p, carry, cfg, layout,
                                          dense_ffn=True)
             return new_h, cache
         h, dense_caches = jax.lax.scan(step_d, h, params["dense_layers"])
         caches.append(dense_caches)
 
     def step(carry, p):
-        new_h, cache = block_prefill(p, carry, cfg, cache_size)
+        new_h, cache = block_prefill(p, carry, cfg, layout)
         return new_h, cache
     h, main_caches = jax.lax.scan(step, h, params["layers"])
     caches.append(main_caches)
@@ -147,6 +150,41 @@ def lm_prefill(params: dict, batch: dict, cfg: ModelConfig, cache_size: int
     head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
     logits = common.dense(h[:, -1], head)
     return logits, tuple(caches)
+
+
+def lm_prefill_chunk(params: dict, tokens: Array, caches: Any, slot, pos0,
+                     cfg: ModelConfig) -> tuple[Array, Any]:
+    """Prefill one chunk of ONE sequence into the shared batched caches.
+
+    tokens: [1, C] (text only — the serving engine drives LM families);
+    ``slot``/``pos0`` are dynamic. Returns (last-chunk-position logits
+    [1, V], updated caches). The admission path must have pointed the
+    slot's block tables at allocated blocks (``paged.reset_slot``).
+    """
+    h = jnp.take(params["embed"], tokens, axis=0).astype(jnp.bfloat16)
+    new_caches = []
+    idx = 0
+    if cfg.first_k_dense:
+        def step_d(carry, xs):
+            p, cache = xs
+            new_h, nc = block_prefill_chunk(p, carry, cfg, cache, slot, pos0,
+                                            dense_ffn=True)
+            return new_h, nc
+        h, nc = jax.lax.scan(step_d, h, (params["dense_layers"], caches[idx]))
+        new_caches.append(nc)
+        idx += 1
+
+    def step(carry, xs):
+        p, cache = xs
+        new_h, nc = block_prefill_chunk(p, carry, cfg, cache, slot, pos0)
+        return new_h, nc
+    h, nc = jax.lax.scan(step, h, (params["layers"], caches[idx]))
+    new_caches.append(nc)
+
+    h = common.apply_norm(h, params["final_norm"], cfg.norm)
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = common.dense(h[:, -1], head)
+    return logits, tuple(new_caches)
 
 
 # ------------------------------------------------------------ decode -------
@@ -182,13 +220,19 @@ def lm_decode(params: dict, tokens: Array, caches: Any, cfg: ModelConfig
 
 # ------------------------------------------------------------ caches -------
 
-def lm_cache_specs(cfg: ModelConfig, batch: int, cache_size: int):
-    """Abstract (ShapeDtypeStruct) cache pytree matching lm_prefill output."""
+def lm_cache_specs(cfg: ModelConfig, batch: int, layout: PagedLayout,
+                   num_blocks: int | None = None):
+    """Abstract (ShapeDtypeStruct) cache pytree matching lm_prefill output.
+
+    Every layer of a stack owns its own pool slice (stacked leading axis);
+    one block id addresses that block in every layer's pool, so a single
+    block table drives the whole stack.
+    """
     def stack(spec_tree, n):
         return jax.tree.map(
             lambda s: jax.ShapeDtypeStruct((n,) + s.shape, s.dtype), spec_tree)
     out = []
-    per_layer = block_cache_spec(cfg, batch, cache_size)
+    per_layer = block_cache_spec(cfg, batch, layout, num_blocks=num_blocks)
     if cfg.first_k_dense:
         out.append(stack(per_layer, cfg.first_k_dense))
     out.append(stack(per_layer, cfg.num_layers - cfg.first_k_dense))

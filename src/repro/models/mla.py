@@ -15,9 +15,10 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.models import common
-from repro.models.attention import decode_attention, flash_attention
+from repro.models import common, paged
+from repro.models.attention import flash_attention
 from repro.models.common import ParamSpec
+from repro.models.paged import PagedLayout
 
 Array = jax.Array
 
@@ -100,7 +101,7 @@ def _shard(x):
     return shard_act(x, "act_batch", "act_seq", "act_heads", None)
 
 
-def mla_prefill(p: dict, x: Array, cfg: MLAConfig, cache_size: int
+def mla_prefill(p: dict, x: Array, cfg: MLAConfig, layout: PagedLayout
                 ) -> tuple[Array, dict]:
     b, l, _ = x.shape
     h = cfg.num_heads
@@ -117,25 +118,24 @@ def mla_prefill(p: dict, x: Array, cfg: MLAConfig, cache_size: int
                                kv_chunk=cfg.kv_chunk,
                                causal_packing=cfg.causal_packing)
     out = common.dense(attn_out.reshape(b, l, -1), p["wo"])
-    pad2 = [(0, 0), (0, cache_size - l), (0, 0)]
-    cache = {"c_kv": jnp.pad(c_kv, pad2), "k_rope": jnp.pad(k_rope, pad2),
+    # paged latent cache: the pooled S axis pages exactly like a KV cache
+    cache = {"c_kv": paged.pool_from_rows(c_kv, layout),
+             "k_rope": paged.pool_from_rows(k_rope, layout),
+             "block_table": paged.identity_table(b, layout),
              "len": jnp.full((b,), l, jnp.int32)}
     return out, cache
 
 
-def mla_decode(p: dict, x: Array, cfg: MLAConfig, cache: dict
-               ) -> tuple[Array, dict]:
-    """Latent-space decode: scores and context computed against c_kv."""
-    b = x.shape[0]
+def _latent_attend(p: dict, cfg: MLAConfig, q_nope: Array, q_rope: Array,
+                   c_kv: Array, k_rope: Array, valid_len: Array,
+                   q_pos: Array | None = None) -> Array:
+    """Absorbed latent attention: q [B,Q,H,*] vs latents [B,S,*].
+
+    ``q_pos`` ([B, Q] absolute positions) enables the causal mask for
+    multi-query chunks; None means single-token decode (mask by length
+    only). Returns per-head context values [B, Q, H, v_dim].
+    """
     h = cfg.num_heads
-    positions = cache["len"][:, None]
-    q_nope, q_rope, c_kv_new, k_rope_new = _latents(p, x, cfg, positions)
-
-    idx = cache["len"]
-    c_kv = _scatter2(cache["c_kv"], c_kv_new, idx)
-    k_rope = _scatter2(cache["k_rope"], k_rope_new, idx)
-
-    # absorb W_UK into the query: q_lat [B,1,H,c]
     wk_b = p["wk_b"].reshape(cfg.kv_lora, h, cfg.nope_dim)
     q_lat = jnp.einsum("bqhn,chn->bqhc", q_nope.astype(jnp.float32),
                        wk_b.astype(jnp.float32))
@@ -144,26 +144,72 @@ def mla_decode(p: dict, x: Array, cfg: MLAConfig, cache: dict
          + jnp.einsum("bqhr,bsr->bhqs", q_rope.astype(jnp.float32),
                       k_rope.astype(jnp.float32))) * scale
     s_max = c_kv.shape[1]
-    mask = jnp.arange(s_max)[None, :] < (idx + 1)[:, None]
-    s = jnp.where(mask[:, None, None, :], s, -1e30)
+    k_pos = jnp.arange(s_max)
+    mask = k_pos[None, :] < valid_len[:, None]                 # [B,S]
+    mask = mask[:, None, :]                                     # [B,1,S]
+    if q_pos is not None:
+        mask = mask & (q_pos[:, :, None] >= k_pos[None, None, :])
+    s = jnp.where(mask[:, None], s, -1e30)
     probs = jax.nn.softmax(s, axis=-1)
     ctx_lat = jnp.einsum("bhqs,bsc->bqhc", probs, c_kv.astype(jnp.float32))
     wv_b = p["wv_b"].reshape(cfg.kv_lora, h, cfg.v_dim)
-    ctx = jnp.einsum("bqhc,chv->bqhv", ctx_lat, wv_b.astype(jnp.float32))
+    return jnp.einsum("bqhc,chv->bqhv", ctx_lat, wv_b.astype(jnp.float32))
+
+
+def mla_decode(p: dict, x: Array, cfg: MLAConfig, cache: dict
+               ) -> tuple[Array, dict]:
+    """Latent-space paged decode: scores/context against the gathered c_kv."""
+    b = x.shape[0]
+    idx = cache["len"]
+    positions = idx[:, None]
+    q_nope, q_rope, c_kv_new, k_rope_new = _latents(p, x, cfg, positions)
+
+    table = cache["block_table"]
+    ckv_pool = paged.scatter_token(cache["c_kv"], table, idx, c_kv_new[:, 0])
+    rope_pool = paged.scatter_token(cache["k_rope"], table, idx,
+                                    k_rope_new[:, 0])
+    c_kv = paged.gather_blocks(ckv_pool, table)        # [B, mb*bs, c]
+    k_rope = paged.gather_blocks(rope_pool, table)
+    ctx = _latent_attend(p, cfg, q_nope, q_rope, c_kv, k_rope, idx + 1)
     out = common.dense(ctx.reshape(b, 1, -1).astype(x.dtype), p["wo"])
-    return out, {"c_kv": c_kv, "k_rope": k_rope, "len": idx + 1}
+    return out, {"c_kv": ckv_pool, "k_rope": rope_pool,
+                 "block_table": table, "len": idx + 1}
 
 
-def _scatter2(cache: Array, new: Array, idx: Array) -> Array:
-    def write_one(c, n, i):
-        return jax.lax.dynamic_update_slice_in_dim(c, n, i, axis=0)
-    return jax.vmap(write_one)(cache, new, idx)
+def mla_prefill_chunk(p: dict, x: Array, cfg: MLAConfig, cache: dict,
+                      slot, pos0) -> tuple[Array, dict]:
+    """Chunked prefill of ONE sequence's latents into the shared paged
+    cache (absorbed-latent attention with a causal chunk mask)."""
+    _, c, _ = x.shape
+    positions = (pos0 + jnp.arange(c, dtype=jnp.int32))[None, :]
+    q_nope, q_rope, c_kv_new, k_rope_new = _latents(p, x, cfg, positions)
+    table_row = cache["block_table"][slot]
+    ckv_pool = paged.scatter_chunk(cache["c_kv"], table_row, pos0,
+                                   c_kv_new[0])
+    rope_pool = paged.scatter_chunk(cache["k_rope"], table_row, pos0,
+                                    k_rope_new[0])
+    c_kv = paged.gather_blocks(ckv_pool, table_row[None])
+    k_rope = paged.gather_blocks(rope_pool, table_row[None])
+    valid = jnp.full((1,), pos0 + c, jnp.int32)
+    ctx = _latent_attend(p, cfg, q_nope, q_rope, c_kv, k_rope, valid,
+                         q_pos=positions)
+    out = common.dense(ctx.reshape(1, c, -1).astype(x.dtype), p["wo"])
+    new_cache = {"c_kv": ckv_pool, "k_rope": rope_pool,
+                 "block_table": cache["block_table"],
+                 "len": cache["len"].at[slot].set(pos0 + c)}
+    return out, new_cache
 
 
-def mla_cache_spec(batch: int, cache_size: int, cfg: MLAConfig,
-                   dtype=jnp.bfloat16) -> dict:
+def mla_cache_spec(batch: int, layout: PagedLayout, cfg: MLAConfig,
+                   dtype=jnp.bfloat16, num_blocks: int | None = None) -> dict:
+    nb = (paged.default_num_blocks(layout, batch) if num_blocks is None
+          else num_blocks)
     return {
-        "c_kv": jax.ShapeDtypeStruct((batch, cache_size, cfg.kv_lora), dtype),
-        "k_rope": jax.ShapeDtypeStruct((batch, cache_size, cfg.rope_dim), dtype),
+        "c_kv": jax.ShapeDtypeStruct(
+            (nb, layout.block_size, cfg.kv_lora), dtype),
+        "k_rope": jax.ShapeDtypeStruct(
+            (nb, layout.block_size, cfg.rope_dim), dtype),
+        "block_table": jax.ShapeDtypeStruct((batch, layout.max_blocks),
+                                            jnp.int32),
         "len": jax.ShapeDtypeStruct((batch,), jnp.int32),
     }

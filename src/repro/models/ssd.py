@@ -60,10 +60,19 @@ def mamba2_schema(d_model: int, cfg: SSMConfig) -> dict:
     }
 
 
-def causal_conv1d(x: Array, w: Array, b: Array) -> Array:
-    """Depthwise causal conv. x: [B, L, C]; w: [W, C]."""
+def causal_conv1d(x: Array, w: Array, b: Array,
+                  history: Array | None = None) -> Array:
+    """Depthwise causal conv. x: [B, L, C]; w: [W, C].
+
+    ``history`` ([B, W-1, C] pre-conv inputs of the preceding positions)
+    replaces the zero left-padding — chunked prefill continues the conv
+    exactly across chunk boundaries. Zero history == zero padding bitwise.
+    """
     width = w.shape[0]
-    xp = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    if history is None:
+        xp = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([history.astype(x.dtype), x], axis=1)
     out = jnp.zeros_like(x, dtype=jnp.float32)
     for i in range(width):  # width is 4: unrolled taps, XLA fuses
         out = out + xp[:, i: i + x.shape[1]].astype(jnp.float32) * w[i].astype(jnp.float32)
@@ -169,6 +178,47 @@ def mamba2_forward(p: dict, hidden: Array, cfg: SSMConfig, *,
         conv_tail = _conv_tail(hidden, p, cfg)
         return out, {"ssm": state, "conv": conv_tail}
     return out
+
+
+def mamba2_prefill_chunk(p: dict, hidden: Array, cfg: SSMConfig,
+                         cache: dict) -> tuple[Array, dict]:
+    """Chunked prefill: continue the mixer from a decode cache.
+
+    hidden: [B, C, d_model]; cache: {ssm [B,H,N,P], conv [B,W-1,conv_dim]}.
+    The conv continues from the cached pre-conv window and the SSD scan from
+    the cached state, so processing a prompt chunk-by-chunk is exact; with a
+    zero cache this is bitwise ``mamba2_forward(..., return_state=True)``.
+    """
+    b, l, _ = hidden.shape
+    di, n, h = cfg.d_inner, cfg.state_dim, cfg.num_heads
+
+    zxbcdt = common.dense(hidden, p["in_proj"])
+    z, xbc_pre, dt = jnp.split(zxbcdt, [di, di + cfg.conv_dim], axis=-1)
+    xbc = causal_conv1d(xbc_pre, p["conv_w"], p["conv_b"],
+                        history=cache["conv"])
+    x, bmat, cmat = jnp.split(xbc, [di, di + n], axis=-1)
+    x = x.reshape(b, l, h, cfg.head_dim)
+    from repro.distributed.sharding import shard_act
+    x = shard_act(x, "act_batch", "act_seq", "act_heads", None)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))
+    a_log_step = dt * a
+
+    y, state = _ssd_chunk_scan(x, dt, a_log_step, bmat, cmat,
+                               min(cfg.chunk, l), cfg.kahan_state,
+                               initial_state=cache["ssm"])
+    y = y + x.astype(jnp.float32).astype(y.dtype) * p["D"].astype(y.dtype)[:, None]
+    y = y.reshape(b, l, di)
+    y = common.rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                        p["norm"])
+    out = common.dense(y, p["out_proj"])
+    window = jnp.concatenate(
+        [cache["conv"].astype(xbc_pre.dtype), xbc_pre], axis=1)
+    new_cache = {"ssm": state.astype(cache["ssm"].dtype),
+                 "conv": window[:, -(cfg.conv_width - 1):
+                                ].astype(cache["conv"].dtype)}
+    return out, new_cache
 
 
 def _conv_tail(hidden: Array, p: dict, cfg: SSMConfig) -> Array:

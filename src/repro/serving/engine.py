@@ -1,17 +1,41 @@
-"""Slot-based continuous-batching decode engine.
+"""Paged-KV continuous-batching serving stack.
 
-A fixed pool of B slots shares one batched KV cache; requests claim a slot,
-prefill writes their cache row, and every engine step decodes the whole
-batch (inactive slots are masked host-side). Requests join and retire
-mid-stream — the serving pattern the decode_32k cell's serve_step lowers.
+Three cooperating pieces replace the old contiguous slot-row engine:
 
-Prefill runs at batch 1 per request (cache row insert); decode is the
-batched serve_step. Greedy sampling (argmax) keeps results deterministic
-for the parity tests.
+``BlockAllocator``
+    Free-list over the shared per-layer KV block pools. Block 0 is the
+    reserved null block (inactive slots point at it; stray writes from the
+    batched decode land there harmlessly). A request holds exactly
+    ``ceil((len(prompt) + max_new_tokens) / block_size)`` blocks — short
+    requests no longer reserve a full ``max_context`` row, which is the
+    paged memory/traffic win measured in ``benchmarks/bench_serving.py``.
+
+``Scheduler``
+    FIFO admission queue (``submit`` never fails — requests wait when the
+    slot pool or block pool is exhausted; head-of-line blocking is kept
+    deliberately so admission order equals submission order) plus chunked
+    prefill: prompts are cached ``prefill_chunk`` tokens at a time, ONE
+    chunk per engine step, interleaved with the batched decode step — a
+    long prompt never stalls the resident decode batch for more than one
+    chunk's latency (the old engine ran whole-prompt batch-1 prefill
+    between decode steps).
+
+``DecodeEngine``
+    Owns the jitted model functions and the device cache tree, drives the
+    scheduler, and keeps the fused ``_logit_stats`` pass: one batched
+    reduction-engine launch per step yields every slot's chosen-token
+    logprob, logsumexp and logit health statistics — only (B,)-sized
+    arrays ever reach the host.
+
+Determinism: greedy argmax sampling; a request's chunk boundaries and
+decode math depend only on its own prompt and the cache geometry, so
+batched serving matches solo generation token-for-token
+(tests/test_serving.py, tests/test_paged_kv.py).
 """
 
 from __future__ import annotations
 
+from collections import deque
 from dataclasses import dataclass, field
 
 import jax
@@ -19,8 +43,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import ops
-from repro.models import api
+from repro.models import api, paged
 from repro.models.config import ModelConfig
+from repro.models.paged import NULL_BLOCK, PagedLayout
+
+DEFAULT_BLOCK_SIZE = paged.DEFAULT_BLOCK_SIZE
 
 
 @dataclass
@@ -33,6 +60,121 @@ class Request:
     logprobs: list = field(default_factory=list)   # per emitted token
     slot: int | None = None
     done: bool = False
+    prefill_pos: int = 0                           # prompt tokens cached
+    blocks: list = field(default_factory=list)     # pool blocks held
+
+    @property
+    def num_cached(self) -> int:
+        """Tokens currently occupying KV positions (prompt + emitted)."""
+        return self.prefill_pos + len(self.output)
+
+
+class BlockAllocator:
+    """LIFO free-list over a ``num_blocks`` pool; block 0 stays reserved."""
+
+    def __init__(self, num_blocks: int):
+        assert num_blocks >= 2, "pool needs the null block plus capacity"
+        self.num_blocks = num_blocks
+        self._free = list(range(num_blocks - 1, NULL_BLOCK, -1))
+        self._held: set[int] = set()
+
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    def alloc(self, n: int) -> list[int]:
+        if n > len(self._free):
+            raise RuntimeError(f"block pool exhausted: want {n}, "
+                               f"have {len(self._free)}")
+        blocks = [self._free.pop() for _ in range(n)]
+        self._held.update(blocks)
+        return blocks
+
+    def free(self, blocks: list[int]) -> None:
+        for b in blocks:
+            assert b in self._held, f"double free of block {b}"
+            self._held.discard(b)
+            self._free.append(b)
+
+
+class Scheduler:
+    """FIFO admission + slot assignment + chunked-prefill bookkeeping."""
+
+    def __init__(self, allocator: BlockAllocator, max_slots: int,
+                 layout: PagedLayout, prefill_chunk: int):
+        self.allocator = allocator
+        self.layout = layout
+        self.prefill_chunk = prefill_chunk
+        self.waiting: deque[Request] = deque()
+        self.prefilling: deque[Request] = deque()
+        self.decoding: dict[int, Request] = {}
+        self._free_slots = list(range(max_slots))
+
+    def submit(self, req: Request) -> None:
+        need = len(req.prompt) + req.max_new_tokens
+        if need > self.layout.max_context:
+            raise ValueError(
+                f"request {req.rid}: prompt+max_new = {need} exceeds "
+                f"max_context {self.layout.max_context}")
+        usable = self.allocator.num_blocks - 1          # minus null block
+        if self.blocks_needed(req) > usable:
+            # would head-block the FIFO queue forever on an oversubscribed
+            # pool — reject at submission, not livelock at admission
+            raise ValueError(
+                f"request {req.rid}: needs {self.blocks_needed(req)} blocks "
+                f"but the pool only has {usable}")
+        self.waiting.append(req)
+
+    def blocks_needed(self, req: Request) -> int:
+        return self.layout.blocks_for(len(req.prompt) + req.max_new_tokens)
+
+    def admit(self) -> list[Request]:
+        """Move waiting requests into slots while capacity lasts. Strict
+        FIFO: the queue head blocks (no skip-ahead), so completion of
+        equal-length requests follows submission order."""
+        admitted = []
+        while self.waiting and self._free_slots:
+            need = self.blocks_needed(self.waiting[0])
+            if need > self.allocator.num_free:
+                break
+            req = self.waiting.popleft()
+            req.blocks = self.allocator.alloc(need)
+            req.slot = self._free_slots.pop()
+            req.prefill_pos = 0
+            self.prefilling.append(req)
+            admitted.append(req)
+        return admitted
+
+    def next_chunk(self) -> tuple[Request, list, int] | None:
+        """The head prefilling request's next chunk (req, tokens, pos0)."""
+        if not self.prefilling:
+            return None
+        req = self.prefilling[0]
+        pos0 = req.prefill_pos
+        return req, req.prompt[pos0:pos0 + self.prefill_chunk], pos0
+
+    def prefill_advance(self, req: Request, n: int) -> bool:
+        """Record ``n`` freshly cached prompt tokens; True when complete."""
+        req.prefill_pos += n
+        if req.prefill_pos == len(req.prompt):
+            self.prefilling.popleft()
+            return True
+        return False
+
+    def start_decoding(self, req: Request) -> None:
+        self.decoding[req.slot] = req
+
+    def retire(self, req: Request) -> None:
+        req.done = True
+        self.decoding.pop(req.slot, None)
+        self.allocator.free(req.blocks)
+        req.blocks = []
+        self._free_slots.append(req.slot)
+
+    @property
+    def num_unfinished(self) -> int:
+        return (len(self.waiting) + len(self.prefilling)
+                + len(self.decoding))
 
 
 @jax.jit
@@ -60,58 +202,125 @@ def _logit_stats(logits: jax.Array, tokens: jax.Array
 
 
 class DecodeEngine:
+    """Paged continuous-batching engine over a fixed slot pool.
+
+    ``num_blocks`` sets the shared pool size per layer (default: full
+    capacity — every slot could hold ``max_context``); passing a smaller
+    pool oversubscribes slots against blocks and the scheduler's admission
+    gate enforces real availability.
+    """
+
     def __init__(self, cfg: ModelConfig, params, *, max_slots: int = 4,
-                 cache_size: int = 256):
+                 max_context: int = 256,
+                 block_size: int = DEFAULT_BLOCK_SIZE,
+                 num_blocks: int | None = None, prefill_chunk: int = 32):
         assert cfg.family in ("dense", "moe", "ssm", "vlm"), cfg.family
         self.cfg = cfg
         self.params = params
         self.max_slots = max_slots
-        self.cache_size = cache_size
-        self._free = list(range(max_slots))
-        self._active: dict[int, Request] = {}
+        self.kv = api.KVCache.build(cfg, max_context=max_context,
+                                    block_size=block_size,
+                                    max_slots=max_slots,
+                                    num_blocks=num_blocks)
+        self.layout = self.kv.layout
+        self.scheduler = Scheduler(BlockAllocator(self.kv.num_blocks),
+                                   max_slots, self.layout, prefill_chunk)
 
-        self._prefill = jax.jit(api.prefill_fn(cfg, cache_size))
+        self._prefill_chunk = jax.jit(api.prefill_chunk_fn(cfg))
         self._decode = jax.jit(api.decode_fn(cfg))
-        self._insert = jax.jit(self._insert_impl)
+        self._reset_slot = jax.jit(paged.reset_slot)
+        self._keep_slots = jax.jit(paged.keep_slots)
 
-        # batched caches, zero-initialized
-        specs = api.cache_specs(cfg, max_slots, cache_size)
-        self.caches = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
-                                   specs)
+        self.caches = self.kv.init(max_slots)
         self._next_tokens = jnp.zeros((max_slots, 1), jnp.int32)
 
-    @staticmethod
-    def _insert_impl(caches, one_cache, slot):
-        """Write a batch-1 cache into slot ``slot`` (slot dim = 1, after the
-        layer-stack dim)."""
-        def ins(full, one):
-            return jax.lax.dynamic_update_slice_in_dim(full, one, slot, axis=1)
-        return jax.tree.map(ins, caches, one_cache)
+        # ECM-style KV traffic accounting: the bytes each LAYOUT must
+        # address per step (paged: the slot's allocated blocks; contiguous:
+        # a fixed max_context row). This is the analytic bound the paper's
+        # methodology predicts and the TPU decode kernel realizes; the
+        # XLA gather fallback (CPU decode, chunk prefill) materializes
+        # full virtual rows and is not what this counter measures.
+        # All-zero for constant-state (SSM) families — no per-token KV.
+        self._token_bytes = self.kv.token_bytes(max_slots)
+        self.kv_stats = {"paged_bytes": 0, "contiguous_bytes": 0,
+                         "decode_steps": 0, "prefill_chunks": 0}
 
     # ------------------------------------------------------------ API -----
 
     def submit(self, req: Request) -> None:
-        assert self._free, "no free slots"
-        slot = self._free.pop()
-        req.slot = slot
-        batch = {"tokens": jnp.asarray([req.prompt], jnp.int32)}
-        logits, one_cache = self._prefill(self.params, batch)
-        first = int(jnp.argmax(logits[0]))
-        req.output.append(first)
-        stats = _logit_stats(logits.reshape(1, -1),
-                             jnp.asarray([first], jnp.int32))
-        req.logprobs.append(float(stats["logprob"][0]))
-        self.caches = self._insert(self.caches, one_cache,
-                                   jnp.asarray(slot))
-        self._next_tokens = self._next_tokens.at[slot, 0].set(first)
-        self._active[slot] = req
+        """Enqueue a request. Never fails on a full slot/block pool — the
+        scheduler admits FIFO as capacity frees up."""
+        self.scheduler.submit(req)
 
     def step(self) -> None:
-        """One batched decode step for all active slots."""
-        if not self._active:
-            return
+        """One engine step: admit, run at most one prefill chunk, then one
+        batched decode step for every decoding slot."""
+        for req in self.scheduler.admit():
+            row = np.full((self.layout.max_blocks,), NULL_BLOCK, np.int32)
+            row[:len(req.blocks)] = req.blocks
+            self.caches = self._reset_slot(self.caches,
+                                           jnp.int32(req.slot),
+                                           jnp.asarray(row))
+
+        nxt = self.scheduler.next_chunk()
+        if nxt is not None:
+            req, chunk, pos0 = nxt
+            logits, self.caches = self._prefill_chunk(
+                self.params, jnp.asarray([chunk], jnp.int32), self.caches,
+                jnp.int32(req.slot), jnp.int32(pos0))
+            self._account_prefill(pos0 + len(chunk), first=pos0 == 0)
+            if self.scheduler.prefill_advance(req, len(chunk)):
+                self._emit_first_token(req, logits)
+
+        if self.scheduler.decoding:
+            self._decode_step()
+
+    def run_until_done(self, max_steps: int = 10_000) -> None:
+        for _ in range(max_steps):
+            if not self.scheduler.num_unfinished:
+                return
+            self.step()
+
+    @property
+    def num_active(self) -> int:
+        """Requests currently decoding (resident in the batch)."""
+        return len(self.scheduler.decoding)
+
+    @property
+    def num_unfinished(self) -> int:
+        """Everything still owed tokens: waiting + prefilling + decoding."""
+        return self.scheduler.num_unfinished
+
+    # ------------------------------------------------------- internals ----
+
+    def _emit_first_token(self, req: Request, logits: jax.Array) -> None:
+        """Final prefill chunk's logits yield the request's first token."""
+        tok = int(jnp.argmax(logits[0]))
+        stats = _logit_stats(logits.reshape(1, -1),
+                             jnp.asarray([tok], jnp.int32))
+        req.output.append(tok)
+        req.logprobs.append(float(stats["logprob"][0]))
+        self._next_tokens = self._next_tokens.at[req.slot, 0].set(tok)
+        if self._finished(req, tok):
+            self._retire(req)
+        else:
+            self.scheduler.start_decoding(req)
+
+    def _decode_step(self) -> None:
+        prefilling = [r.slot for r in self.scheduler.prefilling]
+        before = self.caches
         logits, self.caches = self._decode(self.params, self._next_tokens,
                                            self.caches)
+        if prefilling:
+            # The full-batch decode also "stepped" slots that are mid-
+            # chunked-prefill. Their pool writes are harmless (overwritten
+            # by the next chunk), but recurrent per-slot state (SSM
+            # state/conv, len) must be restored or the continuation
+            # diverges from solo generation.
+            mask = np.zeros((self.max_slots,), bool)
+            mask[prefilling] = True
+            self.caches = self._keep_slots(before, self.caches,
+                                           jnp.asarray(mask))
         rows = logits.reshape(logits.shape[0], -1)
         tokens_dev = jnp.argmax(rows, axis=-1).astype(jnp.int32)
         # Fused logprob/metric pass: one batched engine launch covers every
@@ -121,26 +330,50 @@ class DecodeEngine:
         tokens = np.asarray(tokens_dev)
         logprobs = np.asarray(stats["logprob"])
         self.last_logit_stats = {k: np.asarray(v) for k, v in stats.items()}
+        self._account_decode()
         retired = []
-        for slot, req in self._active.items():
+        for slot, req in self.scheduler.decoding.items():
             tok = int(tokens[slot])
             req.output.append(tok)
             req.logprobs.append(float(logprobs[slot]))
             self._next_tokens = self._next_tokens.at[slot, 0].set(tok)
-            if (len(req.output) >= req.max_new_tokens
-                    or (req.eos_id is not None and tok == req.eos_id)):
-                req.done = True
-                retired.append(slot)
-        for slot in retired:
-            del self._active[slot]
-            self._free.append(slot)
+            if self._finished(req, tok):
+                retired.append(req)
+        for req in retired:
+            self._retire(req)
 
-    def run_until_done(self, max_steps: int = 10_000) -> None:
-        for _ in range(max_steps):
-            if not self._active:
-                return
-            self.step()
+    def _finished(self, req: Request, tok: int) -> bool:
+        return (len(req.output) >= req.max_new_tokens
+                or (req.eos_id is not None and tok == req.eos_id))
 
-    @property
-    def num_active(self) -> int:
-        return len(self._active)
+    def _retire(self, req: Request) -> None:
+        slot = req.slot
+        self.scheduler.retire(req)
+        # Point the slot's tables back at the null block so the next
+        # batched steps' stray writes can't touch re-allocated blocks.
+        null_row = jnp.full((self.layout.max_blocks,), NULL_BLOCK, jnp.int32)
+        self.caches = self._reset_slot(self.caches, jnp.int32(slot),
+                                       null_row)
+
+    # ------------------------------------------------------- accounting ---
+
+    def _account_decode(self) -> None:
+        bs = self.layout.block_size
+        touched = sum(paged.cdiv(r.num_cached + 1, bs) * bs
+                      for r in self.scheduler.decoding.values())
+        self.kv_stats["paged_bytes"] += touched * self._token_bytes
+        self.kv_stats["contiguous_bytes"] += (len(self.scheduler.decoding)
+                                              * self.layout.max_context
+                                              * self._token_bytes)
+        self.kv_stats["decode_steps"] += 1
+
+    def _account_prefill(self, cached: int, *, first: bool) -> None:
+        bs = self.layout.block_size
+        self.kv_stats["paged_bytes"] += (paged.cdiv(cached, bs) * bs
+                                         * self._token_bytes)
+        if first:
+            # contiguous baseline: batch-1 prefill wrote a full max_context
+            # row (zero padding included) ONCE per request
+            self.kv_stats["contiguous_bytes"] += (self.layout.max_context
+                                                  * self._token_bytes)
+        self.kv_stats["prefill_chunks"] += 1

@@ -26,6 +26,13 @@ def _oracle(q, k, v, causal):
     (512, 512, 128, 256, 256, True),
     (128, 384, 64, 128, 128, False),     # cross-attention shape
     (256, 256, 32, 64, 128, True),       # uneven blocks
+    # ragged tails: lengths NOT divisible by the block sizes exercise the
+    # in-kernel tile_mask path (no host-side padding of Q/K/V)
+    (100, 100, 64, 64, 64, True),
+    (130, 257, 64, 64, 64, False),
+    (257, 130, 32, 64, 64, False),
+    (65, 65, 64, 64, 64, True),
+    (3, 7, 64, 64, 64, False),           # single partial block each way
 ])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 def test_flash_pallas_vs_oracle(lq, lk, d, qb, kb, causal, dtype):
@@ -42,6 +49,23 @@ def test_flash_pallas_vs_oracle(lq, lk, d, qb, kb, causal, dtype):
     np.testing.assert_allclose(np.asarray(got, np.float32),
                                np.asarray(want, np.float32),
                                atol=tol, rtol=tol)
+
+
+def test_tile_mask_helper():
+    """The shared tile-mask helper (flash + paged kernels): causal,
+    q-limit and k-limit constraints compose; no constraint -> None."""
+    import jax.numpy as jnp
+    from repro.kernels.flash_attention import tile_mask
+
+    assert tile_mask(0, 0, 4, 4) is None
+    m = tile_mask(2, 0, 3, 8, causal=True, k_limit=6)
+    want = (np.arange(2, 5)[:, None] >= np.arange(8)[None, :]) \
+        & (np.arange(8)[None, :] < 6)
+    assert np.array_equal(np.asarray(m), want)
+    # dynamic limit (the paged kernel's per-sequence length)
+    m = tile_mask(0, 4, 2, 4, k_limit=jnp.int32(6))
+    assert np.array_equal(np.asarray(m),
+                          (4 + np.arange(4))[None, :].repeat(2, 0) < 6)
 
 
 def test_flash_pallas_matches_model_flash():

@@ -70,7 +70,7 @@ def test_decode_attention_matches_full():
     kc = jax.random.normal(jax.random.key(5), (b, s, h, d))
     vc = jax.random.normal(jax.random.key(6), (b, s, h, d))
     lens = jnp.array([s, s // 2], jnp.int32)
-    got = A.decode_attention(q, kc, vc, lens)
+    got = A.attend_cache(q, kc, vc, lens)
     for i, ln in enumerate([s, s // 2]):
         want = _naive_attention(q[i:i + 1], kc[i:i + 1, :ln], vc[i:i + 1, :ln],
                                 causal=False)

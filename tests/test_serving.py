@@ -1,5 +1,6 @@
-"""Serving engine tests: batched continuous decoding must match
-one-request-at-a-time greedy generation exactly."""
+"""Serving engine tests: paged continuous batching must match solo greedy
+generation token-for-token, the admission queue must absorb overload, and
+the fused logprob path must match a plain logsumexp reference."""
 
 import jax
 import jax.numpy as jnp
@@ -7,7 +8,7 @@ import numpy as np
 import pytest
 
 from repro.configs import get_config, reduced
-from repro.models import api, common
+from repro.models import api, common, paged
 from repro.serving.engine import DecodeEngine, Request
 
 
@@ -18,11 +19,33 @@ def setup():
     return cfg, params
 
 
-def _reference_generate(cfg, params, prompt, n_new):
-    prefill = jax.jit(api.prefill_fn(cfg, 64))
+MAX_CONTEXT = 64
+BLOCK = 16
+CHUNK = 32
+
+
+def _solo_caches(cfg, layout):
+    kv = api.KVCache.build(cfg, max_context=layout.max_context,
+                           block_size=layout.block_size, max_slots=1)
+    caches = kv.init(1)
+    row = jnp.arange(1, 1 + layout.max_blocks, dtype=jnp.int32)
+    return jax.jit(paged.reset_slot)(caches, jnp.int32(0), row)
+
+
+def _reference_generate(cfg, params, prompt, n_new, chunk_size=CHUNK):
+    """Solo greedy generation through the SAME paged chunked-prefill +
+    decode path the engine batches — the determinism contract is that
+    batching must not perturb any individual stream."""
+    layout = paged.PagedLayout(BLOCK, MAX_CONTEXT // BLOCK)
+    caches = _solo_caches(cfg, layout)
+    chunk_fn = jax.jit(api.prefill_chunk_fn(cfg))
     decode = jax.jit(api.decode_fn(cfg))
-    logits, caches = prefill(params, {"tokens": jnp.asarray([prompt],
-                                                            jnp.int32)})
+    pos = 0
+    while pos < len(prompt):
+        chunk = prompt[pos:pos + chunk_size]
+        logits, caches = chunk_fn(params, jnp.asarray([chunk], jnp.int32),
+                                  caches, jnp.int32(0), jnp.int32(pos))
+        pos += len(chunk)
     out = [int(jnp.argmax(logits[0]))]
     while len(out) < n_new:
         logits, caches = decode(params, jnp.asarray([[out[-1]]], jnp.int32),
@@ -31,9 +54,16 @@ def _reference_generate(cfg, params, prompt, n_new):
     return out
 
 
+def _engine(cfg, params, **kw):
+    kw.setdefault("max_context", MAX_CONTEXT)
+    kw.setdefault("block_size", BLOCK)
+    kw.setdefault("prefill_chunk", CHUNK)
+    return DecodeEngine(cfg, params, **kw)
+
+
 def test_single_request_matches_reference(setup):
     cfg, params = setup
-    engine = DecodeEngine(cfg, params, max_slots=2, cache_size=64)
+    engine = _engine(cfg, params, max_slots=2)
     req = Request(rid=0, prompt=[5, 9, 11], max_new_tokens=6)
     engine.submit(req)
     engine.run_until_done()
@@ -45,7 +75,7 @@ def test_continuous_batching_mid_stream_join(setup):
     """A request joining mid-decode must not perturb the resident request,
     and both must match their solo generations."""
     cfg, params = setup
-    engine = DecodeEngine(cfg, params, max_slots=2, cache_size=64)
+    engine = _engine(cfg, params, max_slots=2)
     r1 = Request(rid=1, prompt=[1, 2, 3, 4], max_new_tokens=8)
     engine.submit(r1)
     engine.step()
@@ -58,30 +88,113 @@ def test_continuous_batching_mid_stream_join(setup):
     assert r2.output == _reference_generate(cfg, params, [7, 8], 5)
 
 
-def test_slot_reuse(setup):
+def test_slot_and_block_reuse(setup):
     cfg, params = setup
-    engine = DecodeEngine(cfg, params, max_slots=1, cache_size=64)
+    engine = _engine(cfg, params, max_slots=1)
     r1 = Request(rid=1, prompt=[3, 1], max_new_tokens=3)
     engine.submit(r1)
     engine.run_until_done()
+    free_after = engine.scheduler.allocator.num_free
+    assert free_after == engine.kv.num_blocks - 1   # all blocks returned
     r2 = Request(rid=2, prompt=[9, 9, 9], max_new_tokens=3)
-    engine.submit(r2)                  # reuses the slot
+    engine.submit(r2)                  # reuses the slot AND its blocks
     engine.run_until_done()
     assert r2.output == _reference_generate(cfg, params, [9, 9, 9], 3)
 
 
+def test_submit_beyond_slot_pool_queues(setup):
+    """Regression: submitting more requests than slots must queue, not
+    assert — every request completes, in FIFO admission order."""
+    cfg, params = setup
+    engine = _engine(cfg, params, max_slots=2)
+    reqs = [Request(rid=i, prompt=[i + 1, i + 2], max_new_tokens=3)
+            for i in range(6)]
+    for r in reqs:
+        engine.submit(r)               # 6 requests, 2 slots: no assert
+    assert engine.num_unfinished == 6
+    engine.run_until_done()
+    assert all(r.done for r in reqs)
+    for r in reqs:
+        assert r.output == _reference_generate(cfg, params, r.prompt, 3)
+
+
+def test_chunked_prefill_interleaves_with_decode(setup):
+    """A long prompt is prefilled chunk-by-chunk while the resident
+    request keeps emitting one token per engine step (never stalled)."""
+    cfg, params = setup
+    engine = _engine(cfg, params, max_slots=2, prefill_chunk=4)
+    r1 = Request(rid=1, prompt=[1, 2, 3], max_new_tokens=12)
+    engine.submit(r1)
+    engine.step()                      # r1 prefilled + first token + 1 step
+    emitted = [len(r1.output)]         # == 2
+    long_prompt = list(range(5, 5 + 20))   # 5 chunks of 4
+    r2 = Request(rid=2, prompt=long_prompt, max_new_tokens=4)
+    engine.submit(r2)
+    for _ in range(5):                 # r2's prefill spans these steps
+        engine.step()
+        emitted.append(len(r1.output))
+    # r1 gained a token on EVERY step — chunked prefill did not stall it
+    assert emitted == list(range(2, 8)), emitted
+    engine.run_until_done()
+    assert r1.output == _reference_generate(cfg, params, r1.prompt, 12)
+    assert r2.output == _reference_generate(cfg, params, long_prompt, 4)
+
+
+def test_context_overflow_rejected(setup):
+    cfg, params = setup
+    engine = _engine(cfg, params, max_slots=2)
+    with pytest.raises(ValueError):
+        engine.submit(Request(rid=0, prompt=list(range(60)),
+                              max_new_tokens=10))   # 70 > 64
+
+
 def test_ssm_family_engine():
-    """The engine also serves SSM archs (constant-size state caches)."""
-    from repro.configs import get_config, reduced
+    """The engine also serves SSM archs (constant-size state caches +
+    conv/SSD state continuation across prefill chunks)."""
     cfg = reduced(get_config("mamba2-780m"))
     params = common.init_params(api.schema(cfg), jax.random.key(1))
-    engine = DecodeEngine(cfg, params, max_slots=2, cache_size=64)
+    engine = _engine(cfg, params, max_slots=2, prefill_chunk=2)
     req = Request(rid=0, prompt=[4, 8, 15], max_new_tokens=5)
     engine.submit(req)
     engine.run_until_done()
     assert req.done and len(req.output) == 5
-    # parity with the reference path
+    # parity with the solo chunked path
     assert req.output == _reference_generate(cfg, params, [4, 8, 15], 5)
+
+
+def test_ssm_interleaved_prefill_parity():
+    """Regression: the batched decode step must not pollute the recurrent
+    SSM state of a slot that is mid-chunked-prefill — both the resident
+    request and the late joiner must match their solo generations."""
+    cfg = reduced(get_config("mamba2-780m"))
+    params = common.init_params(api.schema(cfg), jax.random.key(1))
+    engine = _engine(cfg, params, max_slots=2, prefill_chunk=4)
+    r1 = Request(rid=1, prompt=[4, 8, 15], max_new_tokens=10)
+    engine.submit(r1)
+    engine.step()                      # r1 resident and decoding
+    long_prompt = list(range(3, 23))   # 5 chunks, interleaved with decode
+    r2 = Request(rid=2, prompt=long_prompt, max_new_tokens=4)
+    engine.submit(r2)
+    engine.run_until_done()
+    assert r1.done and r2.done
+    assert r1.output == _reference_generate(cfg, params, [4, 8, 15], 10,
+                                            chunk_size=4)
+    assert r2.output == _reference_generate(cfg, params, long_prompt, 4,
+                                            chunk_size=4)
+
+
+def test_submit_rejects_pool_overflow(setup):
+    """A request that could never fit the (oversubscribed) block pool is
+    rejected at submit instead of livelocking the FIFO queue."""
+    cfg, params = setup
+    engine = _engine(cfg, params, max_slots=2, max_context=64,
+                     num_blocks=3)     # 2 usable blocks = 32 tokens
+    with pytest.raises(ValueError):
+        engine.submit(Request(rid=0, prompt=[1] * 30, max_new_tokens=10))
+    ok = Request(rid=1, prompt=[1] * 20, max_new_tokens=10)
+    engine.submit(ok)
+    engine.run_until_done()
+    assert ok.done
 
 
 def test_logprobs_fused_path(setup):
@@ -89,15 +202,17 @@ def test_logprobs_fused_path(setup):
     logprob equal to (chosen logit - logsumexp), computed via the batched
     fused reduction; must match a plain jnp logsumexp reference."""
     cfg, params = setup
-    engine = DecodeEngine(cfg, params, max_slots=2, cache_size=64)
+    engine = _engine(cfg, params, max_slots=2)
     req = Request(rid=0, prompt=[5, 9, 11], max_new_tokens=4)
     engine.submit(req)
 
-    # independent reference replay
-    prefill = jax.jit(api.prefill_fn(cfg, 64))
+    # independent reference replay through the solo paged path
+    layout = paged.PagedLayout(BLOCK, MAX_CONTEXT // BLOCK)
+    caches = _solo_caches(cfg, layout)
+    chunk_fn = jax.jit(api.prefill_chunk_fn(cfg))
     decode = jax.jit(api.decode_fn(cfg))
-    logits, caches = prefill(params, {"tokens": jnp.asarray([[5, 9, 11]],
-                                                            jnp.int32)})
+    logits, caches = chunk_fn(params, jnp.asarray([[5, 9, 11]], jnp.int32),
+                              caches, jnp.int32(0), jnp.int32(0))
     ref_lp = []
     row = np.asarray(logits, np.float32).reshape(-1)
     tok = int(row.argmax())
@@ -119,3 +234,17 @@ def test_logprobs_fused_path(setup):
     # the batched stats dict is exposed for monitoring
     assert set(engine.last_logit_stats) == {"logprob", "logsumexp", "max",
                                             "mean", "rms"}
+
+
+def test_kv_traffic_accounting(setup):
+    """Short requests in a wide-context engine touch far fewer KV bytes
+    than the contiguous per-slot layout would."""
+    cfg, params = setup
+    engine = _engine(cfg, params, max_slots=2, max_context=256)
+    for i in range(3):
+        engine.submit(Request(rid=i, prompt=[1 + i, 2, 3],
+                              max_new_tokens=4))
+    engine.run_until_done()
+    st = engine.kv_stats
+    assert st["paged_bytes"] > 0
+    assert st["contiguous_bytes"] > 4 * st["paged_bytes"]
