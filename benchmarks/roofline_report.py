@@ -56,6 +56,25 @@ def summary(cells: list[dict]) -> dict:
     return by_dominant
 
 
+def run() -> list[tuple]:
+    """Harness-addressable form (benchmarks/run.py --only roofline): one
+    CSV row per dry-run cell. Skips cleanly — a single informative row,
+    no failure — when no results/dryrun artifacts exist."""
+    cells = load_cells()
+    if not cells:
+        return [("roofline/cells", "0",
+                 "skipped: no results/dryrun artifacts (run "
+                 "repro.launch.dryrun first)")]
+    rows = []
+    for c in sorted(cells, key=lambda c: (c["arch"], c["shape"], c["mesh"])):
+        t_total = max(c["t_compute_s"], c["t_memory_s"], c["t_collective_s"])
+        rows.append((f"roofline/{c['arch']}/{c['shape']}/{c['mesh']}",
+                     f"{t_total * 1e6:.1f}",
+                     f"bound={c['dominant']}"
+                     f" roofline_frac={c['roofline_fraction']:.4f}"))
+    return rows
+
+
 def main() -> None:
     cells = load_cells()
     if not cells:

@@ -9,7 +9,10 @@
   bench_tpu_kahan         DESIGN.md §2.3 (the paper's question on v5e)
   bench_collectives       compensated all-reduce numerics + bandwidth model
   bench_serving           paged-KV engine: tok/s + KV-bytes-touched
+  bench_quant             quantized KV pools: tok/s + bytes + ppl proxy
+                          vs kv_dtype, measured vs ECM-predicted speedup
   roofline_report         §Roofline table from the dry-run artifacts
+                          (one row per cell; skips when artifacts absent)
 
 CLI:
   --only SUBSTR   run only modules whose name contains SUBSTR (repeatable)
@@ -25,8 +28,8 @@ import traceback
 
 from benchmarks import (bench_accuracy, bench_collectives,
                         bench_ecm_predictions, bench_kernel_throughput,
-                        bench_scaling, bench_serving, bench_tpu_kahan,
-                        roofline_report)
+                        bench_quant, bench_scaling, bench_serving,
+                        bench_tpu_kahan, roofline_report)
 
 MODULES = [
     bench_ecm_predictions,
@@ -36,6 +39,8 @@ MODULES = [
     bench_tpu_kahan,
     bench_collectives,
     bench_serving,
+    bench_quant,
+    roofline_report,
 ]
 
 
@@ -73,13 +78,6 @@ def main() -> None:
         with open(args.json, "w") as f:
             json.dump(collected, f, indent=1)
         print(f"# wrote {len(collected)} rows to {args.json}")
-    if args.only is None:
-        print("#")
-        print("# --- §Roofline table (from results/dryrun) ---")
-        try:
-            roofline_report.main()
-        except Exception:
-            traceback.print_exc()
     if failures:
         raise SystemExit(failures)
 

@@ -15,7 +15,9 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-BLOCK = 256
+from repro.quant import core as qcore
+
+BLOCK = qcore.EF_BLOCK
 
 
 class EFState(NamedTuple):
@@ -27,24 +29,19 @@ def ef_init(x: jax.Array) -> EFState:
 
 
 def _quantize(x: jax.Array) -> tuple[jax.Array, jax.Array, int]:
-    """Per-block symmetric int8 quantization. Returns (q, scales, pad)."""
-    flat = x.reshape(-1)
-    pad = (-flat.shape[0]) % BLOCK
-    if pad:
-        flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
-    blocks = flat.reshape(-1, BLOCK)
-    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
-    scale = jnp.maximum(scale, 1e-12)
-    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
-    return q, scale.astype(jnp.float32), pad
+    """Per-block symmetric int8 quantization. Returns (q, scales, pad).
+
+    Hoisted into ``repro.quant.core`` so the KV-cache pools and this
+    all-reduce payload share ONE implementation; the re-export keeps the
+    shard_map call sites below unchanged and tests/test_quant.py locks in
+    bitwise equivalence with the pre-hoist code.
+    """
+    return qcore.quantize_blocks(x, qcore.INT8, BLOCK)
 
 
 def _dequantize(q: jax.Array, scale: jax.Array, pad: int,
                 shape: tuple) -> jax.Array:
-    out = (q.astype(jnp.float32) * scale).reshape(-1)
-    if pad:
-        out = out[:-pad]
-    return out.reshape(shape)
+    return qcore.dequantize_blocks(q, scale, pad, shape)
 
 
 def ef_quantized_all_reduce(grad: jax.Array, state: EFState,

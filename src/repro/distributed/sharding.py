@@ -224,6 +224,14 @@ def serve_cache_shardings(cfg, cache_struct, mesh: Mesh, global_batch: int):
     (block addressing is indirect — any rank may own any slot's block),
     so they replicate except for a model split on a divisible feature
     dim; block tables and lengths shard over batch only.
+
+    Scale-array rule (quantized pools, repro.quant): the per-block scale
+    tiles ("kscale"/"vscale" [stack, NB, bs, H], MLA's "c_kv_scale"/
+    "k_rope_scale" [stack, NB, bs]) are pools too (POOL_KEYS) and take
+    the same branch — block axis over the data axes when divisible,
+    never the within-block position axis, and the head dim gets "model"
+    exactly when the value pool's head dim does, so a rank always holds
+    a block's payload and its scales together.
     """
     from jax.tree_util import tree_map_with_path
 

@@ -162,3 +162,50 @@ def predicted_runtime_s(kernel: TpuKernelSpec, n_elems: int, level: str,
 def vpu_ridge_flops_per_byte(hw: dict = TPU_V5E) -> float:
     """Flops/byte at which a VPU kernel stops being HBM-bound."""
     return hw["vpu_f32_flops"] / hw["hbm_bw"]
+
+
+# ---------------------------------------------------- quantized KV decode --
+#
+# The paged decode walk streams each resident sequence's KV blocks once per
+# step — the serving engine's dominant HBM traffic (kv_stats counts exactly
+# these bytes). Per cached KV *element* the kernel does ~2 flops for the
+# q·k score, ~2 for the p·v fold; a quantized pool adds 1 dequant multiply
+# (scale amortizes over the vector) — so the arithmetic intensity stays far
+# below the VPU ridge and the ECM prediction is pure byte ratio: decode
+# speeds up by bytes_bf16 / bytes_quant. That ratio (< the naive 2× because
+# each vec_len-element tile carries a 4-byte f32 scale) is the analytic
+# bound benchmarks/bench_quant.py compares the measured tok/s against.
+
+DECODE_FLOPS_PER_KV_ELEM = 4.0      # qk dot + pv fold, per element streamed
+DEQUANT_FLOPS_PER_KV_ELEM = 1.0     # in-register scale multiply
+
+
+def paged_decode_spec(kv_dtype: str, vec_len: int = 64) -> TpuKernelSpec:
+    """Streaming-kernel spec of the paged decode walk per cached KV element.
+
+    ``vec_len`` is the quantization tile length (head_dim for GQA pools,
+    the latent width for MLA) over which the 4-byte f32 scale amortizes.
+    """
+    from repro.quant.core import kv_bytes_per_value
+    bytes_per = kv_bytes_per_value(kv_dtype, vec_len)
+    flops = DECODE_FLOPS_PER_KV_ELEM
+    if kv_dtype != "bf16":
+        flops += DEQUANT_FLOPS_PER_KV_ELEM
+    return TpuKernelSpec(f"paged_decode_{kv_dtype}",
+                         bytes_per_update=bytes_per,
+                         flops_per_update=flops, dep_chain_ops=5)
+
+
+def predicted_decode_speedup(kv_dtype: str, vec_len: int = 64,
+                             level: str = "HBM", hw: dict = TPU_V5E,
+                             unroll: int | None = None) -> float:
+    """ECM-predicted decode-attention speedup of a quantized KV pool over
+    bf16 (>1 means faster). In the memory-bound regime this is the KV
+    byte ratio; if dequant ever pushed the kernel compute-bound the max()
+    in ``predict_level`` would cap it — the same mechanism that makes the
+    paper's compensation-free region visible."""
+    base = predict_level(paged_decode_spec("bf16", vec_len), level, hw,
+                         unroll=unroll)
+    quant = predict_level(paged_decode_spec(kv_dtype, vec_len), level, hw,
+                          unroll=unroll)
+    return quant.updates_per_s / base.updates_per_s

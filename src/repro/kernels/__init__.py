@@ -37,6 +37,9 @@ Public entry points:
   ops.batched_kahan_dot          many independent dots per launch
   ops.kahan_accumulate           fused elementwise compensated accumulate
   ops.paged_decode_attention     block-table decode attention (serving)
+  ops.paged_decode_attention_quant  same walk over int8/fp8 KV blocks with
+                                 in-register dequant (repro.quant scales)
+  ops.q8_matmul                  int8 weight matmul, compensated K-accum
   kahan_matmul                   compensated K-loop matmul accumulation
   flash_attention                VMEM-resident online softmax
 
@@ -52,3 +55,5 @@ from repro.kernels.flash_attention import flash_attention_pallas  # noqa: F401
 from repro.kernels.kahan_matmul import kahan_matmul  # noqa: F401
 from repro.kernels.paged_attention import (  # noqa: F401
     paged_decode_attention_pallas)
+from repro.kernels.paged_attention_quant import (  # noqa: F401
+    paged_decode_attention_quant_pallas)

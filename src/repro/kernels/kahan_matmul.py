@@ -73,3 +73,68 @@ def kahan_matmul(a: jax.Array, b: jax.Array, *, block_m: int = 256,
         ],
         interpret=interpret,
     )(a, b)
+
+
+# ------------------------------------------------------- int8 weight path --
+
+def _kahan_matmul_q8_kernel(a_ref, b_ref, s_ref, o_ref, acc_s, acc_c):
+    """K-blocked matmul against a quantized weight: the MXU partial product
+    is dequantized by the K-block's per-column scale tile, then folded into
+    the compensated accumulator — full fp32 + carry accumulation, so the
+    low-bit path's only error source is the weight quantization itself."""
+    k_idx = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(k_idx == 0)
+    def _init():
+        acc_s[...] = jnp.zeros_like(acc_s)
+        acc_c[...] = jnp.zeros_like(acc_c)
+
+    partial = jax.lax.dot_general(
+        a_ref[...], b_ref[...].astype(jnp.float32), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    partial = partial * s_ref[...]                  # [bm,bn] * [1,bn]
+    s, c = kahan.neumaier_step(acc_s[...], acc_c[...], partial)
+    acc_s[...] = s
+    acc_c[...] = c
+
+    @pl.when(k_idx == nk - 1)
+    def _emit():
+        o_ref[...] = (acc_s[...] + acc_c[...]).astype(o_ref.dtype)
+
+
+def kahan_matmul_q8(a: jax.Array, qw: jax.Array, scales: jax.Array, *,
+                    block_m: int = 256, block_n: int = 256,
+                    interpret: bool = False) -> jax.Array:
+    """C = A @ dequant(qw) with compensated fp32 K-accumulation.
+
+    a: [M, K] float; qw: [K, N] int8 (or fp8); scales: [K // block_k, N]
+    f32 from ``repro.quant.core.quantize_weight`` — the quantization
+    K-block IS the kernel's K-grid block, so dequantization is one
+    per-tile multiply of each MXU partial before the Neumaier fold.
+    """
+    m, k = a.shape
+    k2, n = qw.shape
+    nk, n2 = scales.shape
+    assert k == k2 and n == n2, (a.shape, qw.shape, scales.shape)
+    assert k % nk == 0, (k, nk)
+    bk = k // nk                          # quant block == kernel K block
+    bm, bn = min(block_m, m), min(block_n, n)
+    assert m % bm == 0 and n % bn == 0, (a.shape, qw.shape, (bm, bn, bk))
+
+    return pl.pallas_call(
+        _kahan_matmul_q8_kernel,
+        grid=(m // bm, n // bn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((bm, bn), jnp.float32),
+            pltpu.VMEM((bm, bn), jnp.float32),
+        ],
+        interpret=interpret,
+    )(a.astype(jnp.float32), qw, scales)

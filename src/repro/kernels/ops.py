@@ -199,6 +199,56 @@ def paged_decode_attention(q: jax.Array, kpool: jax.Array, vpool: jax.Array,
                               _auto_interpret(interpret))
 
 
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _paged_decode_quant_impl(q, kpool, vpool, kscale, vscale, table, lens,
+                             interpret):
+    from repro.kernels import paged_attention_quant
+    return paged_attention_quant.paged_decode_attention_quant_pallas(
+        q, kpool, vpool, kscale, vscale, table, lens, interpret=interpret)
+
+
+def paged_decode_attention_quant(q: jax.Array, kpool: jax.Array,
+                                 vpool: jax.Array, kscale: jax.Array,
+                                 vscale: jax.Array, block_table: jax.Array,
+                                 lens: jax.Array, *,
+                                 interpret: bool | None = None) -> jax.Array:
+    """Serving decode attention over QUANTIZED block-paged KV.
+
+    q: [B, Hq, D]; kpool/vpool: [num_blocks, bs, Hkv, Dh] int8/fp8;
+    kscale/vscale: [num_blocks, bs, Hkv] f32 scale tiles (one per cached
+    (token, head) — ``repro.quant.core.quantize_lastdim``); block_table:
+    [B, max_blocks]; lens: [B]. The kernel dequantizes in-register while
+    walking the table, keeping the compensated (sum, carry) online-softmax
+    streams; see ``repro.kernels.paged_attention_quant``.
+    """
+    assert q.ndim == 3 and kpool.ndim == 4, (q.shape, kpool.shape)
+    assert kscale.shape == kpool.shape[:3], (kscale.shape, kpool.shape)
+    assert block_table.shape[0] == q.shape[0] == lens.shape[0]
+    return _paged_decode_quant_impl(q, kpool, vpool, kscale, vscale,
+                                    block_table, lens.astype(jnp.int32),
+                                    _auto_interpret(interpret))
+
+
+# ------------------------------------------------------ quantized matmul --
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _q8_matmul_impl(a, qw, scales, interpret):
+    # direct from-import: the package re-exports a FUNCTION named
+    # kahan_matmul that shadows the module attribute
+    from repro.kernels.kahan_matmul import kahan_matmul_q8
+    return kahan_matmul_q8(a, qw, scales, interpret=interpret)
+
+
+def q8_matmul(a: jax.Array, qw: jax.Array, scales: jax.Array, *,
+              interpret: bool | None = None) -> jax.Array:
+    """A @ dequant(qw) with Kahan-compensated fp32 K-accumulation — the
+    int8 weight path for MLP/attention projections. ``qw``/``scales`` come
+    from ``repro.quant.core.quantize_weight``; see
+    ``repro.kernels.kahan_matmul.kahan_matmul_q8``."""
+    assert a.ndim == 2 and qw.ndim == 2 and scales.ndim == 2
+    return _q8_matmul_impl(a, qw, scales, _auto_interpret(interpret))
+
+
 # ------------------------------------------------------------ acc ---------
 
 @functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))

@@ -20,6 +20,13 @@ lengths are masked in-kernel with the ``tile_mask`` helper shared with
 work via ``pl.when`` (their DMA is still scheduled — the traffic win comes
 from the block table never pointing shorter sequences at dead blocks).
 
+The scratch init / per-block update / final emit are module-level helpers
+(``init_softmax_scratch`` / ``block_softmax_update`` /
+``emit_softmax_output``) and the grid spec a builder (``paged_grid_spec``)
+so the quantized sibling kernel (``paged_attention_quant.py`` — identical
+walk, in-register dequant) shares ONE implementation of the compensated
+online softmax: a fix here is a fix there.
+
 Exposed through ``ops.paged_decode_attention`` (auto-interpret on CPU) and
 validated against the gather-based jnp oracle in tests/test_paged_kv.py.
 """
@@ -37,6 +44,90 @@ from repro.core import kahan
 from repro.kernels.flash_attention import NEG_INF, tile_mask
 
 
+# ------------------------------------------------ shared kernel fragments --
+
+def init_softmax_scratch(m_scr, ls_scr, lc_scr, accs_scr, accc_scr) -> None:
+    """Reset the online-softmax scratch at the start of a block walk."""
+    m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+    ls_scr[...] = jnp.zeros_like(ls_scr)
+    lc_scr[...] = jnp.zeros_like(lc_scr)
+    accs_scr[...] = jnp.zeros_like(accs_scr)
+    accc_scr[...] = jnp.zeros_like(accc_scr)
+
+
+def block_softmax_update(q, k, v, length, j, *, scale: float, bs: int,
+                         groups: int, m_scr, ls_scr, lc_scr, accs_scr,
+                         accc_scr) -> None:
+    """Fold one f32 KV block into the compensated online softmax.
+
+    q: [g, d]; k: [bs, dh]; v: [bs, dv] — already dequantized f32. The
+    softmax rescale multiplies sum AND carry (decay-scaling rule); the
+    ragged tail of the last live block is masked via the shared
+    ``tile_mask`` helper.
+    """
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale            # [g, bs]
+    mask = tile_mask(0, j * bs, groups, bs, k_limit=length)
+    s = jnp.where(mask, s, NEG_INF)
+    m_prev = m_scr[...][:, :1]                     # [g, 1]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new) * mask
+    corr = jnp.exp(m_prev - m_new)                 # [g, 1]
+    ls, lc = kahan.neumaier_step(ls_scr[...][:, :1] * corr,
+                                 lc_scr[...][:, :1] * corr,
+                                 p.sum(axis=-1, keepdims=True))
+    pv = jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)        # [g, dv]
+    accs, accc = kahan.neumaier_step(accs_scr[...] * corr,
+                                     accc_scr[...] * corr, pv)
+    m_scr[...] = jnp.broadcast_to(m_new, m_scr.shape)
+    ls_scr[...] = jnp.broadcast_to(ls, ls_scr.shape)
+    lc_scr[...] = jnp.broadcast_to(lc, lc_scr.shape)
+    accs_scr[...] = accs
+    accc_scr[...] = accc
+
+
+def emit_softmax_output(o_ref, ls_scr, lc_scr, accs_scr, accc_scr) -> None:
+    """Normalize the compensated accumulators into the output block."""
+    l = ls_scr[...][:, :1] + lc_scr[...][:, :1]
+    acc = accs_scr[...] + accc_scr[...]
+    o_ref[0, 0] = (acc / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+def paged_grid_spec(b: int, hkv: int, mb: int, bs: int, groups: int,
+                    d: int, dk: int, dv: int,
+                    extra_in_specs: tuple = ()) -> "pltpu.PrefetchScalarGridSpec":
+    """Grid over (batch, kv-head, table slot) with the (block_table, lens)
+    scalar prefetch; ``extra_in_specs`` appends operands (the quantized
+    kernel's scale tiles) that follow the same table-indexed walk."""
+    return pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,               # (block_table, lens)
+        grid=(b, hkv, mb),
+        in_specs=[
+            pl.BlockSpec((1, 1, groups, d),
+                         lambda i, h, j, table, lens: (i, h, 0, 0)),
+            pl.BlockSpec((1, bs, 1, dk),
+                         lambda i, h, j, table, lens: (table[i, j], 0, h, 0)),
+            pl.BlockSpec((1, bs, 1, dv),
+                         lambda i, h, j, table, lens: (table[i, j], 0, h, 0)),
+            *extra_in_specs,
+        ],
+        out_specs=pl.BlockSpec((1, 1, groups, dv),
+                               lambda i, h, j, table, lens: (i, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((groups, 128), jnp.float32),   # m (col 0 used)
+            pltpu.VMEM((groups, 128), jnp.float32),   # l sum
+            pltpu.VMEM((groups, 128), jnp.float32),   # l carry
+            pltpu.VMEM((groups, dv), jnp.float32),    # acc sum
+            pltpu.VMEM((groups, dv), jnp.float32),    # acc carry
+        ],
+    )
+
+
+# ------------------------------------------------------------ bf16 kernel --
+
 def _paged_kernel(table_ref, lens_ref, q_ref, k_ref, v_ref, o_ref,
                   m_scr, ls_scr, lc_scr, accs_scr, accc_scr, *,
                   scale: float, bs: int, groups: int):
@@ -46,11 +137,7 @@ def _paged_kernel(table_ref, lens_ref, q_ref, k_ref, v_ref, o_ref,
 
     @pl.when(j == 0)
     def _init():
-        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
-        ls_scr[...] = jnp.zeros_like(ls_scr)
-        lc_scr[...] = jnp.zeros_like(lc_scr)
-        accs_scr[...] = jnp.zeros_like(accs_scr)
-        accc_scr[...] = jnp.zeros_like(accc_scr)
+        init_softmax_scratch(m_scr, ls_scr, lc_scr, accs_scr, accc_scr)
 
     length = lens_ref[b]
 
@@ -58,40 +145,17 @@ def _paged_kernel(table_ref, lens_ref, q_ref, k_ref, v_ref, o_ref,
     # updates — skip their MXU work.
     @pl.when(j * bs < length)
     def _block():
-        q = q_ref[0, 0].astype(jnp.float32)            # [g, d]
-        k = k_ref[0, :, 0, :].astype(jnp.float32)      # [bs, dh]
-        v = v_ref[0, :, 0, :].astype(jnp.float32)      # [bs, dv]
-        s = jax.lax.dot_general(
-            q, k, (((1,), (1,)), ((), ())),
-            preferred_element_type=jnp.float32) * scale        # [g, bs]
-        # ragged tail of the last live block (shared helper w/ flash kernel)
-        mask = tile_mask(0, j * bs, groups, bs, k_limit=length)
-        s = jnp.where(mask, s, NEG_INF)
-        m_prev = m_scr[...][:, :1]                     # [g, 1]
-        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
-        p = jnp.exp(s - m_new) * mask
-        corr = jnp.exp(m_prev - m_new)                 # [g, 1]
-        # compensated (sum, carry) streams for l and the output accumulator;
-        # the softmax rescale multiplies sum AND carry (decay-scaling rule)
-        ls, lc = kahan.neumaier_step(ls_scr[...][:, :1] * corr,
-                                     lc_scr[...][:, :1] * corr,
-                                     p.sum(axis=-1, keepdims=True))
-        pv = jax.lax.dot_general(
-            p, v, (((1,), (0,)), ((), ())),
-            preferred_element_type=jnp.float32)        # [g, dv]
-        accs, accc = kahan.neumaier_step(accs_scr[...] * corr,
-                                         accc_scr[...] * corr, pv)
-        m_scr[...] = jnp.broadcast_to(m_new, m_scr.shape)
-        ls_scr[...] = jnp.broadcast_to(ls, ls_scr.shape)
-        lc_scr[...] = jnp.broadcast_to(lc, lc_scr.shape)
-        accs_scr[...] = accs
-        accc_scr[...] = accc
+        block_softmax_update(
+            q_ref[0, 0].astype(jnp.float32),           # [g, d]
+            k_ref[0, :, 0, :].astype(jnp.float32),     # [bs, dh]
+            v_ref[0, :, 0, :].astype(jnp.float32),     # [bs, dv]
+            length, j, scale=scale, bs=bs, groups=groups,
+            m_scr=m_scr, ls_scr=ls_scr, lc_scr=lc_scr,
+            accs_scr=accs_scr, accc_scr=accc_scr)
 
     @pl.when(j == nj - 1)
     def _emit():
-        l = ls_scr[...][:, :1] + lc_scr[...][:, :1]
-        acc = accs_scr[...] + accc_scr[...]
-        o_ref[0, 0] = (acc / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+        emit_softmax_output(o_ref, ls_scr, lc_scr, accs_scr, accc_scr)
 
 
 def paged_decode_attention_pallas(q: jax.Array, kpool: jax.Array,
@@ -112,27 +176,8 @@ def paged_decode_attention_pallas(q: jax.Array, kpool: jax.Array,
     qg = q.reshape(b, hkv, groups, d)
     scale = d ** -0.5
 
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,               # (block_table, lens)
-        grid=(b, hkv, mb),
-        in_specs=[
-            pl.BlockSpec((1, 1, groups, d),
-                         lambda i, h, j, table, lens: (i, h, 0, 0)),
-            pl.BlockSpec((1, bs, 1, kpool.shape[-1]),
-                         lambda i, h, j, table, lens: (table[i, j], 0, h, 0)),
-            pl.BlockSpec((1, bs, 1, dv),
-                         lambda i, h, j, table, lens: (table[i, j], 0, h, 0)),
-        ],
-        out_specs=pl.BlockSpec((1, 1, groups, dv),
-                               lambda i, h, j, table, lens: (i, h, 0, 0)),
-        scratch_shapes=[
-            pltpu.VMEM((groups, 128), jnp.float32),   # m (col 0 used)
-            pltpu.VMEM((groups, 128), jnp.float32),   # l sum
-            pltpu.VMEM((groups, 128), jnp.float32),   # l carry
-            pltpu.VMEM((groups, dv), jnp.float32),    # acc sum
-            pltpu.VMEM((groups, dv), jnp.float32),    # acc carry
-        ],
-    )
+    grid_spec = paged_grid_spec(b, hkv, mb, bs, groups, d,
+                                kpool.shape[-1], dv)
     kernel = functools.partial(_paged_kernel, scale=scale, bs=bs,
                                groups=groups)
     out = pl.pallas_call(

@@ -25,6 +25,11 @@ def main() -> None:
     ap.add_argument("--max-context", type=int, default=256)
     ap.add_argument("--block-size", type=int, default=16)
     ap.add_argument("--prefill-chunk", type=int, default=32)
+    ap.add_argument("--kv-dtype", default="bf16",
+                    choices=("bf16", "int8", "fp8"),
+                    help="KV-cache pool precision (repro.quant): quantized "
+                         "pools carry per-(token, head) scale tiles and cut "
+                         "KV bytes/token ~2x")
     args = ap.parse_args()
 
     cfg = reduced(get_config(args.arch))
@@ -33,6 +38,7 @@ def main() -> None:
                          f"prefill/decode API directly (see repro.models.api)")
     if cfg.family == "vlm":
         cfg = cfg.with_(vlm=None, family="dense")   # text-only serving demo
+    cfg = cfg.with_(kv_dtype=args.kv_dtype)
     params = common.init_params(api.schema(cfg), jax.random.key(0))
     engine = DecodeEngine(cfg, params, max_slots=args.slots,
                           max_context=args.max_context,
@@ -64,6 +70,10 @@ def main() -> None:
         line += (f" | KV touched {st['paged_bytes']/2**20:.1f} MiB paged vs "
                  f"{st['contiguous_bytes']/2**20:.1f} MiB contiguous "
                  f"({ratio:.1f}x less)")
+        if args.kv_dtype != "bf16":
+            qratio = st["paged_bytes_bf16"] / st["paged_bytes"]
+            line += (f" | {args.kv_dtype} KV {qratio:.2f}x fewer bytes "
+                     f"than bf16 pools")
     else:   # ssm family: constant-size state, no per-token KV to page
         line += " | constant-state family (no per-token KV)"
     print(line)

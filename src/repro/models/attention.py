@@ -35,6 +35,7 @@ from repro.core import kahan
 from repro.models import common, paged
 from repro.models.common import ParamSpec
 from repro.models.paged import PagedLayout
+from repro.quant import core as qcore
 
 Array = jax.Array
 
@@ -64,6 +65,10 @@ class AttnConfig(NamedTuple):
     # §Perf knob: triangular block packing — compute only the nq(nq+1)/2
     # valid (q,kv) block pairs of a causal mask instead of all nq·nk
     causal_packing: bool = False
+    # low-bit KV pools (repro.quant): "bf16" | "int8" | "fp8". Quantized
+    # pools carry per-(block, token-row, head) scale tiles ("kscale" /
+    # "vscale") addressed through the SAME block table as the data.
+    kv_dtype: str = "bf16"
 
 
 def gqa_schema(d_model: int, cfg: AttnConfig) -> dict:
@@ -311,18 +316,65 @@ def gqa_prefill(p: dict, x: Array, cfg: AttnConfig, layout: PagedLayout
 
     The computed K/V rows are re-laid-out into a per-batch identity-table
     pool (a pure reshape — the later block gather reproduces them bitwise).
+    Under a quantized ``kv_dtype`` the rows are quantized per (token, head)
+    first and the prefill attention runs over the *dequantized* values —
+    the cache IS the quantized data, so every consumer (this prefill, later
+    chunks, decode) sees exactly the same K/V and the only divergence from
+    the bf16 path is the quantization rounding itself.
     """
     b, l, _ = x.shape
     positions = jnp.broadcast_to(jnp.arange(l)[None, :], (b, l))
     q, k, v = _project_qkv(p, x, cfg, positions)
+    fmt = qcore.get_format(cfg.kv_dtype)
+    scale_pools = {}
+    if fmt is None:
+        k_store, v_store = k, v
+    else:
+        k_store, sk = qcore.quantize_lastdim(k, fmt)
+        v_store, sv = qcore.quantize_lastdim(v, fmt)
+        k = qcore.dequantize_lastdim(k_store, sk, x.dtype)
+        v = qcore.dequantize_lastdim(v_store, sv, x.dtype)
+        scale_pools = {"kscale": paged.pool_from_rows(sk, layout),
+                       "vscale": paged.pool_from_rows(sv, layout)}
     out = flash_attention(q, k, v, causal=cfg.causal, q_chunk=cfg.q_chunk,
                           kv_chunk=cfg.kv_chunk, kahan_acc=cfg.kahan_acc,
                           causal_packing=cfg.causal_packing)
-    cache = {"kpool": paged.pool_from_rows(k, layout),
-             "vpool": paged.pool_from_rows(v, layout),
+    cache = {"kpool": paged.pool_from_rows(k_store, layout),
+             "vpool": paged.pool_from_rows(v_store, layout),
              "block_table": paged.identity_table(b, layout),
-             "len": jnp.full((b,), l, jnp.int32)}
+             "len": jnp.full((b,), l, jnp.int32), **scale_pools}
     return common.dense(out.reshape(b, l, -1), p["wo"]), cache
+
+
+def _scatter_kv(cache: dict, k: Array, v: Array,
+                fmt: qcore.QuantFormat | None, scatter_fn) -> dict:
+    """Append K/V payloads (and, when quantized, their per-(token, head)
+    scale tiles) through ``scatter_fn(pool, vals)`` — the ONE place the
+    quantize-on-write happens for both the token and chunk append paths."""
+    if fmt is None:
+        return {"kpool": scatter_fn(cache["kpool"], k),
+                "vpool": scatter_fn(cache["vpool"], v)}
+    qk, sk = qcore.quantize_lastdim(k, fmt)
+    qv, sv = qcore.quantize_lastdim(v, fmt)
+    return {"kpool": scatter_fn(cache["kpool"], qk),
+            "vpool": scatter_fn(cache["vpool"], qv),
+            "kscale": scatter_fn(cache["kscale"], sk),
+            "vscale": scatter_fn(cache["vscale"], sv)}
+
+
+def _gather_kv(pools: dict, table: Array, fmt: qcore.QuantFormat | None,
+               dtype) -> tuple[Array, Array]:
+    """Materialize virtual K/V rows from the pools — dequantizing to
+    ``dtype`` when the pools are quantized (every reader sees exactly what
+    the cache stores)."""
+    k = paged.gather_blocks(pools["kpool"], table)
+    v = paged.gather_blocks(pools["vpool"], table)
+    if fmt is None:
+        return k, v
+    return (qcore.dequantize_lastdim(
+                k, paged.gather_blocks(pools["kscale"], table), dtype),
+            qcore.dequantize_lastdim(
+                v, paged.gather_blocks(pools["vscale"], table), dtype))
 
 
 def paged_kernel_enabled() -> bool:
@@ -337,26 +389,36 @@ def paged_kernel_enabled() -> bool:
 
 def gqa_decode(p: dict, x: Array, cfg: AttnConfig, cache: dict
                ) -> tuple[Array, dict]:
-    """One-token paged decode. x: [B, 1, d]; cache: paged (pool + table)."""
+    """One-token paged decode. x: [B, 1, d]; cache: paged (pool + table).
+
+    Quantized pools (``cfg.kv_dtype``) scatter the new token's quantized
+    K/V plus its per-head scales, then dispatch to the dequantizing Pallas
+    kernel on TPU (``kernels.paged_attention_quant`` — in-register dequant,
+    compensated (sum, carry) streams) or gather + dequantize elsewhere.
+    """
     b, _, _ = x.shape
     idx = cache["len"]                                 # [B]
+    table = cache["block_table"]
     positions = idx[:, None]                           # next position
     q, k_new, v_new = _project_qkv(p, x, cfg, positions)
-    kpool = paged.scatter_token(cache["kpool"], cache["block_table"], idx,
-                                k_new[:, 0])
-    vpool = paged.scatter_token(cache["vpool"], cache["block_table"], idx,
-                                v_new[:, 0])
+    fmt = qcore.get_format(cfg.kv_dtype)
+    pools = _scatter_kv(
+        cache, k_new[:, 0], v_new[:, 0], fmt,
+        lambda pool, vals: paged.scatter_token(pool, table, idx, vals))
     if paged_kernel_enabled():
         from repro.kernels import ops
-        out = ops.paged_decode_attention(
-            q[:, 0], kpool, vpool, cache["block_table"], idx + 1)[:, None]
-        out = out.astype(vpool.dtype)
+        if fmt is None:
+            out = ops.paged_decode_attention(
+                q[:, 0], pools["kpool"], pools["vpool"], table,
+                idx + 1)[:, None].astype(pools["vpool"].dtype)
+        else:
+            out = ops.paged_decode_attention_quant(
+                q[:, 0], pools["kpool"], pools["vpool"], pools["kscale"],
+                pools["vscale"], table, idx + 1)[:, None].astype(x.dtype)
     else:
-        k = paged.gather_blocks(kpool, cache["block_table"])  # [B,mb*bs,H,D]
-        v = paged.gather_blocks(vpool, cache["block_table"])
+        k, v = _gather_kv(pools, table, fmt, x.dtype)  # [B, mb*bs, H, D]
         out = attend_cache(q, k, v, idx + 1)
-    new_cache = {"kpool": kpool, "vpool": vpool,
-                 "block_table": cache["block_table"], "len": idx + 1}
+    new_cache = {**pools, "block_table": table, "len": idx + 1}
     return common.dense(out.reshape(b, 1, -1), p["wo"]), new_cache
 
 
@@ -375,15 +437,18 @@ def gqa_prefill_chunk(p: dict, x: Array, cfg: AttnConfig, cache: dict,
     positions = (pos0 + jnp.arange(c, dtype=jnp.int32))[None, :]
     q, k_new, v_new = _project_qkv(p, x, cfg, positions)
     table_row = cache["block_table"][slot]             # [mb]
-    kpool = paged.scatter_chunk(cache["kpool"], table_row, pos0, k_new[0])
-    vpool = paged.scatter_chunk(cache["vpool"], table_row, pos0, v_new[0])
-    k = paged.gather_blocks(kpool, table_row[None])    # [1, mb*bs, H, D]
-    v = paged.gather_blocks(vpool, table_row[None])
+    fmt = qcore.get_format(cfg.kv_dtype)
+    # quantized pools: the chunk is quantized per (token, head) as it is
+    # written — per-token scales make this append bit-identical to the
+    # one-shot prefill's quantization of the same tokens
+    pools = _scatter_kv(
+        cache, k_new[0], v_new[0], fmt,
+        lambda pool, vals: paged.scatter_chunk(pool, table_row, pos0, vals))
+    k, v = _gather_kv(pools, table_row[None], fmt, x.dtype)  # [1,mb*bs,H,D]
     out = flash_attention(q, k, v, causal=cfg.causal, q_chunk=cfg.q_chunk,
                           kv_chunk=cfg.kv_chunk, kahan_acc=cfg.kahan_acc,
                           q_offset=pos0, kv_len=pos0 + c)
-    new_cache = {"kpool": kpool, "vpool": vpool,
-                 "block_table": cache["block_table"],
+    new_cache = {**pools, "block_table": cache["block_table"],
                  "len": cache["len"].at[slot].set(pos0 + c)}
     return common.dense(out.reshape(1, c, -1), p["wo"]), new_cache
 
@@ -392,9 +457,18 @@ def gqa_cache_spec(batch: int, layout: PagedLayout, cfg: AttnConfig,
                    dtype=jnp.bfloat16, num_blocks: int | None = None) -> dict:
     nb = (paged.default_num_blocks(layout, batch) if num_blocks is None
           else num_blocks)
+    fmt = qcore.get_format(cfg.kv_dtype)
     pool = (nb, layout.block_size, cfg.num_kv_heads, cfg.head_dim)
-    return {"kpool": jax.ShapeDtypeStruct(pool, dtype),
-            "vpool": jax.ShapeDtypeStruct(pool, dtype),
+    spec = {"kpool": jax.ShapeDtypeStruct(pool, dtype if fmt is None
+                                          else fmt.dtype),
+            "vpool": jax.ShapeDtypeStruct(pool, dtype if fmt is None
+                                          else fmt.dtype),
             "block_table": jax.ShapeDtypeStruct((batch, layout.max_blocks),
                                                 jnp.int32),
             "len": jax.ShapeDtypeStruct((batch,), jnp.int32)}
+    if fmt is not None:
+        # per-(block, token-row, head) scale tiles, pooled like the data
+        sshape = (nb, layout.block_size, cfg.num_kv_heads)
+        spec["kscale"] = jax.ShapeDtypeStruct(sshape, jnp.float32)
+        spec["vscale"] = jax.ShapeDtypeStruct(sshape, jnp.float32)
+    return spec

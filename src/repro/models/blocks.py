@@ -63,6 +63,12 @@ def dense_block_schema(cfg: ModelConfig, d_ff: int) -> dict:
     return s
 
 
+def _mla_cfg(cfg: ModelConfig):
+    """MLA config with the model-level ``kv_dtype`` knob threaded through
+    (cache-touching paths only — the train-time forward never quantizes)."""
+    return cfg.mla._replace(kv_dtype=cfg.kv_dtype)
+
+
 EMPTY_AUX = {"moe_load_balance": 0.0, "moe_z_loss": 0.0, "moe_drop_fraction": 0.0}
 
 
@@ -119,7 +125,7 @@ def block_prefill(p: dict, h: Array, cfg: ModelConfig, layout: PagedLayout,
 
     x = common.apply_norm(h, p["ln_attn"], cfg.norm)
     if cfg.mla is not None:
-        y, cache = mla.mla_prefill(p["attn"], x, cfg.mla, layout)
+        y, cache = mla.mla_prefill(p["attn"], x, _mla_cfg(cfg), layout)
     else:
         y, cache = attn.gqa_prefill(p["attn"], x, cfg.attn(), layout)
     h = h + y
@@ -153,8 +159,8 @@ def block_prefill_chunk(p: dict, h: Array, cfg: ModelConfig, cache: dict,
 
     x = common.apply_norm(h, p["ln_attn"], cfg.norm)
     if cfg.mla is not None:
-        y, new_cache = mla.mla_prefill_chunk(p["attn"], x, cfg.mla, cache,
-                                             slot, pos0)
+        y, new_cache = mla.mla_prefill_chunk(p["attn"], x, _mla_cfg(cfg),
+                                             cache, slot, pos0)
     else:
         y, new_cache = attn.gqa_prefill_chunk(p["attn"], x, cfg.attn(),
                                               cache, slot, pos0)
@@ -178,7 +184,7 @@ def block_decode(p: dict, h: Array, cfg: ModelConfig, cache: dict,
 
     x = common.apply_norm(h, p["ln_attn"], cfg.norm)
     if cfg.mla is not None:
-        y, new_cache = mla.mla_decode(p["attn"], x, cfg.mla, cache)
+        y, new_cache = mla.mla_decode(p["attn"], x, _mla_cfg(cfg), cache)
     else:
         y, new_cache = attn.gqa_decode(p["attn"], x, cfg.attn(), cache)
     h = h + y
@@ -194,7 +200,7 @@ def block_cache_spec(cfg: ModelConfig, batch: int, layout: PagedLayout,
     if cfg.family in ("ssm", "hybrid"):
         return ssd.mamba2_cache_spec(batch, cfg.ssm)
     if cfg.mla is not None:
-        return mla.mla_cache_spec(batch, layout, cfg.mla,
+        return mla.mla_cache_spec(batch, layout, _mla_cfg(cfg),
                                   num_blocks=num_blocks)
     return attn.gqa_cache_spec(batch, layout, cfg.attn(),
                                num_blocks=num_blocks)

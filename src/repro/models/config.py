@@ -67,6 +67,8 @@ class ModelConfig:
     remat_policy: str = "nothing"  # nothing | dots  (§Perf knob)
     kahan_attn: bool = False       # compensated online-softmax accumulator
     kahan_ssm_state: bool = False  # compensated SSD state carry
+    # low-bit KV-cache pools (repro.quant): "bf16" (identity) | "int8" | "fp8"
+    kv_dtype: str = "bf16"
     # §Perf knobs (see EXPERIMENTS.md §Perf):
     causal_packing: bool = False   # triangular-packed causal attention
     sp_residual: bool = False      # sequence-shard the residual stream (SP)
@@ -80,7 +82,7 @@ class ModelConfig:
             rope_theta=self.rope_theta, rotary_fraction=self.rotary_fraction,
             q_chunk=self.q_chunk, kv_chunk=self.kv_chunk,
             kahan_acc=self.kahan_attn, causal=causal,
-            causal_packing=self.causal_packing)
+            causal_packing=self.causal_packing, kv_dtype=self.kv_dtype)
 
     def with_(self, **kw) -> "ModelConfig":
         return replace(self, **kw)

@@ -22,11 +22,15 @@ Array = jax.Array
 
 
 def _acfg(cfg: ModelConfig, *, causal: bool) -> attn.AttnConfig:
+    # kv_dtype quantizes the paged decoder self-KV pools (the gqa append
+    # paths handle it); the cross-K/V memory is computed once at prefill
+    # and stays bf16 — it is read-only and batch-local, not pooled.
     return attn.AttnConfig(
         num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
         head_dim=cfg.head_dim, rotary_fraction=0.0,   # whisper: no rope
         q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk,
-        kahan_acc=cfg.kahan_attn, causal=causal)
+        kahan_acc=cfg.kahan_attn, causal=causal,
+        kv_dtype=cfg.kv_dtype if causal else "bf16")
 
 
 def _cross_schema(cfg: ModelConfig) -> dict:

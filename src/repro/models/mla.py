@@ -19,6 +19,7 @@ from repro.models import common, paged
 from repro.models.attention import flash_attention
 from repro.models.common import ParamSpec
 from repro.models.paged import PagedLayout
+from repro.quant import core as qcore
 
 Array = jax.Array
 
@@ -34,6 +35,9 @@ class MLAConfig(NamedTuple):
     q_chunk: int = 512
     kv_chunk: int = 512
     causal_packing: bool = False
+    # low-bit latent pools (repro.quant): one scale per cached token for
+    # c_kv and k_rope each (the latent vector is the quantization tile)
+    kv_dtype: str = "bf16"
 
 
 def mla_schema(d_model: int, cfg: MLAConfig) -> dict:
@@ -107,6 +111,19 @@ def mla_prefill(p: dict, x: Array, cfg: MLAConfig, layout: PagedLayout
     h = cfg.num_heads
     positions = jnp.broadcast_to(jnp.arange(l)[None, :], (b, l))
     q_nope, q_rope, c_kv, k_rope = _latents(p, x, cfg, positions)
+    # quantized latent cache: the cache IS the quantized latents, so the
+    # prefill attention (and the k_nope/v up-projections feeding it) must
+    # consume the dequantized values every later consumer will see
+    fmt = qcore.get_format(cfg.kv_dtype)
+    scale_pools = {}
+    c_kv_store, k_rope_store = c_kv, k_rope
+    if fmt is not None:
+        c_kv_store, s_ckv = qcore.quantize_lastdim(c_kv, fmt)    # [B,L]
+        k_rope_store, s_kr = qcore.quantize_lastdim(k_rope, fmt)
+        c_kv = qcore.dequantize_lastdim(c_kv_store, s_ckv, x.dtype)
+        k_rope = qcore.dequantize_lastdim(k_rope_store, s_kr, x.dtype)
+        scale_pools = {"c_kv_scale": paged.pool_from_rows(s_ckv, layout),
+                       "k_rope_scale": paged.pool_from_rows(s_kr, layout)}
     k_nope = common.dense(c_kv, p["wk_b"]).reshape(b, l, h, cfg.nope_dim)
     v = common.dense(c_kv, p["wv_b"]).reshape(b, l, h, cfg.v_dim)
     q = jnp.concatenate([q_nope, q_rope], axis=-1)
@@ -119,11 +136,40 @@ def mla_prefill(p: dict, x: Array, cfg: MLAConfig, layout: PagedLayout
                                causal_packing=cfg.causal_packing)
     out = common.dense(attn_out.reshape(b, l, -1), p["wo"])
     # paged latent cache: the pooled S axis pages exactly like a KV cache
-    cache = {"c_kv": paged.pool_from_rows(c_kv, layout),
-             "k_rope": paged.pool_from_rows(k_rope, layout),
+    cache = {"c_kv": paged.pool_from_rows(c_kv_store, layout),
+             "k_rope": paged.pool_from_rows(k_rope_store, layout),
              "block_table": paged.identity_table(b, layout),
-             "len": jnp.full((b,), l, jnp.int32)}
+             "len": jnp.full((b,), l, jnp.int32), **scale_pools}
     return out, cache
+
+
+def _scatter_latents(cache: dict, c_kv: Array, k_rope: Array,
+                     fmt, scatter_fn) -> dict:
+    """Append latents (plus per-token scales when quantized) through
+    ``scatter_fn(pool, vals)`` — shared by the token and chunk paths."""
+    if fmt is None:
+        return {"c_kv": scatter_fn(cache["c_kv"], c_kv),
+                "k_rope": scatter_fn(cache["k_rope"], k_rope)}
+    q_ckv, s_ckv = qcore.quantize_lastdim(c_kv, fmt)
+    q_kr, s_kr = qcore.quantize_lastdim(k_rope, fmt)
+    return {"c_kv": scatter_fn(cache["c_kv"], q_ckv),
+            "k_rope": scatter_fn(cache["k_rope"], q_kr),
+            "c_kv_scale": scatter_fn(cache["c_kv_scale"], s_ckv),
+            "k_rope_scale": scatter_fn(cache["k_rope_scale"], s_kr)}
+
+
+def _gather_latents(pools: dict, table: Array, fmt,
+                    dtype) -> tuple[Array, Array]:
+    """Materialize virtual latent rows, dequantizing when quantized."""
+    c_kv = paged.gather_blocks(pools["c_kv"], table)
+    k_rope = paged.gather_blocks(pools["k_rope"], table)
+    if fmt is None:
+        return c_kv, k_rope
+    return (qcore.dequantize_lastdim(
+                c_kv, paged.gather_blocks(pools["c_kv_scale"], table), dtype),
+            qcore.dequantize_lastdim(
+                k_rope, paged.gather_blocks(pools["k_rope_scale"], table),
+                dtype))
 
 
 def _latent_attend(p: dict, cfg: MLAConfig, q_nope: Array, q_rope: Array,
@@ -165,15 +211,14 @@ def mla_decode(p: dict, x: Array, cfg: MLAConfig, cache: dict
     q_nope, q_rope, c_kv_new, k_rope_new = _latents(p, x, cfg, positions)
 
     table = cache["block_table"]
-    ckv_pool = paged.scatter_token(cache["c_kv"], table, idx, c_kv_new[:, 0])
-    rope_pool = paged.scatter_token(cache["k_rope"], table, idx,
-                                    k_rope_new[:, 0])
-    c_kv = paged.gather_blocks(ckv_pool, table)        # [B, mb*bs, c]
-    k_rope = paged.gather_blocks(rope_pool, table)
+    fmt = qcore.get_format(cfg.kv_dtype)
+    pools = _scatter_latents(
+        cache, c_kv_new[:, 0], k_rope_new[:, 0], fmt,
+        lambda pool, vals: paged.scatter_token(pool, table, idx, vals))
+    c_kv, k_rope = _gather_latents(pools, table, fmt, x.dtype)  # [B,mb*bs,*]
     ctx = _latent_attend(p, cfg, q_nope, q_rope, c_kv, k_rope, idx + 1)
     out = common.dense(ctx.reshape(b, 1, -1).astype(x.dtype), p["wo"])
-    return out, {"c_kv": ckv_pool, "k_rope": rope_pool,
-                 "block_table": table, "len": idx + 1}
+    return out, {**pools, "block_table": table, "len": idx + 1}
 
 
 def mla_prefill_chunk(p: dict, x: Array, cfg: MLAConfig, cache: dict,
@@ -184,18 +229,16 @@ def mla_prefill_chunk(p: dict, x: Array, cfg: MLAConfig, cache: dict,
     positions = (pos0 + jnp.arange(c, dtype=jnp.int32))[None, :]
     q_nope, q_rope, c_kv_new, k_rope_new = _latents(p, x, cfg, positions)
     table_row = cache["block_table"][slot]
-    ckv_pool = paged.scatter_chunk(cache["c_kv"], table_row, pos0,
-                                   c_kv_new[0])
-    rope_pool = paged.scatter_chunk(cache["k_rope"], table_row, pos0,
-                                    k_rope_new[0])
-    c_kv = paged.gather_blocks(ckv_pool, table_row[None])
-    k_rope = paged.gather_blocks(rope_pool, table_row[None])
+    fmt = qcore.get_format(cfg.kv_dtype)
+    pools = _scatter_latents(
+        cache, c_kv_new[0], k_rope_new[0], fmt,
+        lambda pool, vals: paged.scatter_chunk(pool, table_row, pos0, vals))
+    c_kv, k_rope = _gather_latents(pools, table_row[None], fmt, x.dtype)
     valid = jnp.full((1,), pos0 + c, jnp.int32)
     ctx = _latent_attend(p, cfg, q_nope, q_rope, c_kv, k_rope, valid,
                          q_pos=positions)
     out = common.dense(ctx.reshape(1, c, -1).astype(x.dtype), p["wo"])
-    new_cache = {"c_kv": ckv_pool, "k_rope": rope_pool,
-                 "block_table": cache["block_table"],
+    new_cache = {**pools, "block_table": cache["block_table"],
                  "len": cache["len"].at[slot].set(pos0 + c)}
     return out, new_cache
 
@@ -204,12 +247,19 @@ def mla_cache_spec(batch: int, layout: PagedLayout, cfg: MLAConfig,
                    dtype=jnp.bfloat16, num_blocks: int | None = None) -> dict:
     nb = (paged.default_num_blocks(layout, batch) if num_blocks is None
           else num_blocks)
-    return {
+    fmt = qcore.get_format(cfg.kv_dtype)
+    pool_dtype = dtype if fmt is None else fmt.dtype
+    spec = {
         "c_kv": jax.ShapeDtypeStruct(
-            (nb, layout.block_size, cfg.kv_lora), dtype),
+            (nb, layout.block_size, cfg.kv_lora), pool_dtype),
         "k_rope": jax.ShapeDtypeStruct(
-            (nb, layout.block_size, cfg.rope_dim), dtype),
+            (nb, layout.block_size, cfg.rope_dim), pool_dtype),
         "block_table": jax.ShapeDtypeStruct((batch, layout.max_blocks),
                                             jnp.int32),
         "len": jax.ShapeDtypeStruct((batch,), jnp.int32),
     }
+    if fmt is not None:
+        sshape = (nb, layout.block_size)        # one scale per cached token
+        spec["c_kv_scale"] = jax.ShapeDtypeStruct(sshape, jnp.float32)
+        spec["k_rope_scale"] = jax.ShapeDtypeStruct(sshape, jnp.float32)
+    return spec

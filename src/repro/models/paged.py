@@ -141,7 +141,12 @@ def scatter_chunk(pool: Array, table_row: Array, pos0, vals: Array) -> Array:
 
 # Leaf names that are shared block pools (no batch axis — never reset
 # per-slot; stale data in re-allocated blocks is masked by ``len``).
-POOL_KEYS = ("kpool", "vpool", "c_kv", "k_rope")
+# Quantized pools (repro.quant) carry per-block scale tiles addressed
+# through the same block table — they are pools too: reset_slot must not
+# batch-index them and serve_cache_shardings must never split their
+# block-internal position axis.
+POOL_KEYS = ("kpool", "vpool", "c_kv", "k_rope",
+             "kscale", "vscale", "c_kv_scale", "k_rope_scale")
 
 
 def keep_slots(old, new, keep_mask: Array):

@@ -1,0 +1,18 @@
+"""Compensated low-bit subsystem: block quantization shared by the KV-cache
+pools (``repro.models``), the quantized paged-decode kernel
+(``repro.kernels.paged_attention_quant``), the int8 weight path
+(``repro.kernels.kahan_matmul``) and the error-feedback all-reduce
+(``repro.distributed.compression``)."""
+
+from repro.quant.core import (EF_BLOCK, FORMATS, FP8, INT8, QuantFormat,
+                              dequantize_blocks, dequantize_lastdim,
+                              dequantize_weight, get_format,
+                              kv_bytes_per_value, quantize_blocks,
+                              quantize_lastdim, quantize_weight)
+
+__all__ = [
+    "EF_BLOCK", "FORMATS", "FP8", "INT8", "QuantFormat",
+    "dequantize_blocks", "dequantize_lastdim", "dequantize_weight",
+    "get_format", "kv_bytes_per_value", "quantize_blocks",
+    "quantize_lastdim", "quantize_weight",
+]

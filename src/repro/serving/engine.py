@@ -27,14 +27,18 @@ Three cooperating pieces replace the old contiguous slot-row engine:
     logprob, logsumexp and logit health statistics — only (B,)-sized
     arrays ever reach the host.
 
-Determinism: greedy argmax sampling; a request's chunk boundaries and
+Determinism: greedy argmax by default; a request's chunk boundaries and
 decode math depend only on its own prompt and the cache geometry, so
 batched serving matches solo generation token-for-token
-(tests/test_serving.py, tests/test_paged_kv.py).
+(tests/test_serving.py, tests/test_paged_kv.py). Requests can opt into
+temperature + top-k sampling with a per-request ``seed``; the sampling
+stream is keyed on (seed, tokens emitted) only, so it too is independent
+of batch composition and admission timing.
 """
 
 from __future__ import annotations
 
+import functools
 from collections import deque
 from dataclasses import dataclass, field
 
@@ -56,6 +60,13 @@ class Request:
     prompt: list
     max_new_tokens: int
     eos_id: int | None = None
+    # sampling knobs: temperature == 0 keeps the deterministic greedy path;
+    # top_k == 0 means the full vocabulary; ``seed`` keys this request's
+    # private sampling stream (folded with the emit index, so the draw is
+    # independent of batch composition).
+    temperature: float = 0.0
+    top_k: int = 0
+    seed: int = 0
     output: list = field(default_factory=list)
     logprobs: list = field(default_factory=list)   # per emitted token
     slot: int | None = None
@@ -201,6 +212,28 @@ def _logit_stats(logits: jax.Array, tokens: jax.Array
             "rms": jnp.sqrt(st["sumsq"] / vocab)}
 
 
+def _sample_row(row: jax.Array, temperature: jax.Array, key: jax.Array,
+                top_k: int) -> jax.Array:
+    """Temperature + top-k draw from one logit row (vmapped below)."""
+    logits = row.astype(jnp.float32) / jnp.maximum(temperature, 1e-6)
+    if top_k:
+        # clamp: top_k beyond the vocab means "no truncation", not a crash
+        kth = jax.lax.top_k(logits, min(top_k, logits.shape[-1]))[0][..., -1]
+        logits = jnp.where(logits < kth, -jnp.inf, logits)
+    return jax.random.categorical(key, logits)
+
+
+@functools.partial(jax.jit, static_argnames=("top_k",))
+def _sample_rows(rows: jax.Array, temperatures: jax.Array, keys: jax.Array,
+                 top_k: int) -> jax.Array:
+    """One launch draws every sampled slot that shares a ``top_k``: rows
+    [S, V], temperatures [S], keys [S] -> tokens [S]. Keeps the decode hot
+    loop's one-launch discipline — only the chosen indices cross to the
+    host, however many requests are sampling."""
+    return jax.vmap(lambda r, t, k: _sample_row(r, t, k, top_k))(
+        rows, temperatures, keys)
+
+
 class DecodeEngine:
     """Paged continuous-batching engine over a fixed slot pool.
 
@@ -241,8 +274,18 @@ class DecodeEngine:
         # XLA gather fallback (CPU decode, chunk prefill) materializes
         # full virtual rows and is not what this counter measures.
         # All-zero for constant-state (SSM) families — no per-token KV.
+        # ``paged_bytes_bf16`` re-prices the SAME touched tokens at bf16
+        # pool rates: paged_bytes_bf16 / paged_bytes is the measured-
+        # workload KV-traffic reduction of a quantized ``cfg.kv_dtype``
+        # (benchmarks/bench_quant.py compares it against the ECM
+        # prediction in repro.ecm.tpu.predicted_decode_speedup).
         self._token_bytes = self.kv.token_bytes(max_slots)
-        self.kv_stats = {"paged_bytes": 0, "contiguous_bytes": 0,
+        self._token_bytes_bf16 = api.KVCache.build(
+            cfg.with_(kv_dtype="bf16"), max_context=max_context,
+            block_size=block_size, max_slots=max_slots,
+            num_blocks=num_blocks).token_bytes(max_slots)
+        self.kv_stats = {"paged_bytes": 0, "paged_bytes_bf16": 0,
+                         "contiguous_bytes": 0,
                          "decode_steps": 0, "prefill_chunks": 0}
 
     # ------------------------------------------------------------ API -----
@@ -293,9 +336,24 @@ class DecodeEngine:
 
     # ------------------------------------------------------- internals ----
 
+    @staticmethod
+    def _sample_key(req: Request) -> jax.Array:
+        """The request's private stream, keyed on (seed, emit index) only —
+        invariant to batch composition and admission timing."""
+        return jax.random.fold_in(jax.random.key(req.seed), len(req.output))
+
+    def _choose_token(self, req: Request, row: jax.Array) -> int:
+        """Greedy argmax unless the request opted into sampling. ``row`` is
+        the device-side logit row."""
+        if req.temperature <= 0.0:
+            return int(jnp.argmax(row))
+        return int(_sample_rows(row[None],
+                                jnp.asarray([req.temperature], jnp.float32),
+                                self._sample_key(req)[None], req.top_k)[0])
+
     def _emit_first_token(self, req: Request, logits: jax.Array) -> None:
         """Final prefill chunk's logits yield the request's first token."""
-        tok = int(jnp.argmax(logits[0]))
+        tok = self._choose_token(req, logits[0])
         stats = _logit_stats(logits.reshape(1, -1),
                              jnp.asarray([tok], jnp.int32))
         req.output.append(tok)
@@ -323,6 +381,27 @@ class DecodeEngine:
                                            jnp.asarray(mask))
         rows = logits.reshape(logits.shape[0], -1)
         tokens_dev = jnp.argmax(rows, axis=-1).astype(jnp.int32)
+        sampled = {slot: req for slot, req in self.scheduler.decoding.items()
+                   if req.temperature > 0.0}
+        if sampled:
+            # override the batched greedy choice for slots that asked for
+            # temperature/top-k sampling: one vmapped launch per distinct
+            # top_k (usually one total) — draws stay device-side, only the
+            # chosen indices cross
+            toks = np.asarray(tokens_dev).copy()
+            by_k: dict[int, list] = {}
+            for slot, req in sampled.items():
+                by_k.setdefault(req.top_k, []).append((slot, req))
+            for top_k, items in by_k.items():
+                slots = [s for s, _ in items]
+                draws = _sample_rows(
+                    rows[jnp.asarray(slots, jnp.int32)],
+                    jnp.asarray([r.temperature for _, r in items],
+                                jnp.float32),
+                    jnp.stack([self._sample_key(r) for _, r in items]),
+                    top_k)
+                toks[slots] = np.asarray(draws)
+            tokens_dev = jnp.asarray(toks, jnp.int32)
         # Fused logprob/metric pass: one batched engine launch covers every
         # slot's chosen-token logprob, logsumexp and health stats. Only
         # (B,)-sized arrays cross to the host — never the full logits.
@@ -362,6 +441,7 @@ class DecodeEngine:
         touched = sum(paged.cdiv(r.num_cached + 1, bs) * bs
                       for r in self.scheduler.decoding.values())
         self.kv_stats["paged_bytes"] += touched * self._token_bytes
+        self.kv_stats["paged_bytes_bf16"] += touched * self._token_bytes_bf16
         self.kv_stats["contiguous_bytes"] += (len(self.scheduler.decoding)
                                               * self.layout.max_context
                                               * self._token_bytes)
@@ -369,8 +449,9 @@ class DecodeEngine:
 
     def _account_prefill(self, cached: int, *, first: bool) -> None:
         bs = self.layout.block_size
-        self.kv_stats["paged_bytes"] += (paged.cdiv(cached, bs) * bs
-                                         * self._token_bytes)
+        touched = paged.cdiv(cached, bs) * bs
+        self.kv_stats["paged_bytes"] += touched * self._token_bytes
+        self.kv_stats["paged_bytes_bf16"] += touched * self._token_bytes_bf16
         if first:
             # contiguous baseline: batch-1 prefill wrote a full max_context
             # row (zero padding included) ONCE per request
