@@ -1,0 +1,209 @@
+"""Speculative serving benchmark: measured tok/s + acceptance rate vs the
+ECM forecast, across prompt mixes, kv_dtypes and k.
+
+Speculation pays off exactly when generation is predictable, so the bench
+first makes predictability REAL instead of assuming it: a tiny LM is
+trained for ~100 steps on a fixed 16-token cycle corpus (a few seconds on
+CPU) until its greedy continuations follow the learned structure. Serving
+prompts drawn from the same cycle then gives the n-gram proposer honest
+acceptance — the workload class (extraction, repetition, self-consistent
+continuations) speculative decoding exists for. A 1-layer draft model is
+trained on the same corpus for the draft-proposer rows.
+
+Every row compares a ``SpecDecodeEngine`` against the plain
+``DecodeEngine`` (the PR 3 decode path) on the same workload and reports:
+
+    tok_s, speedup (measured), acc (measured acceptance rate),
+    E (mean accepted length per verify walk), ecm (the
+    ``predicted_spec_speedup`` forecast evaluated AT the measured
+    acceptance rate — walks-per-token bookkeeping vs reality)
+
+On CPU the launch/dispatch overhead plays the role HBM walks play on TPU
+— both are per-step costs the verify pass amortizes over E tokens — so
+the measured speedup tracks the walk-bookkeeping forecast; the draft rows
+show the other side (k+1 extra draft launches per step eat the benefit
+unless the draft is much cheaper than the target: n-gram beats a small
+draft model here).
+
+Shapes are CPU-tiny; the CI smoke step (benchmarks/run.py --only
+bench_spec --json ...) lands these rows in the perf-trajectory JSON.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, reduced
+from repro.ecm.tpu import predicted_spec_speedup
+from repro.models import api, common
+from repro.optim import adamw
+from repro.serving.engine import DecodeEngine, Request, SpecDecodeEngine
+from repro.spec import DraftModelProposer, NGramProposer
+from repro.train.steps import build_train_step
+
+MAX_CONTEXT = 256
+BLOCK = 16
+MAX_NEW = 32
+MOTIF_LEN = 16
+TRAIN_STEPS = 150
+
+
+def _motif(rng) -> list[int]:
+    """A fixed 16-token cycle over the vocab — the structure both models
+    memorize and the serving prompts are drawn from."""
+    return rng.permutation(np.arange(10, 200))[:MOTIF_LEN].tolist()
+
+
+def train_cycle_lm(cfg, motif: list[int], *, steps: int = TRAIN_STEPS,
+                   seq: int = 48, batch: int = 8, lr: float = 5e-3,
+                   seed: int = 0):
+    """Memorize the cycle: every training sequence is the motif repeated
+    from a random phase. Returns trained params."""
+    params = common.init_params(api.schema(cfg), jax.random.key(seed))
+    opt_cfg = adamw.AdamWConfig(lr=lr, kahan=True)
+    opt_state = adamw.init(params, opt_cfg)
+    step_fn = jax.jit(build_train_step(cfg, opt_cfg))
+    m = len(motif)
+    rng = np.random.default_rng(seed)
+    for s in range(steps):
+        phase = rng.integers(0, m, size=batch)
+        seqs = np.stack([[motif[(p + t) % m] for t in range(seq + 1)]
+                         for p in phase]).astype(np.int32)
+        b = {"tokens": jnp.asarray(seqs[:, :-1]),
+             "labels": jnp.asarray(seqs[:, 1:]),
+             "weights": jnp.ones((batch, seq), jnp.float32)}
+        params, opt_state, _ = step_fn(params, opt_state, b, jnp.int32(s))
+    return params
+
+
+def _prompts(kind: str, motif: list[int], rng) -> list[list[int]]:
+    m = len(motif)
+
+    def cyc(n):
+        ph = int(rng.integers(0, m))
+        return [motif[(ph + t) % m] for t in range(n)]
+
+    if kind == "short":
+        return [cyc(int(rng.integers(3, 8))) for _ in range(8)]
+    if kind == "long":
+        return [cyc(int(rng.integers(60, 100))) for _ in range(4)]
+    # mixed: the serving-bench workload shape — long extractions next to
+    # short completions in the same batch
+    return [cyc(int(rng.integers(40, 70))) if i % 2 == 0
+            else cyc(int(rng.integers(3, 8))) for i in range(6)]
+
+
+_MIX_SEED = {"short": 1, "mixed": 2, "long": 3}
+
+
+def _serve(cfg, params, prompts, engine_cls, **kw):
+    """Serve the workload twice through ONE engine and time the second
+    wave: every jitted shape (decode, verify, chunk lengths) compiles in
+    the warmup wave, so the timed wave is steady-state serving — each
+    engine construction builds fresh jit wrappers, and compile time would
+    otherwise dominate these CPU-tiny shapes."""
+    engine = engine_cls(cfg, params, max_slots=4, max_context=MAX_CONTEXT,
+                        block_size=BLOCK, prefill_chunk=32, **kw)
+    warm = [Request(rid=-1 - i, prompt=p, max_new_tokens=MAX_NEW)
+            for i, p in enumerate(prompts)]
+    for r in warm:
+        engine.submit(r)
+    engine.run_until_done()
+    for key in engine.kv_stats:          # stats measure the timed wave only
+        engine.kv_stats[key] = 0
+    reqs = [Request(rid=i, prompt=p, max_new_tokens=MAX_NEW)
+            for i, p in enumerate(prompts)]
+    for r in reqs:
+        engine.submit(r)
+    t0 = time.perf_counter()
+    engine.run_until_done()
+    dt = time.perf_counter() - t0
+    assert all(r.done for r in reqs)
+    toks = sum(len(r.output) for r in reqs)
+    return engine, toks / dt, dt
+
+
+def _row(name, engine, tok_s, dt, base_tok_s, draft_byte_ratio, k):
+    st = engine.kv_stats
+    steps = max(st["decode_steps"] + st["prefill_chunks"], 1)
+    alpha = engine.acceptance_rate
+    ecm = predicted_spec_speedup(alpha, k, draft_byte_ratio=draft_byte_ratio)
+    return (name, f"{dt * 1e6 / steps:.0f}",
+            f"tok_s={tok_s:.1f}"
+            f" speedup={tok_s / base_tok_s:.2f}x"
+            f" acc={alpha:.2f}"
+            f" E={engine.mean_accepted_length:.2f}"
+            f" ecm={ecm:.2f}x")
+
+
+def run() -> list[tuple]:
+    cfg = reduced(get_config("qwen1.5-0.5b")).with_(num_layers=2)
+    draft_cfg = cfg.with_(num_layers=1)
+    rng = np.random.default_rng(7)
+    motif = _motif(rng)
+    params = train_cycle_lm(cfg, motif)
+    draft_params = train_cycle_lm(draft_cfg, motif, seed=1)
+
+    rows = []
+    baselines: dict[tuple, float] = {}
+
+    def baseline(kind, kv_dtype):
+        key = (kind, kv_dtype)
+        if key not in baselines:
+            c = cfg.with_(kv_dtype=kv_dtype)
+            mix_rng = np.random.default_rng(100 * _MIX_SEED[kind])
+            eng, tok_s, dt = _serve(c, params,
+                                    _prompts(kind, motif, mix_rng),
+                                    DecodeEngine)
+            baselines[key] = tok_s
+            st = eng.kv_stats
+            steps = max(st["decode_steps"] + st["prefill_chunks"], 1)
+            rows.append((f"spec/{kind}/baseline/kv={kv_dtype}",
+                         f"{dt * 1e6 / steps:.0f}", f"tok_s={tok_s:.1f}"))
+        return baselines[key]
+
+    def spec(kind, kv_dtype, k, proposer_name):
+        c = cfg.with_(kv_dtype=kv_dtype)
+        base = baseline(kind, kv_dtype)
+        if proposer_name == "ngram":
+            proposer, ratio = NGramProposer(), 0.0
+        else:
+            proposer = DraftModelProposer(draft_cfg.with_(kv_dtype=kv_dtype),
+                                          draft_params)
+            # per-walk cost of the draft relative to the target: KV bytes
+            # on TPU, layer count on launch-bound CPU — use the byte ratio
+            # the ECM actually models
+            tb = api.KVCache.build(c, max_context=MAX_CONTEXT,
+                                   block_size=BLOCK).token_bytes()
+            db = api.KVCache.build(draft_cfg.with_(kv_dtype=kv_dtype),
+                                   max_context=MAX_CONTEXT,
+                                   block_size=BLOCK).token_bytes()
+            ratio = db / tb
+        mix_rng = np.random.default_rng(100 * _MIX_SEED[kind])
+        engine, tok_s, dt = _serve(c, params, _prompts(kind, motif, mix_rng),
+                                   SpecDecodeEngine, proposer=proposer,
+                                   spec_k=k)
+        rows.append(_row(f"spec/{kind}/{proposer_name}/k={k}/kv={kv_dtype}",
+                         engine, tok_s, dt, base, ratio, k))
+
+    for k in (1, 2, 4, 8):                       # k sweep, headline mix
+        spec("mixed", "bf16", k, "ngram")
+    for kv_dtype in ("int8", "fp8"):             # quantized-pool interplay
+        spec("mixed", kv_dtype, 4, "ngram")
+    for kind in ("short", "long"):               # prompt-mix sweep
+        spec(kind, "bf16", 4, "ngram")
+    spec("mixed", "bf16", 4, "draft")            # draft model vs n-gram
+    return rows
+
+
+def main() -> None:
+    for r in run():
+        print(",".join(str(c) for c in r))
+
+
+if __name__ == "__main__":
+    main()

@@ -11,25 +11,32 @@
   bench_serving           paged-KV engine: tok/s + KV-bytes-touched
   bench_quant             quantized KV pools: tok/s + bytes + ppl proxy
                           vs kv_dtype, measured vs ECM-predicted speedup
+  bench_spec              speculative serving: tok/s + acceptance rate vs
+                          the ECM walk-bookkeeping forecast, across
+                          proposers / prompt mixes / kv_dtypes / k
   roofline_report         §Roofline table from the dry-run artifacts
                           (one row per cell; skips when artifacts absent)
 
 CLI:
   --only SUBSTR   run only modules whose name contains SUBSTR (repeatable)
-  --json PATH     also write rows as JSON [{name, us_per_call, derived}]
-                  — the CI smoke step's perf-trajectory artifact
+  --json [PATH]   also write rows as JSON [{name, us_per_call, derived}]
+                  — the CI smoke step's perf-trajectory artifact. With no
+                  PATH the name is derived deterministically from the git
+                  commit (BENCH_<shortsha>.json) so the CI workflow can
+                  commit it and the trajectory accumulates in-repo.
 """
 
 from __future__ import annotations
 
 import argparse
 import json
+import subprocess
 import traceback
 
 from benchmarks import (bench_accuracy, bench_collectives,
                         bench_ecm_predictions, bench_kernel_throughput,
                         bench_quant, bench_scaling, bench_serving,
-                        bench_tpu_kahan, roofline_report)
+                        bench_spec, bench_tpu_kahan, roofline_report)
 
 MODULES = [
     bench_ecm_predictions,
@@ -40,17 +47,35 @@ MODULES = [
     bench_collectives,
     bench_serving,
     bench_quant,
+    bench_spec,
     roofline_report,
 ]
+
+
+def default_json_path() -> str:
+    """Deterministic perf-trajectory filename for the current commit —
+    the same commit always maps to the same BENCH_*.json, so re-runs
+    overwrite instead of multiplying artifacts."""
+    try:
+        sha = subprocess.run(["git", "rev-parse", "--short", "HEAD"],
+                             capture_output=True, text=True,
+                             timeout=10).stdout.strip()
+    except Exception:
+        sha = ""
+    return f"BENCH_{sha or 'local'}.json"
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", action="append", default=None, metavar="SUBSTR",
                     help="run only modules whose name contains SUBSTR")
-    ap.add_argument("--json", default=None, metavar="PATH",
-                    help="also write results as JSON to PATH")
+    ap.add_argument("--json", default=None, metavar="PATH", nargs="?",
+                    const="auto",
+                    help="also write results as JSON; omit PATH for the "
+                         "deterministic per-commit BENCH_<shortsha>.json")
     args = ap.parse_args()
+    if args.json == "auto":
+        args.json = default_json_path()
 
     modules = MODULES
     if args.only:

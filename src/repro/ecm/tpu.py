@@ -209,3 +209,51 @@ def predicted_decode_speedup(kv_dtype: str, vec_len: int = 64,
     quant = predict_level(paged_decode_spec(kv_dtype, vec_len), level, hw,
                           unroll=unroll)
     return quant.updates_per_s / base.updates_per_s
+
+
+# ---------------------------------------------------- speculative decode ---
+#
+# The paged decode walk is the serving path's dominant traffic and it is
+# data-bound (AI far below the VPU ridge), so its cost unit is one KV-pool
+# walk per emitted token. Speculative decoding changes the TOKENS-PER-WALK
+# ratio, not the walk itself: one verify pass scores all k drafts plus a
+# bonus token while streaming each resident block exactly once (the k+1
+# query rows ride the same block traversal — extra q·k / p·v flops per
+# streamed element stay under the ridge). The forecast is therefore pure
+# bookkeeping over walks, the same ECM methodology as the quantized pools.
+
+def expected_accepted_length(alpha: float, k: int) -> float:
+    """Tokens emitted per verify walk when each draft token is accepted
+    i.i.d. with probability ``alpha``: the accepted prefix plus the
+    corrected/bonus token, E = 1 + alpha + ... + alpha^k."""
+    return float(sum(alpha ** i for i in range(k + 1)))
+
+
+def predicted_spec_speedup(alpha: float, k: int, *,
+                           draft_byte_ratio: float = 0.0,
+                           context_len: int | None = None) -> float:
+    """ECM forecast of speculative-decode tok/s over plain paged decode.
+
+    Per spec step the engine pays ONE target verify walk plus k+1 draft
+    decode walks whose per-walk cost relative to the target's is
+    ``draft_byte_ratio`` (0 for the n-gram proposer: no model, no walk;
+    the +1 appends the last draft's KV so a fully-accepted window leaves
+    the draft cache aligned) and emits E(alpha, k) tokens:
+
+        speedup = E(alpha, k) / (verify_walk + (k + 1) * draft_byte_ratio)
+
+    ``context_len`` refines the verify walk with the window's own growth,
+    (L + (k+1)/2) / L — a second-order term that -> 1 at long context.
+    Quantized pools compose multiplicatively: this ratio is kv_dtype-
+    independent while ``predicted_decode_speedup`` prices the byte change
+    of each walk.
+    """
+    if not 0.0 <= alpha <= 1.0:
+        raise ValueError(f"acceptance rate must be in [0, 1], got {alpha}")
+    if k < 0:
+        raise ValueError(f"k must be >= 0, got {k}")
+    e = expected_accepted_length(alpha, k)
+    verify_walk = 1.0
+    if context_len:
+        verify_walk = (context_len + (k + 1) / 2) / context_len
+    return e / (verify_walk + (k + 1) * draft_byte_ratio)

@@ -1,6 +1,9 @@
 """Serving launcher: ``python -m repro.launch.serve --arch <id>`` —
 random-weight continuous-batching demo of the paged-KV decode engine (see
-examples/serve.py for the scripted walkthrough)."""
+examples/serve.py for the scripted walkthrough). ``--spec-mode`` switches
+on speculative decoding (n-gram prompt-lookup or a draft model from the
+registry); invalid combinations are rejected with a clear error before
+any model is built."""
 
 from __future__ import annotations
 
@@ -12,10 +15,12 @@ import numpy as np
 
 from repro.configs import REGISTRY, get_config, reduced
 from repro.models import api, common
-from repro.serving.engine import DecodeEngine, Request
+from repro.serving.engine import DecodeEngine, Request, SpecDecodeEngine
+
+SPEC_FAMILIES = ("dense", "moe", "vlm")
 
 
-def main() -> None:
+def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen1.5-0.5b",
                     choices=sorted(REGISTRY))
@@ -30,20 +35,89 @@ def main() -> None:
                     help="KV-cache pool precision (repro.quant): quantized "
                          "pools carry per-(token, head) scale tiles and cut "
                          "KV bytes/token ~2x")
-    args = ap.parse_args()
+    ap.add_argument("--spec-mode", default="off",
+                    choices=("off", "ngram", "draft"),
+                    help="speculative decoding: 'ngram' proposes from the "
+                         "request's own context (no extra model), 'draft' "
+                         "runs --draft-arch as the proposer")
+    ap.add_argument("--spec-k", type=int, default=None,
+                    help="draft tokens verified per step (requires a "
+                         "--spec-mode other than 'off'; default 4)")
+    ap.add_argument("--draft-arch", default=None,
+                    choices=sorted(REGISTRY),
+                    help="registry config drafting for the target "
+                         "(required by --spec-mode draft)")
+    return ap
+
+
+def validate_spec_args(args, cfg) -> None:
+    """Reject invalid speculative-serving combinations with a clear
+    message instead of a traceback deep in the engine."""
+    if args.spec_mode == "off":
+        if args.spec_k is not None:
+            raise SystemExit(
+                "--spec-k only applies to speculative serving; pass "
+                "--spec-mode ngram|draft (or drop --spec-k)")
+        if args.draft_arch is not None:
+            raise SystemExit(
+                "--draft-arch only applies to --spec-mode draft")
+        return
+    if cfg.family not in SPEC_FAMILIES:
+        raise SystemExit(
+            f"--spec-mode {args.spec_mode}: {args.arch} is a "
+            f"{cfg.family!r}-family model whose recurrent state cannot be "
+            f"rolled back after a rejected draft; speculative serving "
+            f"needs a paged-KV attention family {SPEC_FAMILIES}")
+    if args.spec_k is not None and args.spec_k < 1:
+        raise SystemExit(f"--spec-k must be >= 1, got {args.spec_k}")
+    if args.spec_mode == "draft":
+        if args.draft_arch is None:
+            raise SystemExit(
+                "--spec-mode draft needs a draft config: pass "
+                "--draft-arch <id> (e.g. --draft-arch qwen1.5-0.5b "
+                "drafting for a larger target)")
+        draft_cfg = get_config(args.draft_arch)
+        if draft_cfg.family not in ("dense", "moe"):
+            raise SystemExit(
+                f"--draft-arch {args.draft_arch}: {draft_cfg.family!r}-"
+                f"family models cannot draft (rollback needs a paged KV "
+                f"cache); pick a dense/moe config")
+    elif args.draft_arch is not None:
+        raise SystemExit("--draft-arch only applies to --spec-mode draft")
+
+
+def main() -> None:
+    args = build_parser().parse_args()
 
     cfg = reduced(get_config(args.arch))
     if cfg.family not in ("dense", "moe", "ssm", "vlm"):
         raise SystemExit(f"engine serves LM families; {cfg.family} uses the "
                          f"prefill/decode API directly (see repro.models.api)")
+    validate_spec_args(args, cfg)
     if cfg.family == "vlm":
         cfg = cfg.with_(vlm=None, family="dense")   # text-only serving demo
     cfg = cfg.with_(kv_dtype=args.kv_dtype)
     params = common.init_params(api.schema(cfg), jax.random.key(0))
-    engine = DecodeEngine(cfg, params, max_slots=args.slots,
-                          max_context=args.max_context,
-                          block_size=args.block_size,
-                          prefill_chunk=args.prefill_chunk)
+
+    engine_kw: dict = dict(max_slots=args.slots,
+                           max_context=args.max_context,
+                           block_size=args.block_size,
+                           prefill_chunk=args.prefill_chunk)
+    if args.spec_mode == "off":
+        engine = DecodeEngine(cfg, params, **engine_kw)
+    else:
+        from repro.spec import DraftModelProposer, NGramProposer
+        if args.spec_mode == "ngram":
+            proposer = NGramProposer()
+        else:
+            draft_cfg = reduced(get_config(args.draft_arch)).with_(
+                kv_dtype=args.kv_dtype,
+                vocab_size=cfg.vocab_size, tie_embeddings=cfg.tie_embeddings)
+            draft_params = common.init_params(api.schema(draft_cfg),
+                                              jax.random.key(1))
+            proposer = DraftModelProposer(draft_cfg, draft_params)
+        engine = SpecDecodeEngine(cfg, params, proposer=proposer,
+                                  spec_k=args.spec_k or 4, **engine_kw)
 
     rng = np.random.default_rng(0)
     requests = [Request(rid=i,
@@ -76,6 +150,10 @@ def main() -> None:
                      f"than bf16 pools")
     else:   # ssm family: constant-size state, no per-token KV to page
         line += " | constant-state family (no per-token KV)"
+    if args.spec_mode != "off":
+        line += (f" | spec[{args.spec_mode}] accept "
+                 f"{engine.acceptance_rate:.0%}, "
+                 f"{engine.mean_accepted_length:.2f} tok/verify-walk")
     print(line)
 
 

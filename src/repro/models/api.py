@@ -84,6 +84,27 @@ def prefill_chunk_fn(cfg: ModelConfig) -> Callable:
         p, t, c, slot, pos0, cfg)
 
 
+def verify_fn(cfg: ModelConfig) -> Callable:
+    """Speculative multi-token verification over the shared batched cache:
+    (params, tokens [S, C], caches, slots [S], pos0s [S])
+        -> (logits [S, C, V], caches).
+
+    One batched pass appends + scores every slot's draft window against the
+    paged KV (quantized pools included) — position j's logits score the
+    token following tokens[:, j], so all k drafts plus the bonus token are
+    priced by a single KV-pool walk per slot. Rollback of rejected suffixes
+    is the caller's ``paged.set_lens`` (O(1) bookkeeping — blocks stay
+    allocated, scale pools ride along). Attention families only: recurrent
+    (ssm/hybrid/audio) state cannot be rolled back by a length decrement.
+    """
+    if cfg.family in ("audio", "hybrid", "ssm"):
+        raise NotImplementedError(
+            f"speculative verify serves paged-KV attention families, "
+            f"not {cfg.family!r}")
+    return lambda p, t, c, slots, pos0s: lm.lm_verify_chunk(
+        p, t, c, slots, pos0s, cfg)
+
+
 def cache_specs(cfg: ModelConfig, batch: int, cache_spec: int | PagedLayout,
                 *, num_blocks: int | None = None) -> Any:
     """Abstract cache pytree. ``num_blocks`` overrides the per-layer pool

@@ -112,6 +112,10 @@ def flash_attention(q: Array, k: Array, v: Array, *, causal: bool = True,
     Returns [B, Lq, Hq, Dv]. GQA handled by grouping q heads over kv heads.
     ``q_offset`` places the queries at absolute positions offset..offset+Lq-1
     for the causal mask (chunked prefill against an already-cached prefix).
+    Both ``q_offset`` and ``kv_len`` accept a per-batch [B] array — the
+    multi-slot speculative verify runs every slot's draft window in one
+    launch, each at its own cache offset. Scalars reproduce the original
+    mask bitwise (the array path only widens the mask's broadcast shape).
     """
     b, lq_orig, hq, d = q.shape
     _, lk_orig, hkv, dv = v.shape
@@ -171,7 +175,9 @@ def flash_attention(q: Array, k: Array, v: Array, *, causal: bool = True,
         # [nk, B, H, qc, kc] probability blocks (flash attention's memory
         # win gone, ~1 GB/layer at 4k); recompute them instead.
         q_blk = qg[:, :, :, qi]                       # [B,Hkv,G,qc,D]
-        q_pos = q_offset + qi * qc + jnp.arange(qc)
+        # [qc] for a scalar offset, [B, qc] for the per-slot verify path
+        q_pos = (jnp.asarray(q_offset)[..., None] + qi * qc
+                 + jnp.arange(qc))
 
         def kv_step(carry, ki):
             m, l, acc, acc_c = carry
@@ -180,14 +186,17 @@ def flash_attention(q: Array, k: Array, v: Array, *, causal: bool = True,
             s = jnp.einsum("bhgqd,bhkd->bhgqk", q_blk, k_blk,
                            preferred_element_type=jnp.float32) * scale
             k_pos = ki * kc + jnp.arange(kc)
-            mask = jnp.ones((qc, kc), dtype=bool)
+            mask = jnp.ones(q_pos.shape[:-1] + (qc, kc), dtype=bool)
             if causal:
-                mask &= q_pos[:, None] >= k_pos[None, :]
+                mask &= q_pos[..., None] >= k_pos
             if kv_len is not None:
-                mask &= (k_pos[None, :] < kv_len)
-            s = jnp.where(mask, s, NEG_INF)
+                mask &= k_pos < jnp.asarray(kv_len)[..., None, None]
+            # [qc,kc] broadcasts over [B,H,G,qc,kc]; a per-batch [B,qc,kc]
+            # mask needs the head/group axes inserted
+            mb_ = mask if mask.ndim == 2 else mask[:, None, None]
+            s = jnp.where(mb_, s, NEG_INF)
             m_new = jnp.maximum(m, s.max(axis=-1))
-            p = jnp.exp(s - m_new[..., None]) * mask
+            p = jnp.exp(s - m_new[..., None]) * mb_
             corr = jnp.exp(m - m_new)
             l_new = l * corr + p.sum(axis=-1)
             pv = jnp.einsum("bhgqk,bhkd->bhgqd", p.astype(v_blk.dtype), v_blk,
@@ -295,6 +304,32 @@ def attend_cache(q: Array, k: Array, v: Array, valid_len: Array) -> Array:
     out = jnp.einsum("bhgs,bshd->bhgd", p.astype(v.dtype), v,
                      preferred_element_type=jnp.float32)
     return out.reshape(b, 1, hq, dv).astype(v.dtype)
+
+
+def attend_cache_multi(q: Array, k: Array, v: Array, q_pos: Array) -> Array:
+    """Multi-query attention against materialized K/V rows.
+
+    q: [B, C, Hq, D]; k/v: [B, S, Hkv, D]; q_pos: [B, C] absolute positions
+    (query j attends keys at positions <= q_pos[b, j], which must already
+    be written). This is ``attend_cache`` widened to C queries with the
+    same score/softmax structure — the CPU-side speculative verify uses it
+    so that a verify row reproduces the decode step's numerics: C == 1
+    with q_pos == valid_len - 1 is exactly the decode formulation.
+    """
+    b, c, hq, d = q.shape
+    _, s_max, hkv, dv = v.shape
+    groups = hq // hkv
+    scale = d ** -0.5
+    qg = q.reshape(b, c, hkv, groups, d)
+    s = jnp.einsum("bchgd,bshd->bchgs", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    k_pos = jnp.arange(s_max)
+    mask = q_pos[:, :, None] >= k_pos[None, None, :]           # [B,C,S]
+    s = jnp.where(mask[:, :, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bchgs,bshd->bchgd", p.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, c, hq, dv).astype(v.dtype)
 
 
 def gqa_forward(p: dict, x: Array, cfg: AttnConfig, *,
@@ -451,6 +486,51 @@ def gqa_prefill_chunk(p: dict, x: Array, cfg: AttnConfig, cache: dict,
     new_cache = {**pools, "block_table": cache["block_table"],
                  "len": cache["len"].at[slot].set(pos0 + c)}
     return common.dense(out.reshape(1, c, -1), p["wo"]), new_cache
+
+
+def gqa_verify_chunk(p: dict, x: Array, cfg: AttnConfig, cache: dict,
+                     slots: Array, pos0s: Array) -> tuple[Array, dict]:
+    """Speculative verify: append + attend a C-token window for S slots in
+    ONE batched pass.
+
+    x: [S, C, d]; ``slots`` [S] indexes the batched cache, ``pos0s`` [S] is
+    each slot's cached length (the window lands at pos0..pos0+C-1). This is
+    the chunked-prefill formulation batched over slots: quantize-on-write
+    through the shared ``_scatter_kv`` append (bitwise the decode append for
+    the same token), then flash attention over the gathered prefix+window
+    with per-slot ``q_offset``/``kv_len``. Rejected suffixes are rolled back
+    by the caller purely via ``paged.set_lens`` — blocks stay allocated.
+    Duplicate slot rows (fixed-shape padding) must carry identical tokens.
+    """
+    s_n, c, _ = x.shape
+    positions = pos0s[:, None] + jnp.arange(c, dtype=jnp.int32)[None, :]
+    q, k_new, v_new = _project_qkv(p, x, cfg, positions)
+    tables = cache["block_table"][slots]               # [S, mb]
+    fmt = qcore.get_format(cfg.kv_dtype)
+    pools = _scatter_kv(
+        cache, k_new, v_new, fmt,
+        lambda pool, vals: paged.scatter_chunk_multi(pool, tables, pos0s,
+                                                     vals))
+    k, v = _gather_kv(pools, tables, fmt, x.dtype)     # [S, mb*bs, H, D]
+    if paged_kernel_enabled():
+        # TPU: per-slot q_offset flash over the gathered rows. Like the
+        # chunk-prefill path, this materializes full virtual rows — the
+        # kv_stats spec accounting prices the block-bounded LAYOUT bound
+        # that a scalar-prefetch verify kernel (the decode kernel widened
+        # to k+1 query rows; ROADMAP) would realize on device.
+        out = flash_attention(q, k, v, causal=cfg.causal,
+                              q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk,
+                              kahan_acc=cfg.kahan_acc, q_offset=pos0s,
+                              kv_len=pos0s + c)
+    else:
+        # CPU fallback mirrors gqa_decode's attend_cache numerics so a
+        # verify row scores a position exactly like the decode step it
+        # replaces — greedy accept/reject must not flip on formulation
+        # rounding (spec == non-spec greedy streams)
+        out = attend_cache_multi(q, k, v, positions)
+    new_cache = {**pools, "block_table": cache["block_table"],
+                 "len": cache["len"].at[slots].set(pos0s + c)}
+    return common.dense(out.reshape(s_n, c, -1), p["wo"]), new_cache
 
 
 def gqa_cache_spec(batch: int, layout: PagedLayout, cfg: AttnConfig,

@@ -172,6 +172,38 @@ def block_prefill_chunk(p: dict, h: Array, cfg: ModelConfig, cache: dict,
     return h + mlp.mlp_forward(p["ffn"], x, act=cfg.act), new_cache
 
 
+# ------------------------------------------------------------ verify -------
+
+def block_verify_chunk(p: dict, h: Array, cfg: ModelConfig, cache: dict,
+                       slots: Array, pos0s: Array, *,
+                       dense_ffn: bool = False) -> tuple[Array, dict]:
+    """Speculative verify of one layer: a [S, C, d] draft window, each row
+    appended+attended at its own slot/offset in one batched pass.
+
+    Only attention families verify: an SSM layer's recurrent state cannot
+    be rolled back by a length decrement, so speculative serving is gated
+    to paged-KV families at the engine level.
+    """
+    if cfg.family in ("ssm", "hybrid"):
+        raise NotImplementedError(
+            "speculative verify needs a rollback-able paged KV cache; "
+            f"the {cfg.family!r} family carries recurrent state")
+
+    x = common.apply_norm(h, p["ln_attn"], cfg.norm)
+    if cfg.mla is not None:
+        y, new_cache = mla.mla_verify_chunk(p["attn"], x, _mla_cfg(cfg),
+                                            cache, slots, pos0s)
+    else:
+        y, new_cache = attn.gqa_verify_chunk(p["attn"], x, cfg.attn(),
+                                             cache, slots, pos0s)
+    h = h + y
+    x = common.apply_norm(h, p["ln_mlp"], cfg.norm)
+    if cfg.moe is not None and not dense_ffn:
+        y, _ = moe.moe_forward(p["ffn"], x, cfg.moe)
+        return h + y, new_cache
+    return h + mlp.mlp_forward(p["ffn"], x, act=cfg.act), new_cache
+
+
 # ------------------------------------------------------------ decode -------
 
 def block_decode(p: dict, h: Array, cfg: ModelConfig, cache: dict,

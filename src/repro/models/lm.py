@@ -17,8 +17,8 @@ import jax.numpy as jnp
 from repro.models import blocks, common
 from repro.models.blocks import (block_apply, block_cache_spec, block_decode,
                                  block_prefill, block_prefill_chunk,
-                                 block_schema, dense_block_schema,
-                                 stack_schema)
+                                 block_schema, block_verify_chunk,
+                                 dense_block_schema, stack_schema)
 from repro.models.common import ParamSpec
 from repro.models.config import ModelConfig
 from repro.models.paged import PagedLayout
@@ -124,6 +124,22 @@ def lm_loss(params: dict, batch: dict, cfg: ModelConfig
     return total, metrics
 
 
+def _serving_logits(h: Array, params: dict, cfg: ModelConfig) -> Array:
+    """LM-head projection for the serving paths, computed AND kept in f32.
+
+    Training keeps bf16 logits (the loss upcasts anyway), but greedy
+    serving argmaxes the raw logits — and at bf16 precision exact ties
+    across a 256..152k vocab are common, which makes the argmax depend on
+    which attention formulation produced the hidden state. Speculative
+    verification scores the same positions through the chunked path that
+    plain decode scores one at a time, so the determinism contract
+    (spec == non-spec greedy streams) needs tie-free logits: f32 gaps are
+    generically far wider than the formulations' rounding differences.
+    """
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    return common.dense(h, head, compute_dtype=jnp.float32)
+
+
 # ------------------------------------------------------------ prefill ------
 
 def lm_prefill(params: dict, batch: dict, cfg: ModelConfig,
@@ -147,8 +163,7 @@ def lm_prefill(params: dict, batch: dict, cfg: ModelConfig,
     caches.append(main_caches)
 
     h = common.apply_norm(h, params["final_norm"], cfg.norm)
-    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
-    logits = common.dense(h[:, -1], head)
+    logits = _serving_logits(h[:, -1], params, cfg)
     return logits, tuple(caches)
 
 
@@ -182,8 +197,45 @@ def lm_prefill_chunk(params: dict, tokens: Array, caches: Any, slot, pos0,
     new_caches.append(nc)
 
     h = common.apply_norm(h, params["final_norm"], cfg.norm)
-    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
-    logits = common.dense(h[:, -1], head)
+    logits = _serving_logits(h[:, -1], params, cfg)
+    return logits, tuple(new_caches)
+
+
+# ------------------------------------------------------------ verify -------
+
+def lm_verify_chunk(params: dict, tokens: Array, caches: Any, slots: Array,
+                    pos0s: Array, cfg: ModelConfig) -> tuple[Array, Any]:
+    """Speculative verify: score a C-token draft window for S slots in ONE
+    batched pass through the layer stack.
+
+    tokens: [S, C] — row s is slot ``slots[s]``'s window, landing at cache
+    positions ``pos0s[s]..pos0s[s]+C-1``. Unlike ``lm_prefill_chunk`` this
+    returns EVERY position's logits ([S, C, V]): row position j scores the
+    token following tokens[s, j], which is what accept/reject needs for all
+    k drafts (plus the bonus token) from a single KV-pool walk.
+    """
+    h = jnp.take(params["embed"], tokens, axis=0).astype(jnp.bfloat16)
+    new_caches = []
+    idx = 0
+    if cfg.first_k_dense:
+        def step_d(carry, xs):
+            p, cache = xs
+            new_h, nc = block_verify_chunk(p, carry, cfg, cache, slots,
+                                           pos0s, dense_ffn=True)
+            return new_h, nc
+        h, nc = jax.lax.scan(step_d, h, (params["dense_layers"], caches[idx]))
+        new_caches.append(nc)
+        idx += 1
+
+    def step(carry, xs):
+        p, cache = xs
+        new_h, nc = block_verify_chunk(p, carry, cfg, cache, slots, pos0s)
+        return new_h, nc
+    h, nc = jax.lax.scan(step, h, (params["layers"], caches[idx]))
+    new_caches.append(nc)
+
+    h = common.apply_norm(h, params["final_norm"], cfg.norm)
+    logits = _serving_logits(h, params, cfg)           # [S, C, V]
     return logits, tuple(new_caches)
 
 
@@ -213,8 +265,7 @@ def lm_decode(params: dict, tokens: Array, caches: Any, cfg: ModelConfig
     new_caches.append(nc)
 
     h = common.apply_norm(h, params["final_norm"], cfg.norm)
-    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
-    logits = common.dense(h[:, -1], head)
+    logits = _serving_logits(h[:, -1], params, cfg)
     return logits, tuple(new_caches)
 
 

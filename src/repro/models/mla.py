@@ -243,6 +243,30 @@ def mla_prefill_chunk(p: dict, x: Array, cfg: MLAConfig, cache: dict,
     return out, new_cache
 
 
+def mla_verify_chunk(p: dict, x: Array, cfg: MLAConfig, cache: dict,
+                     slots: Array, pos0s: Array) -> tuple[Array, dict]:
+    """Speculative verify for MLA: append + attend a C-token latent window
+    for S slots in one batched pass (``_latent_attend`` already takes
+    per-slot ``q_pos``/``valid_len``). Rollback is ``paged.set_lens`` on the
+    caller's side, exactly like the GQA path."""
+    s_n, c, _ = x.shape
+    positions = pos0s[:, None] + jnp.arange(c, dtype=jnp.int32)[None, :]
+    q_nope, q_rope, c_kv_new, k_rope_new = _latents(p, x, cfg, positions)
+    tables = cache["block_table"][slots]               # [S, mb]
+    fmt = qcore.get_format(cfg.kv_dtype)
+    pools = _scatter_latents(
+        cache, c_kv_new, k_rope_new, fmt,
+        lambda pool, vals: paged.scatter_chunk_multi(pool, tables, pos0s,
+                                                     vals))
+    c_kv, k_rope = _gather_latents(pools, tables, fmt, x.dtype)
+    ctx = _latent_attend(p, cfg, q_nope, q_rope, c_kv, k_rope, pos0s + c,
+                         q_pos=positions)
+    out = common.dense(ctx.reshape(s_n, c, -1).astype(x.dtype), p["wo"])
+    new_cache = {**pools, "block_table": cache["block_table"],
+                 "len": cache["len"].at[slots].set(pos0s + c)}
+    return out, new_cache
+
+
 def mla_cache_spec(batch: int, layout: PagedLayout, cfg: MLAConfig,
                    dtype=jnp.bfloat16, num_blocks: int | None = None) -> dict:
     nb = (paged.default_num_blocks(layout, batch) if num_blocks is None

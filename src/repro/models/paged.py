@@ -137,6 +137,29 @@ def scatter_chunk(pool: Array, table_row: Array, pos0, vals: Array) -> Array:
     return pool.at[blk, pos % bs].set(vals)
 
 
+def scatter_chunk_multi(pool: Array, tables: Array, pos0s: Array,
+                        vals: Array) -> Array:
+    """Write a C-token chunk for EACH of S sequences in one scatter.
+
+    pool [nb, bs, ...]; tables [S, mb]; pos0s [S]; vals [S, C, ...]. The
+    speculative verify pass appends every slot's draft window in one launch.
+    Slots never share pool blocks, so cross-slot writes cannot collide; a
+    duplicated (slot, pos0, vals) row — the fixed-shape padding the spec
+    engine uses — writes identical values twice, which ``.at[].set`` resolves
+    deterministically. Positions past the table's span are routed to the
+    null block EXPLICITLY: when a slot owns every table entry (prompt +
+    max_new == max_context) there is no null tail to clip into, and a
+    clipped write would corrupt the slot's own cached history.
+    """
+    s, c = vals.shape[:2]
+    bs, mb = pool.shape[1], tables.shape[1]
+    pos = pos0s[:, None] + jnp.arange(c, dtype=jnp.int32)[None, :]   # [S, C]
+    blk_idx = pos // bs
+    blk = jnp.take_along_axis(tables, jnp.clip(blk_idx, 0, mb - 1), axis=1)
+    blk = jnp.where(blk_idx < mb, blk, NULL_BLOCK)
+    return pool.at[blk, pos % bs].set(vals)
+
+
 # ------------------------------------------------------ cache-tree surgery --
 
 # Leaf names that are shared block pools (no batch axis — never reset
@@ -171,6 +194,28 @@ def keep_slots(old, new, keep_mask: Array):
         return jnp.where(keep, o, n)
 
     return tree_map_with_path(one, old, new)
+
+
+def set_lens(caches, slots: Array, new_lens: Array):
+    """Set per-slot cached lengths of a batched LM cache tree: ``len``
+    leaves ([L, B]) get ``len[:, slots] = new_lens``; everything else passes
+    through untouched.
+
+    This is the speculative-decode rollback: a rejected draft suffix is
+    undone purely by decrementing the slot's length — the pool blocks stay
+    allocated and the stale rows beyond ``len`` are masked by every reader
+    and overwritten by the next append. Duplicate ``slots`` entries (the
+    spec engine's fixed-shape padding) must carry identical values.
+    """
+    from jax.tree_util import tree_map_with_path
+
+    def one(path, leaf):
+        name = str(getattr(path[-1], "key", path[-1]))
+        if name == "len":
+            return leaf.at[:, slots].set(new_lens[None, :])
+        return leaf
+
+    return tree_map_with_path(one, caches)
 
 
 def reset_slot(caches, slot, table_row: Array):

@@ -67,6 +67,10 @@ class Request:
     temperature: float = 0.0
     top_k: int = 0
     seed: int = 0
+    # speculative decoding: None inherits the engine's spec_k; the engine
+    # additionally caps by its verify-window width, the request's remaining
+    # token budget, and the slot's allocated blocks
+    spec_k: int | None = None
     output: list = field(default_factory=list)
     logprobs: list = field(default_factory=list)   # per emitted token
     slot: int | None = None
@@ -304,6 +308,7 @@ class DecodeEngine:
             self.caches = self._reset_slot(self.caches,
                                            jnp.int32(req.slot),
                                            jnp.asarray(row))
+            self._on_admit(req)
 
         nxt = self.scheduler.next_chunk()
         if nxt is not None:
@@ -311,12 +316,24 @@ class DecodeEngine:
             logits, self.caches = self._prefill_chunk(
                 self.params, jnp.asarray([chunk], jnp.int32), self.caches,
                 jnp.int32(req.slot), jnp.int32(pos0))
+            self._on_prefill_chunk(req, chunk, pos0)
             self._account_prefill(pos0 + len(chunk), first=pos0 == 0)
             if self.scheduler.prefill_advance(req, len(chunk)):
                 self._emit_first_token(req, logits)
 
         if self.scheduler.decoding:
             self._decode_step()
+
+    # Subclass hooks (speculative engine mirrors these into its proposer).
+    def _on_admit(self, req: Request) -> None:
+        pass
+
+    def _on_prefill_chunk(self, req: Request, chunk: list,
+                          pos0: int) -> None:
+        pass
+
+    def _on_retire(self, req: Request) -> None:
+        pass
 
     def run_until_done(self, max_steps: int = 10_000) -> None:
         for _ in range(max_steps):
@@ -427,6 +444,7 @@ class DecodeEngine:
 
     def _retire(self, req: Request) -> None:
         slot = req.slot
+        self._on_retire(req)
         self.scheduler.retire(req)
         # Point the slot's tables back at the null block so the next
         # batched steps' stray writes can't touch re-allocated blocks.
@@ -458,3 +476,184 @@ class DecodeEngine:
             self.kv_stats["contiguous_bytes"] += (self.layout.max_context
                                                   * self._token_bytes)
         self.kv_stats["prefill_chunks"] += 1
+
+
+class SpecDecodeEngine(DecodeEngine):
+    """Speculative continuous-batching engine: draft → verify → accept.
+
+    Each engine step still admits + runs one prefill chunk (the proposer
+    mirrors both through hooks), but the batched decode step is replaced by
+    a draft/verify cycle: the proposer guesses up to ``spec_k`` tokens per
+    decoding slot, ONE fixed-shape ``verify_fn`` launch scores every slot's
+    window against the paged KV (quantized pools included), and exact
+    accept/reject emits between 1 and k+1 tokens per slot per step. The
+    expected emitted length per KV-pool walk is the speedup — the walk is
+    the decode path's dominant traffic (``repro.ecm.tpu
+    .predicted_spec_speedup`` is the analytic forecast).
+
+    Rollback of a rejected suffix is pure bookkeeping: the slot's ``len``
+    drops to the accepted prefix (``paged.set_lens``), blocks stay
+    allocated, and scale pools ride the same tables — stale rows past
+    ``len`` are masked by every reader and overwritten by the next append.
+
+    Restricted to paged-KV attention families (dense/moe/vlm): recurrent
+    SSM state cannot be rolled back by a length decrement. Greedy requests
+    emit the identical token stream to ``DecodeEngine``; sampled requests
+    stay keyed on (seed, emit index) — reproducible and batch-invariant —
+    with the emitted marginal exactly the target distribution.
+    """
+
+    def __init__(self, cfg: ModelConfig, params, *, proposer,
+                 spec_k: int = 4, **kw):
+        if cfg.family not in ("dense", "moe", "vlm"):
+            raise ValueError(
+                f"speculative decoding needs a rollback-able paged KV "
+                f"cache; family {cfg.family!r} carries recurrent state")
+        if spec_k < 1:
+            raise ValueError(f"spec_k must be >= 1, got {spec_k}")
+        super().__init__(cfg, params, **kw)
+        self.proposer = proposer
+        self.spec_k = int(spec_k)
+        self._verify = jax.jit(api.verify_fn(cfg))
+        self._set_lens = jax.jit(paged.set_lens)
+        self.kv_stats.update({"spec_steps": 0, "spec_slot_steps": 0,
+                              "spec_drafted": 0, "spec_accepted": 0,
+                              "spec_emitted": 0})
+        proposer.attach(self)
+
+    # proposer mirrors admission, prompt caching and retirement ----------
+    def _on_admit(self, req: Request) -> None:
+        self.proposer.on_admit(req)
+
+    def _on_prefill_chunk(self, req: Request, chunk: list,
+                          pos0: int) -> None:
+        self.proposer.on_prefill_chunk(req, chunk, pos0)
+
+    def _on_retire(self, req: Request) -> None:
+        self.proposer.on_retire(req)
+
+    # ------------------------------------------------------- spec step ----
+
+    def _effective_k(self, req: Request) -> int:
+        """Drafts actually worth proposing for this request now: the
+        engine window, the request knob, the remaining token budget and
+        the slot's allocated blocks all cap it. k == 0 degenerates to a
+        plain (verify-path) decode step for that slot."""
+        k = self.spec_k if req.spec_k is None else min(req.spec_k,
+                                                       self.spec_k)
+        k = min(k, req.max_new_tokens - len(req.output) - 1)
+        cached = req.prefill_pos + len(req.output) - 1
+        capacity = len(req.blocks) * self.layout.block_size
+        return max(0, min(k, capacity - cached - 1))
+
+    def _decode_step(self) -> None:
+        from repro.spec import sampler as spec_sampler
+        from repro.spec.verify import pack_windows
+
+        decoding = [self.scheduler.decoding[s]
+                    for s in sorted(self.scheduler.decoding)]
+        ks = [self._effective_k(r) for r in decoding]
+        drafts, qdists = self.proposer.propose(decoding, ks)
+
+        window = self.spec_k + 1
+        tokens, slots, pos0s = pack_windows(decoding, ks, drafts,
+                                            self.max_slots, window)
+        logits, self.caches = self._verify(
+            self.params, jnp.asarray(tokens), self.caches,
+            jnp.asarray(slots), jnp.asarray(pos0s))
+        argmax = np.asarray(jnp.argmax(logits, axis=-1))       # [B, C]
+        # Greedy batches keep the host-transfer discipline (only the
+        # [B, C] argmax crosses). Exact accept/residual math for SAMPLED
+        # requests currently pulls the full [B, C, V] rows — fine at this
+        # repo's CPU-test vocab sizes, but a device-side rejection sampler
+        # (the _sample_rows treatment applied to accept/residual draws)
+        # is what a large-vocab deployment needs; see ROADMAP.
+        sampled = any(r.temperature > 0.0 for r in decoding)
+        rows = (np.asarray(logits[:len(decoding)], np.float32)
+                if sampled else None)
+
+        emitted_all: list[list[int]] = []
+        accepted: list[int] = []
+        new_lens: list[int] = []
+        for i, req in enumerate(decoding):
+            if req.temperature <= 0.0:
+                acc, emitted = spec_sampler.greedy_verify(
+                    argmax[i], drafts[i][:ks[i]])
+            else:
+                acc, emitted = spec_sampler.rejection_sample(
+                    rows[i], drafts[i][:ks[i]], qdists[i],
+                    req.temperature, req.top_k, req.seed,
+                    len(req.output))
+            emitted_all.append(emitted)
+            accepted.append(acc)
+            new_lens.append(int(pos0s[i]) + 1 + acc)
+
+        # one fused stats launch prices every emitted token's logprob
+        chosen = np.zeros(tokens.shape, np.int32)
+        for i, emitted in enumerate(emitted_all):
+            chosen[i, :len(emitted)] = emitted
+        stats = _logit_stats(logits.reshape(-1, logits.shape[-1]),
+                             jnp.asarray(chosen.reshape(-1), jnp.int32))
+        logprobs = np.asarray(stats["logprob"]).reshape(tokens.shape)
+        self.last_logit_stats = {
+            k: np.asarray(v).reshape(tokens.shape) for k, v in stats.items()}
+
+        # rollback: rejected suffixes disappear by length bookkeeping only
+        lens_pad = np.full((self.max_slots,), new_lens[0], np.int32)
+        lens_pad[:len(decoding)] = new_lens
+        self.caches = self._set_lens(self.caches, jnp.asarray(slots),
+                                     jnp.asarray(lens_pad))
+
+        self._account_spec(pos0s[:len(decoding)], ks, emitted_all, accepted)
+
+        retired, alive, alive_lens = [], [], []
+        for i, req in enumerate(decoding):
+            done = False
+            for j, tok in enumerate(emitted_all[i]):
+                req.output.append(int(tok))
+                req.logprobs.append(float(logprobs[i, j]))
+                if self._finished(req, int(tok)):
+                    done = True
+                    break
+            self._next_tokens = self._next_tokens.at[req.slot, 0].set(
+                req.output[-1])
+            if done:
+                retired.append(req)
+            else:
+                alive.append(req)
+                alive_lens.append(new_lens[i])
+        self.proposer.sync(alive, alive_lens)
+        for req in retired:
+            self._retire(req)
+
+    def _account_spec(self, pos0s, ks, emitted_all, accepted) -> None:
+        bs = self.layout.block_size
+        window = self.spec_k + 1
+        # one KV-pool walk per slot covers the whole window (the spec win);
+        # the contiguous baseline still pays a max_context row PER TOKEN
+        touched = sum(paged.cdiv(int(p) + window, bs) * bs for p in pos0s)
+        n_emitted = sum(len(e) for e in emitted_all)
+        self.kv_stats["paged_bytes"] += touched * self._token_bytes
+        self.kv_stats["paged_bytes_bf16"] += touched * self._token_bytes_bf16
+        self.kv_stats["contiguous_bytes"] += (n_emitted
+                                              * self.layout.max_context
+                                              * self._token_bytes)
+        self.kv_stats["decode_steps"] += 1
+        self.kv_stats["spec_steps"] += 1
+        self.kv_stats["spec_slot_steps"] += len(pos0s)
+        self.kv_stats["spec_drafted"] += sum(ks)
+        self.kv_stats["spec_accepted"] += sum(accepted)
+        self.kv_stats["spec_emitted"] += n_emitted
+
+    @property
+    def acceptance_rate(self) -> float:
+        """Fraction of drafted tokens the target accepted so far."""
+        drafted = self.kv_stats["spec_drafted"]
+        return self.kv_stats["spec_accepted"] / drafted if drafted else 0.0
+
+    @property
+    def mean_accepted_length(self) -> float:
+        """Tokens emitted per per-slot verify walk (the amortization
+        factor the ECM speedup model forecasts)."""
+        walks = self.kv_stats["spec_slot_steps"]
+        return self.kv_stats["spec_emitted"] / walks if walks else 0.0

@@ -1,0 +1,30 @@
+"""Speculative decoding subsystem: draft proposers, batched multi-token
+verification over the paged KV, and exact rejection sampling.
+
+The serving decode path is data-bound — every emitted token pays a full
+KV-pool walk (the traffic ``DecodeEngine.kv_stats`` counts). Speculation
+amortizes that walk: a cheap proposer guesses k tokens, ONE batched verify
+pass scores all of them against the target model (``repro.models.api
+.verify_fn``), and exact rejection sampling keeps the emitted stream
+distributed exactly as the target — greedy streams are identical to
+non-speculative decode, sampled streams stay keyed on the request's
+(seed, emit index) and therefore batch-invariant.
+
+  propose  — prompt-lookup n-gram proposer (no extra parameters) and a
+             draft-model proposer running a small config with its own
+             paged KV cache
+  verify   — fixed-shape draft-window packing for the batched verify pass
+  sampler  — keyed exact accept/reject + residual sampling
+
+The engine entry point is ``repro.serving.engine.SpecDecodeEngine``; the
+analytic speedup model lives in ``repro.ecm.tpu.predicted_spec_speedup``.
+"""
+
+from repro.spec import sampler
+from repro.spec.propose import DraftModelProposer, NGramProposer, Proposer
+from repro.spec.sampler import greedy_verify, rejection_sample, target_dist
+from repro.spec.verify import pack_windows
+
+__all__ = ["DraftModelProposer", "NGramProposer", "Proposer", "sampler",
+           "greedy_verify", "rejection_sample", "target_dist",
+           "pack_windows"]

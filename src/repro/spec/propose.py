@@ -1,0 +1,223 @@
+"""Draft proposers: who guesses the k candidate tokens.
+
+Two strategies with opposite cost profiles:
+
+``NGramProposer``
+    Prompt-lookup decoding — zero extra parameters, zero extra model
+    launches. The last n tokens of the request's own history (prompt +
+    emitted) are matched against earlier history; the continuation of the
+    most recent match is proposed. Pays off whenever generation revisits
+    its own context (extraction, summarization, code edits, repetition);
+    proposes deliberately-cold padding when no match exists, which the
+    verify pass simply rejects.
+
+``DraftModelProposer``
+    A small model from ``configs/registry.py`` drafting for the target,
+    with its OWN paged KV cache mirroring the target's sequences chunk by
+    chunk. Costs k+1 batched draft decode steps per engine step (the +1
+    appends the last draft's KV so a fully-accepted window leaves the
+    draft cache aligned); pays off when the draft actually approximates
+    the target. Rollback is the same O(1) ``set_lens`` bookkeeping the
+    target uses.
+
+Proposers see the engine through a narrow hook surface (``attach`` /
+``on_admit`` / ``on_prefill_chunk`` / ``on_retire`` / ``propose`` /
+``sync``); the scheduler guarantees ``propose`` is only ever called for
+slots that finished prefill — a mid-chunked-prefill slot is never drafted.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.spec import sampler
+
+Array = jax.Array
+
+
+class Proposer:
+    """No-op base: hook surface between a proposer and the spec engine."""
+
+    name = "none"
+
+    def attach(self, engine) -> None:
+        """Called once by SpecDecodeEngine.__init__ with the engine."""
+
+    def on_admit(self, req) -> None:
+        """A request was admitted to a slot (tables reset, prefill next)."""
+
+    def on_prefill_chunk(self, req, chunk: list, pos0: int) -> None:
+        """The engine cached one prompt chunk for ``req`` (mirror it)."""
+
+    def on_retire(self, req) -> None:
+        """``req`` left its slot; release any per-slot state."""
+
+    def propose(self, reqs: list, ks: list[int]
+                ) -> tuple[list[list[int]], list]:
+        """Draft ``ks[i]`` candidate tokens for each decoding request.
+
+        Returns (drafts, qdists): drafts[i] is a list of exactly ks[i]
+        token ids; qdists[i] is either None (point-mass proposal — accept
+        tests against probability 1) or an [ks[i], V] array of the full
+        proposal distribution per position (needed for exact residual
+        sampling with a stochastic draft).
+        """
+        raise NotImplementedError
+
+    def sync(self, reqs: list, new_lens: list[int]) -> None:
+        """Verification accepted a prefix; roll internal state to match."""
+
+
+class NGramProposer(Proposer):
+    """Prompt-lookup: propose the continuation of the most recent earlier
+    occurrence of the request's trailing n-gram (n = max_n..min_n)."""
+
+    name = "ngram"
+
+    def __init__(self, max_n: int = 3, min_n: int = 1, pad_token: int = 0):
+        assert max_n >= min_n >= 1
+        self.max_n = max_n
+        self.min_n = min_n
+        self.pad_token = pad_token
+
+    def _lookup(self, hist: list[int], k: int) -> list[int]:
+        for n in range(self.max_n, self.min_n - 1, -1):
+            if len(hist) <= n:
+                continue
+            pattern = hist[-n:]
+            # most recent earlier occurrence wins (locality beats frequency
+            # for generation that revisits its own context)
+            for start in range(len(hist) - n - 1, -1, -1):
+                if hist[start:start + n] == pattern:
+                    cont = hist[start + n:start + n + k]
+                    if cont:
+                        return (cont + [self.pad_token] * (k - len(cont)))[:k]
+        return [self.pad_token] * k
+
+    def propose(self, reqs, ks):
+        drafts = [self._lookup(list(r.prompt) + list(r.output), k)
+                  for r, k in zip(reqs, ks)]
+        return drafts, [None] * len(reqs)
+
+
+class DraftModelProposer(Proposer):
+    """A small draft model with its own paged KV cache.
+
+    The draft cache mirrors the target's sequences exactly: prompt chunks
+    are replayed as the engine caches them, accepted prefixes are synced by
+    the same length-rollback the target uses, and the (k+1)-th decode step
+    appends the final draft's KV so a fully-accepted window needs no
+    catch-up. Greedy requests are drafted greedily; sampled requests draw
+    from the draft's own temperature/top-k distribution keyed on
+    ``(seed, emit index, DRAFT_SALT)`` — reproducible and batch-invariant,
+    and the full distribution is returned for exact residual sampling.
+    """
+
+    name = "draft"
+
+    def __init__(self, cfg, params):
+        if cfg.family not in ("dense", "moe"):
+            raise ValueError(
+                f"draft model must be a paged-KV attention family "
+                f"(rollback is a length decrement), got {cfg.family!r}")
+        self.cfg = cfg
+        self.params = params
+        self.engine = None
+
+    def attach(self, engine) -> None:
+        from repro.models import api, paged
+        if self.cfg.vocab_size != engine.cfg.vocab_size:
+            raise ValueError(
+                f"draft vocab {self.cfg.vocab_size} != target vocab "
+                f"{engine.cfg.vocab_size}: draft tokens must be target "
+                f"tokens")
+        self.engine = engine
+        self.max_slots = engine.max_slots
+        layout = engine.layout
+        self.kv = api.KVCache.build(self.cfg,
+                                    max_context=layout.max_context,
+                                    block_size=layout.block_size,
+                                    max_slots=engine.max_slots)
+        self.token_bytes = self.kv.token_bytes(engine.max_slots)
+        self.caches = self.kv.init(engine.max_slots)
+        self._decode = jax.jit(api.decode_fn(self.cfg))
+        self._chunk = jax.jit(api.prefill_chunk_fn(self.cfg))
+        self._reset_slot = jax.jit(paged.reset_slot)
+        self._keep_slots = jax.jit(paged.keep_slots)
+        self._set_lens = jax.jit(paged.set_lens)
+        # the draft pool is never oversubscribed: slot s statically owns
+        # identity row s, so admission needs no allocator of its own
+        self._identity = np.asarray(paged.identity_table(engine.max_slots,
+                                                         layout))
+        self._null_row = jnp.full((layout.max_blocks,), paged.NULL_BLOCK,
+                                  jnp.int32)
+
+    def on_admit(self, req) -> None:
+        self.caches = self._reset_slot(
+            self.caches, jnp.int32(req.slot),
+            jnp.asarray(self._identity[req.slot]))
+
+    def on_prefill_chunk(self, req, chunk, pos0) -> None:
+        _, self.caches = self._chunk(
+            self.params, jnp.asarray([chunk], jnp.int32), self.caches,
+            jnp.int32(req.slot), jnp.int32(pos0))
+
+    def on_retire(self, req) -> None:
+        self.caches = self._reset_slot(self.caches, jnp.int32(req.slot),
+                                       self._null_row)
+
+    def propose(self, reqs, ks):
+        k_max = max(ks) if ks else 0
+        slots = [r.slot for r in reqs]
+        before = self.caches
+        toks = np.zeros((self.max_slots, 1), np.int32)
+        for r in reqs:
+            toks[r.slot, 0] = r.output[-1]
+        drafts: list[list[int]] = [[] for _ in reqs]
+        qrows: list[list[np.ndarray]] = [[] for _ in reqs]
+        # Draft choices run host-side per (request, position): exact at
+        # any scale, cheap at this repo's CPU-test vocab sizes. The
+        # batched-device treatment (_sample_rows-style one launch per
+        # draft step) is the large-vocab follow-up; see ROADMAP.
+        for j in range(k_max + 1):
+            logits, self.caches = self._decode(self.params,
+                                               jnp.asarray(toks),
+                                               self.caches)
+            if j == k_max:
+                break      # this step only appended the final draft's KV
+            rows = np.asarray(logits, np.float32)
+            for i, r in enumerate(reqs):
+                row = rows[r.slot].reshape(-1)
+                if r.temperature <= 0.0:
+                    tok = int(row.argmax())
+                    q = None
+                else:
+                    q = sampler.target_dist(row, r.temperature, r.top_k)
+                    key = jax.random.fold_in(
+                        sampler.emit_key(r.seed, len(r.output) + j),
+                        sampler.DRAFT_SALT)
+                    tok = sampler._inverse_cdf(
+                        q, float(jax.random.uniform(key)))
+                toks[r.slot, 0] = tok
+                if j < ks[i]:
+                    drafts[i].append(tok)
+                    if q is not None:
+                        qrows[i].append(q)
+        # the full-batch draft decode also stepped slots we are not
+        # drafting for (mid-prefill or idle); restore their per-slot
+        # state — the same discipline the target engine applies
+        mask = np.ones((self.max_slots,), bool)
+        mask[slots] = False
+        self.caches = self._keep_slots(before, self.caches,
+                                       jnp.asarray(mask))
+        qdists = [np.stack(q) if q else None for q in qrows]
+        return drafts, qdists
+
+    def sync(self, reqs, new_lens) -> None:
+        if not reqs:
+            return
+        self.caches = self._set_lens(
+            self.caches, jnp.asarray([r.slot for r in reqs], jnp.int32),
+            jnp.asarray(new_lens, jnp.int32))

@@ -1,0 +1,127 @@
+"""Exact rejection sampling for speculative decoding.
+
+The emitted stream must be distributed EXACTLY as the target model's own
+sampling scheme — speculation is a systems optimization, never a model
+change. Greedy requests get the classic argmax-prefix rule (accept drafts
+while they equal the target argmax, then emit the target's own choice), so
+the greedy stream is identical to non-speculative decode. Sampled requests
+get the accept/residual construction of Leviathan et al.: accept draft x
+with probability min(1, p(x)/q(x)), otherwise draw from the normalized
+residual (p - q)+ — the emitted marginal is exactly p for ANY proposal q,
+including the n-gram proposer's point mass.
+
+Every random draw is keyed on the request's ``(seed, emit index)`` — the
+same stream discipline as the non-speculative engine — plus a role salt,
+so a request's tokens depend only on its own seed and history: batch
+composition, admission timing and the proposer's k never perturb them.
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+# Role salts folded into the per-emit-index key. The non-speculative
+# engine consumes the unsalted key directly in jax.random.categorical;
+# speculation needs up to two independent draws per position.
+ACCEPT_SALT = 1     # the accept/reject uniform
+RESIDUAL_SALT = 2   # the residual draw after a rejection
+BONUS_SALT = 3      # the bonus draw when every draft was accepted
+DRAFT_SALT = 7      # the draft model's own proposal draw
+
+
+def emit_key(seed: int, emit_index: int) -> jax.Array:
+    """The request-private stream at one emit index (matches the
+    non-speculative engine's ``_sample_key`` construction)."""
+    return jax.random.fold_in(jax.random.key(seed), emit_index)
+
+
+def _uniform(key: jax.Array) -> float:
+    return float(jax.random.uniform(key))
+
+
+def target_dist(row: np.ndarray, temperature: float, top_k: int
+                ) -> np.ndarray:
+    """The engine's sampling distribution for one logit row: temperature
+    scaling + top-k truncation. Mirrors ``_sample_row`` exactly — values
+    tied with the k-th largest logit are kept, not cut."""
+    z = row.astype(np.float64) / max(temperature, 1e-6)
+    if top_k:
+        kth = np.sort(z)[-min(top_k, z.shape[-1])]
+        z = np.where(z < kth, -np.inf, z)
+    z = z - z.max()
+    p = np.exp(z)
+    return p / p.sum()
+
+
+def _inverse_cdf(p: np.ndarray, u: float) -> int:
+    idx = int(np.searchsorted(np.cumsum(p), u, side="right"))
+    return min(idx, p.shape[-1] - 1)
+
+
+def greedy_verify(target_argmax: np.ndarray, drafts: list[int]
+                  ) -> tuple[int, list[int]]:
+    """Greedy accept rule. ``target_argmax``: [>=k+1] argmax per verify
+    row (row j scores the token following window position j); ``drafts``:
+    k proposed tokens. Returns (accepted count, emitted tokens) — the
+    accepted prefix plus the target's own token at the first mismatch (or
+    the bonus token when everything matched). The emitted stream is the
+    non-speculative greedy stream by construction.
+    """
+    emitted: list[int] = []
+    for j, d in enumerate(drafts):
+        tgt = int(target_argmax[j])
+        if int(d) != tgt:
+            emitted.append(tgt)
+            return j, emitted
+        emitted.append(tgt)
+    emitted.append(int(target_argmax[len(drafts)]))
+    return len(drafts), emitted
+
+
+def rejection_sample(rows: np.ndarray, drafts: list[int],
+                     qdists: np.ndarray | None, temperature: float,
+                     top_k: int, seed: int, emit_base: int
+                     ) -> tuple[int, list[int]]:
+    """Exact accept/reject over one slot's verify window.
+
+    rows: [>=k+1, V] target logits (row j scores the token following
+    window position j); drafts: k proposed tokens; qdists: the proposer's
+    full per-position distributions [k, V] (None means a point mass on the
+    drafted token — the n-gram proposer). ``emit_base`` is the emit index
+    of the first token produced this step. Returns (accepted count,
+    emitted tokens); the marginal of each emitted token is exactly the
+    target distribution.
+    """
+    emitted: list[int] = []
+    for j, d in enumerate(drafts):
+        d = int(d)
+        p = target_dist(rows[j], temperature, top_k)
+        key = emit_key(seed, emit_base + j)
+        q_d = 1.0 if qdists is None else float(qdists[j][d])
+        if q_d <= 0.0:
+            # the proposer claims it could not have drawn d — defensively
+            # treat as a guaranteed rejection rather than divide by zero
+            ratio = 0.0
+        else:
+            ratio = min(1.0, float(p[d]) / q_d)
+        if _uniform(jax.random.fold_in(key, ACCEPT_SALT)) < ratio:
+            emitted.append(d)
+            continue
+        if qdists is None:
+            res = p.copy()
+            res[d] = 0.0
+        else:
+            res = np.maximum(p - qdists[j], 0.0)
+        tot = res.sum()
+        if tot <= 0.0:     # p == q exactly: the residual is empty and the
+            res, tot = p, p.sum()   # acceptance above was certain anyway
+        y = _inverse_cdf(res / tot,
+                         _uniform(jax.random.fold_in(key, RESIDUAL_SALT)))
+        emitted.append(y)
+        return j, emitted
+    p = target_dist(rows[len(drafts)], temperature, top_k)
+    key = emit_key(seed, emit_base + len(drafts))
+    emitted.append(_inverse_cdf(
+        p, _uniform(jax.random.fold_in(key, BONUS_SALT))))
+    return len(drafts), emitted

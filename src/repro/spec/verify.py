@@ -1,0 +1,53 @@
+"""Draft-window packing for the batched verify pass.
+
+The spec engine verifies every decoding slot's draft window in ONE launch
+of ``repro.models.api.verify_fn`` (tokens [S, C], per-slot offsets). To
+keep that launch a single compiled shape regardless of how many slots are
+decoding or how long each slot's effective k is, windows are packed into a
+fixed [max_slots, spec_k + 1] frame:
+
+- row layout: column 0 is the slot's pending token (the last emitted,
+  not-yet-cached token — exactly what a decode step would feed), columns
+  1..k its drafts, the tail padded with the pending token;
+- unused rows duplicate row 0 — duplicate (slot, pos0, tokens) writes are
+  idempotent under ``scatter_chunk_multi`` and their outputs are ignored.
+
+Padding costs only wasted lanes: padded positions can only write junk at
+positions beyond the slot's length (masked by ``len`` and overwritten by
+the next append, or absorbed by the null block past the slot's allocated
+blocks), and the causal mask keeps every VALID row's scores independent
+of junk rows. Acceptance decisions read only the first k+1 columns of
+real rows.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def pack_windows(reqs: list, ks: list[int], drafts: list[list[int]],
+                 max_slots: int, window: int
+                 ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Pack per-request draft windows into the fixed verify frame.
+
+    Returns (tokens [max_slots, window], slots [max_slots],
+    pos0s [max_slots]); row i < len(reqs) belongs to reqs[i], later rows
+    duplicate row 0. ``pos0s`` is each slot's cached length (prompt +
+    emitted - 1 — the pending token is not yet cached), i.e. where the
+    window lands.
+    """
+    assert reqs and len(reqs) <= max_slots
+    tokens = np.zeros((max_slots, window), np.int32)
+    slots = np.zeros((max_slots,), np.int32)
+    pos0s = np.zeros((max_slots,), np.int32)
+    for i, (req, k) in enumerate(zip(reqs, ks)):
+        assert 0 <= k < window and len(drafts[i]) >= k
+        win = [req.output[-1]] + [int(t) for t in drafts[i][:k]]
+        win += [win[-1]] * (window - len(win))
+        tokens[i] = win
+        slots[i] = req.slot
+        pos0s[i] = req.prefill_pos + len(req.output) - 1
+    tokens[len(reqs):] = tokens[0]
+    slots[len(reqs):] = slots[0]
+    pos0s[len(reqs):] = pos0s[0]
+    return tokens, slots, pos0s

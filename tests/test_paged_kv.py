@@ -76,6 +76,63 @@ def test_scatter_token_and_chunk():
     assert np.array_equal(virt[0, 6:9], np.asarray(chunk))   # crosses blocks
 
 
+def test_scatter_chunk_multi_matches_sequential():
+    """The speculative verify's one-launch multi-slot scatter is bitwise
+    the per-slot scatter_chunk loop — including duplicated rows (the
+    fixed-shape padding), whose identical values resolve deterministically."""
+    layout = PagedLayout(4, 3)
+    rng = np.random.default_rng(1)
+    pool0 = jnp.asarray(rng.standard_normal((1 + 2 * 3, 4, 2)),
+                        jnp.float32)
+    table = paged.identity_table(2, layout)
+    pos0s = jnp.asarray([5, 2], jnp.int32)
+    vals = jnp.asarray(rng.standard_normal((2, 3, 2)), jnp.float32)
+
+    seq = pool0
+    for i in range(2):
+        seq = paged.scatter_chunk(seq, table[i], pos0s[i], vals[i])
+    multi = paged.scatter_chunk_multi(pool0, table, pos0s, vals)
+    np.testing.assert_array_equal(np.asarray(seq), np.asarray(multi))
+
+    # duplicate rows (padding) write the same values twice — same result
+    dup = paged.scatter_chunk_multi(
+        pool0, jnp.concatenate([table, table[:1]]),
+        jnp.concatenate([pos0s, pos0s[:1]]),
+        jnp.concatenate([vals, vals[:1]]))
+    np.testing.assert_array_equal(np.asarray(multi), np.asarray(dup))
+
+    # positions past the table clip into its last entry; pointing that at
+    # the null block absorbs the overflow (spec windows near capacity)
+    null_table = jnp.asarray([[1, paged.NULL_BLOCK, paged.NULL_BLOCK]],
+                             jnp.int32)
+    over = paged.scatter_chunk_multi(pool0, null_table,
+                                     jnp.asarray([3], jnp.int32), vals[:1])
+    np.testing.assert_array_equal(np.asarray(over)[2:],
+                                  np.asarray(pool0)[2:])
+
+
+def test_set_lens_touches_only_len():
+    """Rollback is surgical: ``set_lens`` rewrites the named slots' len
+    entries and nothing else in the cache tree."""
+    cfg = reduced(get_config("qwen1.5-0.5b")).with_(num_layers=2)
+    kv = api.KVCache.build(cfg, max_context=64, block_size=16, max_slots=3)
+    caches = jax.tree.map(
+        lambda x: x + 1 if x.dtype == jnp.int32 else x + 0.5, kv.init(3))
+    rolled = paged.set_lens(caches, jnp.asarray([0, 2], jnp.int32),
+                            jnp.asarray([7, 4], jnp.int32))
+    from jax.tree_util import tree_flatten_with_path
+    flat_a = tree_flatten_with_path(caches)[0]
+    flat_b = tree_flatten_with_path(rolled)[0]
+    for (path, a), (_, b) in zip(flat_a, flat_b):
+        name = str(getattr(path[-1], "key", path[-1]))
+        if name == "len":
+            assert np.all(np.asarray(b)[:, [0, 2]] == [7, 4])
+            np.testing.assert_array_equal(np.asarray(a)[:, 1],
+                                          np.asarray(b)[:, 1])
+        else:
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
 def test_paged_attend_equals_contiguous_bitwise():
     """Attention over block-gathered K/V equals attention over the
     contiguous rows bitwise — the acceptance bar for replacing the

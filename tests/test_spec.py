@@ -1,0 +1,394 @@
+"""Speculative decoding tests.
+
+The contract under test: speculation is a systems optimization, never a
+model change. Greedy requests must emit the IDENTICAL token stream the
+non-speculative engine emits (on CPU this is bitwise-structural: a verify
+window reproduces the decode steps it replaces bit for bit — logits AND
+written K/V/scales); sampled requests must stay keyed on (seed, emit
+index) and distribution-exact. Rollback must be invisible: block tables,
+scale pools and lens identical to a decode that never saw the rejected
+drafts. A slot that is still mid-chunked-prefill must never be drafted
+for.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.tree_util import tree_flatten_with_path
+
+from repro.configs import get_config, reduced
+from repro.models import api, common, paged
+from repro.serving.engine import DecodeEngine, Request, SpecDecodeEngine
+from repro.spec import (DraftModelProposer, NGramProposer, Proposer,
+                        rejection_sample, sampler)
+
+MAX_CONTEXT = 64
+BLOCK = 16
+CHUNK = 8
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = reduced(get_config("qwen1.5-0.5b")).with_(num_layers=2)
+    params = common.init_params(api.schema(cfg), jax.random.key(0))
+    return cfg, params
+
+
+# mixed workload: the long prompt spans several chunks, so its prefill
+# interleaves with the others' speculative decode steps
+PROMPTS = [[5, 9, 11], list(range(20, 52)), [7, 8]]
+
+
+def _run(cfg, params, engine_cls, prompts=None, max_new=10, **kw):
+    kw.setdefault("max_slots", 2)
+    kw.setdefault("max_context", MAX_CONTEXT)
+    kw.setdefault("block_size", BLOCK)
+    kw.setdefault("prefill_chunk", CHUNK)
+    engine = engine_cls(cfg, params, **kw)
+    reqs = [Request(rid=i, prompt=p, max_new_tokens=max_new)
+            for i, p in enumerate(prompts or PROMPTS)]
+    for r in reqs:
+        engine.submit(r)
+    engine.run_until_done()
+    assert all(r.done for r in reqs)
+    return reqs, engine
+
+
+def _leaves(tree):
+    return {tuple(str(getattr(p, "key", p)) for p in path): np.asarray(v)
+            for path, v in tree_flatten_with_path(tree)[0]}
+
+
+# ------------------------------------------------- greedy stream parity ----
+
+@pytest.mark.parametrize("k", [1, 4])
+def test_ngram_greedy_matches_nonspec(setup, k):
+    """Both proposers must leave greedy streams untouched whatever they
+    propose; the n-gram proposer mostly proposes cold tokens here, so this
+    exercises the full-rejection path plus chunked-prefill interleave."""
+    cfg, params = setup
+    base, _ = _run(cfg, params, DecodeEngine)
+    spec, engine = _run(cfg, params, SpecDecodeEngine,
+                        proposer=NGramProposer(), spec_k=k)
+    for b, s in zip(base, spec):
+        assert b.output == s.output
+    assert engine.kv_stats["spec_steps"] > 0
+
+
+def test_draft_greedy_matches_and_fully_accepts(setup):
+    """Self-drafting (draft == target) is the acceptance upper bound: the
+    draft's greedy decode IS the target's, so every draft must be accepted
+    — any rejection would mean verify and decode disagree numerically."""
+    cfg, params = setup
+    base, _ = _run(cfg, params, DecodeEngine)
+    spec, engine = _run(cfg, params, SpecDecodeEngine,
+                        proposer=DraftModelProposer(cfg, params), spec_k=3)
+    for b, s in zip(base, spec):
+        assert b.output == s.output
+    assert engine.acceptance_rate == 1.0
+    assert engine.mean_accepted_length > 2.0
+
+
+@pytest.mark.parametrize("kv_dtype", ["int8", "fp8"])
+def test_quantized_kv_spec_matches_nonspec(setup, kv_dtype):
+    """Quantized pools ride the verify/rollback path: the window is
+    quantized per (token, head) exactly as the decode append quantizes it,
+    so greedy parity must survive int8/fp8 KV (scale pools included)."""
+    cfg, _ = setup
+    cfg = cfg.with_(kv_dtype=kv_dtype)
+    params = common.init_params(api.schema(cfg), jax.random.key(0))
+    base, _ = _run(cfg, params, DecodeEngine)
+    spec, _ = _run(cfg, params, SpecDecodeEngine,
+                   proposer=NGramProposer(), spec_k=3)
+    for b, s in zip(base, spec):
+        assert b.output == s.output
+
+
+def test_full_table_request_matches_nonspec(setup):
+    """Regression: a request sized exactly to max_context owns EVERY block
+    table entry, so there is no null tail for overflowing window padding
+    to clip into — the scatter must route past-table positions to the
+    null block explicitly or the padding overwrites cached history."""
+    cfg, params = setup
+
+    def run(cls, **kw):
+        eng = cls(cfg, params, max_slots=2, max_context=MAX_CONTEXT,
+                  block_size=BLOCK, prefill_chunk=32, **kw)
+        r = Request(rid=0, prompt=list(range(2, 34)), max_new_tokens=32)
+        eng.submit(r)                  # 32 + 32 == max_context: full table
+        eng.run_until_done()
+        return r
+
+    base = run(DecodeEngine)
+    spec = run(SpecDecodeEngine, proposer=NGramProposer(), spec_k=4)
+    assert base.output == spec.output and len(spec.output) == 32
+
+
+def test_spec_eos_truncates_like_nonspec(setup):
+    """EOS inside an accepted window must retire the request at exactly
+    the token the non-speculative engine would retire it at."""
+    cfg, params = setup
+    base, _ = _run(cfg, params, DecodeEngine)
+    eos = base[0].output[3]
+    reqs_b = [Request(rid=0, prompt=PROMPTS[0], max_new_tokens=10,
+                      eos_id=eos)]
+    eng_b = DecodeEngine(cfg, params, max_slots=2, max_context=MAX_CONTEXT,
+                         block_size=BLOCK, prefill_chunk=CHUNK)
+    eng_b.submit(reqs_b[0])
+    eng_b.run_until_done()
+    eng_s = SpecDecodeEngine(cfg, params, max_slots=2,
+                             max_context=MAX_CONTEXT, block_size=BLOCK,
+                             prefill_chunk=CHUNK,
+                             proposer=DraftModelProposer(cfg, params),
+                             spec_k=4)
+    req_s = Request(rid=0, prompt=PROMPTS[0], max_new_tokens=10, eos_id=eos)
+    eng_s.submit(req_s)
+    eng_s.run_until_done()
+    assert req_s.output == reqs_b[0].output
+    assert req_s.output[-1] == eos and len(req_s.output) == 4
+
+
+def test_per_request_spec_k_cap(setup):
+    """A request's spec_k caps drafting below the engine default, and the
+    remaining-budget cap keeps the last window from overshooting
+    max_new_tokens."""
+    cfg, params = setup
+    base, _ = _run(cfg, params, DecodeEngine, prompts=[PROMPTS[0]],
+                   max_new=4)
+    engine = SpecDecodeEngine(cfg, params, max_slots=2,
+                              max_context=MAX_CONTEXT, block_size=BLOCK,
+                              prefill_chunk=CHUNK,
+                              proposer=NGramProposer(), spec_k=4)
+    req = Request(rid=0, prompt=PROMPTS[0], max_new_tokens=4, spec_k=1)
+    engine.submit(req)
+    engine.run_until_done()
+    assert req.output == base[0].output and len(req.output) == 4
+    # never more than 1 draft per walk, never past the 4-token budget
+    assert engine.kv_stats["spec_drafted"] <= engine.kv_stats["spec_steps"]
+
+
+def test_spec_rejects_recurrent_families():
+    cfg = reduced(get_config("mamba2-780m"))
+    params = common.init_params(api.schema(cfg), jax.random.key(1))
+    with pytest.raises(ValueError, match="recurrent"):
+        SpecDecodeEngine(cfg, params, proposer=NGramProposer())
+
+
+# ------------------------------------------- verify/rollback bitwise -------
+
+@pytest.mark.parametrize("kv_dtype", ["bf16", "int8", "fp8"])
+def test_verify_window_bitwise_equals_sequential_decode(setup, kv_dtype):
+    """The CPU verify pass IS the decode steps it replaces, bit for bit:
+    one 4-token window produces the same four logit rows AND the same
+    written K/V (+ scale) pool entries as four sequential decode steps.
+    This is what makes greedy spec == non-spec structural rather than
+    statistical, and what lets rollback be pure length bookkeeping."""
+    cfg, _ = setup
+    cfg = cfg.with_(kv_dtype=kv_dtype)
+    params = common.init_params(api.schema(cfg), jax.random.key(0))
+    kv = api.KVCache.build(cfg, max_context=MAX_CONTEXT, block_size=BLOCK,
+                           max_slots=2)
+    caches = kv.init(2)
+    caches = jax.jit(paged.reset_slot)(caches, jnp.int32(0),
+                                       jnp.arange(1, 5, dtype=jnp.int32))
+    chunk_fn = jax.jit(api.prefill_chunk_fn(cfg))
+    _, caches = chunk_fn(params, jnp.asarray([[5, 9, 11]], jnp.int32),
+                         caches, jnp.int32(0), jnp.int32(0))
+    decode = jax.jit(api.decode_fn(cfg))
+    verify = jax.jit(api.verify_fn(cfg))
+
+    cd, toks, rows_d = caches, [42], []
+    for _ in range(4):
+        ld, cd = decode(params, jnp.asarray([[toks[-1]], [0]], jnp.int32),
+                        cd)
+        rows_d.append(np.asarray(ld[0]))
+        toks.append(int(np.argmax(ld[0])))
+    win = toks[:4]
+    lv, cv = verify(params, jnp.asarray([win, win], jnp.int32), caches,
+                    jnp.asarray([0, 0], jnp.int32),
+                    jnp.asarray([3, 3], jnp.int32))
+    rows_v = np.asarray(lv[0])
+    for j in range(4):
+        np.testing.assert_array_equal(rows_d[j], rows_v[j])
+    fd, fv = _leaves(cd), _leaves(cv)
+    for name in fd:
+        leaf = name[-1]
+        if "pool" in leaf or "scale" in leaf or leaf in ("c_kv", "k_rope"):
+            # positions 3..6 live in block 1 at offsets 3..6
+            np.testing.assert_array_equal(fd[name][:, 1, 3:7],
+                                          fv[name][:, 1, 3:7])
+
+
+class _AlwaysWrongProposer(Proposer):
+    """Proposes cold low tokens so every draft is rejected — each spec
+    step degenerates to one emitted token with a maximal rollback."""
+    name = "wrong"
+
+    def propose(self, reqs, ks):
+        return [[1 + (j % 3) for j in range(k)] for k in ks], \
+               [None] * len(reqs)
+
+
+@pytest.mark.parametrize("kv_dtype", ["bf16", "int8"])
+def test_rollback_leaves_state_identical_to_nonspec(setup, kv_dtype):
+    """The rollback satellite: after every engine step, the speculative
+    engine's block tables, lens, and the VALID region of the data + scale
+    pools must be bitwise what a non-speculative decode of the same tokens
+    produced — rejected drafts leave zero trace inside the live state."""
+    cfg, _ = setup
+    cfg = cfg.with_(kv_dtype=kv_dtype)
+    params = common.init_params(api.schema(cfg), jax.random.key(0))
+
+    def fresh(cls, **kw):
+        eng = cls(cfg, params, max_slots=1, max_context=MAX_CONTEXT,
+                  block_size=BLOCK, prefill_chunk=CHUNK, **kw)
+        eng.submit(Request(rid=0, prompt=[5, 9, 11], max_new_tokens=9))
+        return eng
+
+    eng_b = fresh(DecodeEngine)
+    eng_s = fresh(SpecDecodeEngine, proposer=_AlwaysWrongProposer(),
+                  spec_k=3)
+    # all drafts rejected -> both engines emit exactly one token per step
+    for step in range(10):
+        eng_b.step()
+        eng_s.step()
+        fb, fs = _leaves(eng_b.caches), _leaves(eng_s.caches)
+        lens = fb[next(n for n in fb if n[-1] == "len")]
+        valid = int(lens[0, 0])
+        for name in fb:
+            leaf = name[-1]
+            if leaf in ("len", "block_table"):
+                np.testing.assert_array_equal(fb[name], fs[name],
+                                              err_msg=f"{leaf} step {step}")
+            elif valid and ("pool" in leaf or "scale" in leaf
+                            or leaf in ("c_kv", "k_rope")):
+                table = fb[next(n for n in fb if n[-1] == "block_table")]
+                row = table[0, 0, :paged.cdiv(valid, BLOCK)]
+                vb = fb[name][:, row].reshape(
+                    (fb[name].shape[0], -1) + fb[name].shape[3:])[:, :valid]
+                vs = fs[name][:, row].reshape(
+                    (fs[name].shape[0], -1) + fs[name].shape[3:])[:, :valid]
+                np.testing.assert_array_equal(vb, vs,
+                                              err_msg=f"{leaf} step {step}")
+    assert not eng_b.num_unfinished and not eng_s.num_unfinished
+
+
+# --------------------------------------------- scheduler interaction -------
+
+class _SpyProposer(NGramProposer):
+    """Records which requests were drafted for and asserts the scheduler
+    invariant: a slot mid-chunked-prefill is never handed to propose()."""
+
+    def __init__(self):
+        super().__init__()
+        self.seen: list[list[int]] = []
+
+    def propose(self, reqs, ks):
+        for r in reqs:
+            assert r.prefill_pos == len(r.prompt), \
+                f"request {r.rid} drafted mid-prefill"
+        self.seen.append([r.rid for r in reqs])
+        return super().propose(reqs, ks)
+
+
+def test_mid_prefill_slot_never_drafted(setup):
+    """While the long prompt is being cached chunk by chunk, only the
+    resident decoding request may be drafted for; the joiner appears in
+    propose() calls only after its prefill completes — and both streams
+    still match the non-speculative engine."""
+    cfg, params = setup
+    spy = _SpyProposer()
+    engine = SpecDecodeEngine(cfg, params, max_slots=2,
+                              max_context=MAX_CONTEXT, block_size=BLOCK,
+                              prefill_chunk=4, proposer=spy, spec_k=3)
+    r1 = Request(rid=1, prompt=[1, 2, 3], max_new_tokens=12)
+    engine.submit(r1)
+    engine.step()                       # r1 resident and decoding
+    long_prompt = list(range(5, 25))    # 5 chunks of 4
+    r2 = Request(rid=2, prompt=long_prompt, max_new_tokens=4)
+    engine.submit(r2)
+    engine.run_until_done()
+    assert any(calls == [1] for calls in spy.seen)      # r1 drafted solo
+    assert any(2 in calls for calls in spy.seen)        # r2 drafted later
+    base_eng = DecodeEngine(cfg, params, max_slots=2,
+                            max_context=MAX_CONTEXT, block_size=BLOCK,
+                            prefill_chunk=4)
+    b1 = Request(rid=1, prompt=[1, 2, 3], max_new_tokens=12)
+    b2 = Request(rid=2, prompt=long_prompt, max_new_tokens=4)
+    base_eng.submit(b1)
+    base_eng.step()
+    base_eng.submit(b2)
+    base_eng.run_until_done()
+    assert r1.output == b1.output and r2.output == b2.output
+
+
+# ------------------------------------------------------ exact sampling -----
+
+def test_rejection_sampler_preserves_target_distribution():
+    """Monte Carlo over seeds: whatever the proposal — a point mass (the
+    n-gram case) or a full draft distribution — the emitted marginal must
+    be the target distribution exactly."""
+    rng = np.random.default_rng(0)
+    v = 16
+    rows = (rng.normal(size=(2, v)) * 2).astype(np.float32)
+    temp, top_k = 1.3, 6
+    p = sampler.target_dist(rows[0], temp, top_k)
+    n = 4000
+
+    counts = np.zeros(v)
+    for s in range(n):
+        _, em = rejection_sample(rows, [3], None, temp, top_k, seed=s,
+                                 emit_base=0)
+        counts[em[0]] += 1
+    assert 0.5 * np.abs(counts / n - p).sum() < 0.05
+
+    q = sampler.target_dist((rng.normal(size=v) * 2).astype(np.float32),
+                            temp, 0)
+    counts = np.zeros(v)
+    for s in range(n):
+        d = int(np.searchsorted(np.cumsum(q), rng.random()))
+        _, em = rejection_sample(rows, [d], q[None], temp, top_k, seed=s,
+                                 emit_base=0)
+        counts[em[0]] += 1
+    assert 0.5 * np.abs(counts / n - p).sum() < 0.05
+
+
+def test_sampled_spec_reproducible_and_batch_invariant(setup):
+    """Temperature/top-k under speculation stays keyed on (seed, emit
+    index): the same seed reproduces the same stream across engines and
+    batch compositions; different seeds diverge."""
+    cfg, params = setup
+
+    def gen(seed, companion=False):
+        engine = SpecDecodeEngine(cfg, params, max_slots=2,
+                                  max_context=MAX_CONTEXT,
+                                  block_size=BLOCK, prefill_chunk=CHUNK,
+                                  proposer=NGramProposer(), spec_k=3)
+        req = Request(rid=0, prompt=[5, 9, 11], max_new_tokens=8,
+                      temperature=1.5, top_k=20, seed=seed)
+        engine.submit(req)
+        if companion:
+            engine.submit(Request(rid=1, prompt=[1, 2], max_new_tokens=8))
+        engine.run_until_done()
+        return req.output
+
+    solo = gen(7)
+    assert gen(7) == solo
+    assert gen(7, companion=True) == solo
+    assert len({tuple(gen(s)) for s in (7, 8, 9)}) > 1
+
+
+def test_spec_logprobs_match_nonspec(setup):
+    """Every emitted token still carries its fused-stats logprob; greedy
+    values must match the non-speculative engine's (same f32 logit rows)."""
+    cfg, params = setup
+    base, _ = _run(cfg, params, DecodeEngine, prompts=[PROMPTS[0]],
+                   max_new=6)
+    spec, _ = _run(cfg, params, SpecDecodeEngine, prompts=[PROMPTS[0]],
+                   max_new=6, proposer=DraftModelProposer(cfg, params),
+                   spec_k=3)
+    assert len(spec[0].logprobs) == 6
+    np.testing.assert_allclose(np.asarray(spec[0].logprobs),
+                               np.asarray(base[0].logprobs),
+                               rtol=1e-5, atol=1e-5)
