@@ -1,5 +1,7 @@
 """Paged-KV serving benchmark: tok/s and KV-bytes-touched vs. the
-contiguous-cache baseline, across slot counts and prompt-length mixes.
+contiguous-cache baseline, across slot counts and prompt-length mixes —
+plus the prefix-cache sweep (hit rate, prefill-token reduction, and the
+ECM forecast it must match).
 
 The traffic model is ECM-style analytic accounting (the paper's method:
 count the bytes each step must move, don't guess): every decode step a
@@ -14,6 +16,13 @@ blocks; the pure-JAX gather fallback used on CPU (and the chunk-prefill
 gather) materializes full virtual rows, so wall-clock tok/s here is a
 scheduling metric, not a proxy for the traffic column.
 
+Every mix carries a shared system prompt (drawn once per mix from the
+mix's own seeded rng — the prefix distribution is deterministic, never
+process-salted), so the per-mix rows also report the radix-cache hit
+rate, and the ``serving/prefix`` sweep compares the measured
+prefill-token reduction against ``repro.ecm.tpu
+.predicted_prefill_speedup`` at the measured hit rate.
+
 Shapes are CPU-tiny so the CI smoke step (benchmarks/run.py --only
 bench_serving --json ...) produces a perf-trajectory point on every PR.
 """
@@ -26,17 +35,24 @@ import jax
 import numpy as np
 
 from repro.configs import get_config, reduced
+from repro.ecm.tpu import predicted_prefill_speedup
 from repro.models import api, common
 from repro.serving.engine import DecodeEngine, Request
 
 MAX_CONTEXT = 128
 BLOCK = 16
 MAX_NEW = 8
+SYSTEM_TOKENS = 32          # shared system prompt: 2 full KV blocks
 
 
 def _prompts(kind: str, rng) -> list[list[int]]:
-    short = lambda: rng.integers(1, 250, rng.integers(2, 6)).tolist()
-    long = lambda: rng.integers(1, 250, rng.integers(60, 100)).tolist()
+    # One system prompt per mix, drawn from the mix's seeded rng: every
+    # run of a given (mix, slots) cell sees the identical prefix
+    # distribution, so the CI trajectory measures the same workload.
+    system = rng.integers(1, 250, SYSTEM_TOKENS).tolist()
+    short = lambda: system + rng.integers(1, 250, rng.integers(2, 6)).tolist()
+    long = lambda: system + rng.integers(1, 250,
+                                         rng.integers(56, 84)).tolist()
     if kind == "short":
         return [short() for _ in range(8)]
     if kind == "long":
@@ -49,13 +65,13 @@ def _prompts(kind: str, rng) -> list[list[int]]:
 _MIX_SEED = {"short": 1, "mixed": 2, "long": 3}
 
 
-def _run_mix(cfg, params, kind: str, slots: int) -> tuple:
+def _build(cfg, params, kind: str, slots: int, *, prefix_cache: bool):
     # fixed seed per cell: the CI perf-trajectory JSON must measure the
     # SAME workload every run (hash() is salted per process)
     rng = np.random.default_rng(100 * _MIX_SEED[kind] + slots)
     engine = DecodeEngine(cfg, params, max_slots=slots,
                           max_context=MAX_CONTEXT, block_size=BLOCK,
-                          prefill_chunk=32)
+                          prefill_chunk=32, prefix_cache=prefix_cache)
     reqs = [Request(rid=i, prompt=p, max_new_tokens=MAX_NEW)
             for i, p in enumerate(_prompts(kind, rng))]
     for r in reqs:
@@ -64,16 +80,55 @@ def _run_mix(cfg, params, kind: str, slots: int) -> tuple:
     engine.run_until_done()
     dt = time.perf_counter() - t0
     assert all(r.done for r in reqs)
+    return engine, reqs, dt
+
+
+def _run_mix(cfg, params, kind: str, slots: int) -> tuple:
+    engine, reqs, dt = _build(cfg, params, kind, slots, prefix_cache=True)
     toks = sum(len(r.output) for r in reqs)
     st = engine.kv_stats
     steps = max(st["decode_steps"] + st["prefill_chunks"], 1)
     reduction = st["contiguous_bytes"] / max(st["paged_bytes"], 1)
-    return (f"serving/{kind}/slots={slots}",
+    # "sys32" marks the PR-5 workload redefinition (shared 32-token
+    # system prompt, prefix cache on): the old "serving/<kind>" series
+    # in the committed trajectory measured different prompts — a new
+    # label keeps cross-commit comparisons honest
+    return (f"serving/{kind}-sys32/slots={slots}",
             f"{dt * 1e6 / steps:.0f}",
             f"tok_s={toks / dt:.1f}"
             f" paged_kv_kib={st['paged_bytes'] / 1024:.0f}"
             f" contig_kv_kib={st['contiguous_bytes'] / 1024:.0f}"
-            f" kv_reduction={reduction:.2f}x")
+            f" kv_reduction={reduction:.2f}x"
+            f" prefix_hit={engine.prefix_hit_rate:.2f}")
+
+
+def _run_prefix_sweep(cfg, params, kind: str, slots: int) -> tuple:
+    """Cache-off vs cache-on on the same workload. The measured
+    reduction is the ratio of the two engines' ``prefill_tokens``
+    counters — tokens each ACTUALLY pushed through the prefill path —
+    so a regression that kept the hit accounting but stopped skipping
+    the prefill would show up as measured 1.0x vs a >1 forecast; the
+    ECM side is ``predicted_prefill_speedup`` at the measured hit
+    rate."""
+    cold, reqs_off, dt_off = _build(cfg, params, kind, slots,
+                                    prefix_cache=False)
+    engine, reqs, dt = _build(cfg, params, kind, slots, prefix_cache=True)
+    st = engine.kv_stats
+    reduction = (cold.kv_stats["prefill_tokens"]
+                 / max(st["prefill_tokens"], 1))
+    hit = engine.prefix_hit_rate
+    ecm = predicted_prefill_speedup(hit)
+    toks = sum(len(r.output) for r in reqs)
+    steps = max(st["decode_steps"] + st["prefill_chunks"], 1)
+    return (f"serving/prefix/{kind}-sys32/slots={slots}",
+            f"{dt * 1e6 / steps:.0f}",
+            f"tok_s={toks / dt:.1f}"
+            f" tok_s_nocache={sum(len(r.output) for r in reqs_off)/dt_off:.1f}"
+            f" hit_rate={hit:.2f}"
+            f" prefill_tok_reduction={reduction:.2f}x"
+            f" ecm_pred={ecm:.2f}x"
+            f" saved_kv_kib={st['prefix_saved_bytes'] / 1024:.0f}"
+            f" cow_blocks={st['prefix_cow_blocks']}")
 
 
 def run() -> list[tuple]:
@@ -83,6 +138,10 @@ def run() -> list[tuple]:
     for kind in ("short", "mixed", "long"):
         for slots in (2, 4):
             rows.append(_run_mix(cfg, params, kind, slots))
+    # prefix sweep: slots=2 keeps initial cold admissions at 2, so most
+    # of the shared-system-prompt traffic is servable from the trie
+    for kind in ("short", "mixed"):
+        rows.append(_run_prefix_sweep(cfg, params, kind, 2))
     return rows
 
 

@@ -222,6 +222,47 @@ def predicted_decode_speedup(kv_dtype: str, vec_len: int = 64,
 # streamed element stay under the ridge). The forecast is therefore pure
 # bookkeeping over walks, the same ECM methodology as the quantized pools.
 
+# ---------------------------------------------------- prefix caching -------
+#
+# Prefix caching is the serving stack's third traffic lever, and the most
+# literal application of the paper's rule: the cheapest bytes are the ones
+# never moved. Shared prompt prefixes stop being re-prefilled (recompute +
+# re-store of identical KV blocks) and become shared pool reads.
+
+def predicted_prefill_speedup(hit_rate: float, *,
+                              prompt_tokens: float | None = None,
+                              chunk_tokens: int | None = None) -> float:
+    """ECM forecast of the prefill-token reduction from prefix caching.
+
+    Prefill cost is dominated by the per-token work of computing and
+    storing KV for every prompt position; a prefix-cache hit removes that
+    work for the cached span entirely (the hit blocks are mapped into the
+    slot's table — the one remaining cost is re-READING them during the
+    residual chunks' attention, which the chunk was already paying for
+    its own positions). The forecast is therefore the same pure
+    bookkeeping as the speculation model — tokens the engine must still
+    prefill versus tokens the workload presented:
+
+        speedup = 1 / (1 - hit_rate)
+
+    ``prompt_tokens`` + ``chunk_tokens`` refine this with the chunked
+    scheduler's granularity: the engine prefills whole chunks, so a
+    request saves ``floor(hit / chunk)``-ish launches, not fractional
+    ones — the ratio of cold to residual chunk LAUNCHES. The refinement
+    -> the token form as chunk -> 1 and matters only when hits are
+    comparable to one chunk. bench_serving's prefix sweep checks the
+    measured reduction against this forecast.
+    """
+    if not 0.0 <= hit_rate < 1.0:
+        raise ValueError(f"hit rate must be in [0, 1), got {hit_rate}")
+    if prompt_tokens and chunk_tokens:
+        import math
+        cold = math.ceil(prompt_tokens / chunk_tokens)
+        warm = math.ceil(prompt_tokens * (1.0 - hit_rate) / chunk_tokens)
+        return cold / max(warm, 1)
+    return 1.0 / (1.0 - hit_rate)
+
+
 def expected_accepted_length(alpha: float, k: int) -> float:
     """Tokens emitted per verify walk when each draft token is accepted
     i.i.d. with probability ``alpha``: the accepted prefix plus the

@@ -35,6 +35,12 @@ def build_parser() -> argparse.ArgumentParser:
                     help="KV-cache pool precision (repro.quant): quantized "
                          "pools carry per-(token, head) scale tiles and cut "
                          "KV bytes/token ~2x")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="radix-cache shared prompt prefixes over the paged "
+                         "block pool (refcounted blocks, copy-on-write at "
+                         "the divergence block, LRU eviction); the demo "
+                         "requests then share a system prompt so the hit "
+                         "rate is visible")
     ap.add_argument("--spec-mode", default="off",
                     choices=("off", "ngram", "draft"),
                     help="speculative decoding: 'ngram' proposes from the "
@@ -93,6 +99,11 @@ def main() -> None:
     if cfg.family not in ("dense", "moe", "ssm", "vlm"):
         raise SystemExit(f"engine serves LM families; {cfg.family} uses the "
                          f"prefill/decode API directly (see repro.models.api)")
+    if args.prefix_cache and cfg.family == "ssm":
+        raise SystemExit(
+            f"--prefix-cache: {args.arch} is an 'ssm'-family model with "
+            f"constant-size recurrent state — there are no per-token KV "
+            f"blocks to share")
     validate_spec_args(args, cfg)
     if cfg.family == "vlm":
         cfg = cfg.with_(vlm=None, family="dense")   # text-only serving demo
@@ -102,7 +113,8 @@ def main() -> None:
     engine_kw: dict = dict(max_slots=args.slots,
                            max_context=args.max_context,
                            block_size=args.block_size,
-                           prefill_chunk=args.prefill_chunk)
+                           prefill_chunk=args.prefill_chunk,
+                           prefix_cache=args.prefix_cache)
     if args.spec_mode == "off":
         engine = DecodeEngine(cfg, params, **engine_kw)
     else:
@@ -120,8 +132,15 @@ def main() -> None:
                                   spec_k=args.spec_k or 4, **engine_kw)
 
     rng = np.random.default_rng(0)
+    # with --prefix-cache the demo requests share a system prompt (two
+    # full blocks at the default block size) so the radix trie has real
+    # prefixes to hit; without it, short unique prompts as before
+    system = (rng.integers(0, cfg.vocab_size,
+                           2 * args.block_size).tolist()
+              if args.prefix_cache else [])
     requests = [Request(rid=i,
-                        prompt=rng.integers(0, cfg.vocab_size, 4).tolist(),
+                        prompt=system
+                        + rng.integers(0, cfg.vocab_size, 4).tolist(),
                         max_new_tokens=args.max_new,
                         eos_id=int(rng.integers(0, cfg.vocab_size)))
                 for i in range(args.requests)]
@@ -150,6 +169,11 @@ def main() -> None:
                      f"than bf16 pools")
     else:   # ssm family: constant-size state, no per-token KV to page
         line += " | constant-state family (no per-token KV)"
+    if args.prefix_cache:
+        line += (f" | prefix cache hit {engine.prefix_hit_rate:.0%} "
+                 f"({st['prefix_hit_tokens']} tok, "
+                 f"{st['prefix_saved_bytes']/2**20:.2f} MiB KV never "
+                 f"re-prefilled)")
     if args.spec_mode != "off":
         line += (f" | spec[{args.spec_mode}] accept "
                  f"{engine.acceptance_rate:.0%}, "

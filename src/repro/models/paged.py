@@ -218,6 +218,29 @@ def set_lens(caches, slots: Array, new_lens: Array):
     return tree_map_with_path(one, caches)
 
 
+def copy_block(caches, src, dst):
+    """Copy ONE pool block ``src`` -> ``dst`` across every pool leaf and
+    layer of a batched LM cache tree (scale tiles included — they ride
+    the same block ids).
+
+    This is the copy-on-write step of prefix caching: a request whose
+    prompt diverges mid-block from a cached prefix gets a private copy of
+    the divergence block, and only the copy enters its block table — the
+    shared original stays bit-identical for every other reader. Pool
+    leaves are [L, num_blocks, block_size, ...]; everything else (tables,
+    lens, recurrent state) passes through untouched.
+    """
+    from jax.tree_util import tree_map_with_path
+
+    def one(path, leaf):
+        name = str(getattr(path[-1], "key", path[-1]))
+        if name in POOL_KEYS:
+            return leaf.at[:, dst].set(leaf[:, src])
+        return leaf
+
+    return tree_map_with_path(one, caches)
+
+
 def reset_slot(caches, slot, table_row: Array):
     """Point slot ``slot`` of a batched LM cache tree at ``table_row`` and
     clear its per-slot state (len; SSM/conv state slices).

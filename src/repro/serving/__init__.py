@@ -1,1 +1,18 @@
-"""Subpackage."""
+"""Paged-KV serving subsystem: continuous batching over shared block
+pools, chunked prefill, speculative decoding, and prefix/radix caching.
+
+  engine        — refcounting ``BlockAllocator``, strict-FIFO
+                  ``Scheduler`` (chunked prefill interleaved with the
+                  batched decode), ``DecodeEngine`` and the draft →
+                  verify → accept ``SpecDecodeEngine``
+  prefix_cache  — block-granular radix trie sharing prompt-prefix KV
+                  blocks between requests (copy-on-write at the
+                  divergence block, LRU eviction under pool pressure)
+"""
+
+from repro.serving.engine import (BlockAllocator, DecodeEngine, Request,
+                                  Scheduler, SpecDecodeEngine)
+from repro.serving.prefix_cache import PrefixCache, PrefixMatch
+
+__all__ = ["BlockAllocator", "DecodeEngine", "Request", "Scheduler",
+           "SpecDecodeEngine", "PrefixCache", "PrefixMatch"]

@@ -3,12 +3,16 @@
 Three cooperating pieces replace the old contiguous slot-row engine:
 
 ``BlockAllocator``
-    Free-list over the shared per-layer KV block pools. Block 0 is the
-    reserved null block (inactive slots point at it; stray writes from the
-    batched decode land there harmlessly). A request holds exactly
-    ``ceil((len(prompt) + max_new_tokens) / block_size)`` blocks — short
-    requests no longer reserve a full ``max_context`` row, which is the
-    paged memory/traffic win measured in ``benchmarks/bench_serving.py``.
+    Reference-counted free-list over the shared per-layer KV block pools.
+    Block 0 is the reserved null block (inactive slots point at it; stray
+    writes from the batched decode land there harmlessly). A request's
+    table references exactly ``ceil((len(prompt) + max_new_tokens) /
+    block_size)`` blocks — short requests no longer reserve a full
+    ``max_context`` row, which is the paged memory/traffic win measured in
+    ``benchmarks/bench_serving.py``. Prefix caching
+    (``repro.serving.prefix_cache``) shares blocks between requests and
+    the radix trie, so a block returns to the free list only when its
+    LAST reference is released (``alloc``/``retain``/``release``).
 
 ``Scheduler``
     FIFO admission queue (``submit`` never fails — requests wait when the
@@ -27,13 +31,22 @@ Three cooperating pieces replace the old contiguous slot-row engine:
     logprob, logsumexp and logit health statistics — only (B,)-sized
     arrays ever reach the host.
 
+``prefix_cache=True`` adds the radix layer
+(``repro.serving.prefix_cache``): admission walks a block-granular trie
+over the prompt, maps the hit prefix's pool blocks into the slot's table
+(copy-on-write at a mid-block divergence), starts chunked prefill at the
+first uncached token, and retirement inserts the completed prompt prefix
+for later requests — with LRU eviction of unreferenced trie leaves when
+the free list runs short.
+
 Determinism: greedy argmax by default; a request's chunk boundaries and
 decode math depend only on its own prompt and the cache geometry, so
 batched serving matches solo generation token-for-token
-(tests/test_serving.py, tests/test_paged_kv.py). Requests can opt into
-temperature + top-k sampling with a per-request ``seed``; the sampling
-stream is keyed on (seed, tokens emitted) only, so it too is independent
-of batch composition and admission timing.
+(tests/test_serving.py, tests/test_paged_kv.py) and a prefix-cache hit
+is bitwise its cold run (tests/test_prefix_cache.py). Requests can opt
+into temperature + top-k sampling with a per-request ``seed``; the
+sampling stream is keyed on (seed, tokens emitted) only, so it too is
+independent of batch composition and admission timing.
 """
 
 from __future__ import annotations
@@ -50,6 +63,7 @@ from repro.kernels import ops
 from repro.models import api, paged
 from repro.models.config import ModelConfig
 from repro.models.paged import NULL_BLOCK, PagedLayout
+from repro.serving.prefix_cache import PrefixCache, PrefixMatch
 
 DEFAULT_BLOCK_SIZE = paged.DEFAULT_BLOCK_SIZE
 
@@ -76,7 +90,12 @@ class Request:
     slot: int | None = None
     done: bool = False
     prefill_pos: int = 0                           # prompt tokens cached
-    blocks: list = field(default_factory=list)     # pool blocks held
+    blocks: list = field(default_factory=list)     # pool blocks referenced
+    # prefix caching: tokens served from the radix trie at admission
+    # (prefill starts at the first uncached token) and, transiently, the
+    # shared block awaiting its copy-on-write copy
+    prefix_hit: int = 0
+    cow_src: int | None = None
 
     @property
     def num_cached(self) -> int:
@@ -85,41 +104,72 @@ class Request:
 
 
 class BlockAllocator:
-    """LIFO free-list over a ``num_blocks`` pool; block 0 stays reserved."""
+    """Reference-counted LIFO free-list over a ``num_blocks`` pool; block 0
+    stays reserved.
+
+    Prefix caching shares blocks between live requests and the radix
+    trie, so ownership is a count, not a holder: ``alloc`` hands out
+    blocks at refcount 1, every additional sharer ``retain``s, and a
+    block rejoins the free list only when ``release`` drops the count to
+    zero. Releasing an unheld block (double free) or retaining a free one
+    is an assertion failure — the Hypothesis interleavings in
+    tests/test_prefix_cache.py drive these invariants.
+    """
 
     def __init__(self, num_blocks: int):
         assert num_blocks >= 2, "pool needs the null block plus capacity"
         self.num_blocks = num_blocks
         self._free = list(range(num_blocks - 1, NULL_BLOCK, -1))
-        self._held: set[int] = set()
+        self._ref: dict[int, int] = {}
 
     @property
     def num_free(self) -> int:
         return len(self._free)
+
+    @property
+    def num_held(self) -> int:
+        """Distinct blocks with at least one live reference."""
+        return len(self._ref)
+
+    def refcount(self, block: int) -> int:
+        return self._ref.get(block, 0)
 
     def alloc(self, n: int) -> list[int]:
         if n > len(self._free):
             raise RuntimeError(f"block pool exhausted: want {n}, "
                                f"have {len(self._free)}")
         blocks = [self._free.pop() for _ in range(n)]
-        self._held.update(blocks)
+        for b in blocks:
+            self._ref[b] = 1
         return blocks
 
-    def free(self, blocks: list[int]) -> None:
+    def retain(self, blocks: list[int]) -> None:
         for b in blocks:
-            assert b in self._held, f"double free of block {b}"
-            self._held.discard(b)
-            self._free.append(b)
+            assert b in self._ref, f"retain of free block {b}"
+            self._ref[b] += 1
+
+    def release(self, blocks: list[int]) -> None:
+        for b in blocks:
+            assert b in self._ref, f"double free of block {b}"
+            self._ref[b] -= 1
+            if self._ref[b] == 0:
+                del self._ref[b]
+                self._free.append(b)
+
+    # back-compat alias: a sole-owner release IS a free
+    free = release
 
 
 class Scheduler:
     """FIFO admission + slot assignment + chunked-prefill bookkeeping."""
 
     def __init__(self, allocator: BlockAllocator, max_slots: int,
-                 layout: PagedLayout, prefill_chunk: int):
+                 layout: PagedLayout, prefill_chunk: int,
+                 prefix_cache: PrefixCache | None = None):
         self.allocator = allocator
         self.layout = layout
         self.prefill_chunk = prefill_chunk
+        self.prefix_cache = prefix_cache
         self.waiting: deque[Request] = deque()
         self.prefilling: deque[Request] = deque()
         self.decoding: dict[int, Request] = {}
@@ -143,19 +193,78 @@ class Scheduler:
     def blocks_needed(self, req: Request) -> int:
         return self.layout.blocks_for(len(req.prompt) + req.max_new_tokens)
 
+    def _match_candidates(self, req: Request) -> list[PrefixMatch]:
+        """Admission plans for ``req``, best hit first. A COW hit pins
+        ONE block more than the request's own budget (the shared source
+        of the copy), so a request sized at the pool's full capacity can
+        be un-admittable under its best match while perfectly admittable
+        under a degraded one — each fallback pins strictly less: drop
+        the COW (block-aligned hit only), then go fully cold (every trie
+        block becomes evictable). The cold plan needs exactly
+        ``blocks_needed`` <= usable pool (the submit() guarantee), which
+        is what keeps the PR-2 no-livelock contract intact."""
+        if self.prefix_cache is None:
+            return [PrefixMatch()]
+        m = self.prefix_cache.match(req.prompt)
+        cands = [m]
+        if m.cow_src is not None:
+            cands.append(PrefixMatch(m.blocks,
+                                     len(m.blocks) * self.layout.block_size,
+                                     None))
+        if m.blocks:
+            cands.append(PrefixMatch())
+        return cands
+
+    def _try_admit(self, req: Request, match: PrefixMatch) -> bool:
+        """One admission attempt under one match plan: retain the shared
+        blocks FIRST (so eviction — from this attempt or a later request
+        in the same sweep — can never take them), evict unreferenced
+        trie leaves if the remainder doesn't fit, and either allocate or
+        roll the retains back."""
+        if self.prefix_cache is not None:
+            self.allocator.retain(match.blocks)
+            if match.cow_src is not None:
+                self.allocator.retain([match.cow_src])
+        need = self.blocks_needed(req) - len(match.blocks)
+        if need > self.allocator.num_free:
+            if self.prefix_cache is not None:
+                self.prefix_cache.evict(need - self.allocator.num_free)
+            if need > self.allocator.num_free:
+                if self.prefix_cache is not None:
+                    self.allocator.release(match.blocks)
+                    if match.cow_src is not None:
+                        self.allocator.release([match.cow_src])
+                return False
+        req.blocks = match.blocks + self.allocator.alloc(need)
+        req.prefix_hit = match.hit
+        req.cow_src = match.cow_src       # engine copies, then releases
+        req.prefill_pos = match.hit       # first uncached token
+        if self.prefix_cache is not None:
+            self.prefix_cache.note_admitted(match.hit, len(req.prompt),
+                                            match.cow_src is not None)
+        return True
+
     def admit(self) -> list[Request]:
         """Move waiting requests into slots while capacity lasts. Strict
         FIFO: the queue head blocks (no skip-ahead), so completion of
-        equal-length requests follows submission order."""
+        equal-length requests follows submission order.
+
+        With a prefix cache attached, admission tries the head's match
+        plans best-first (full hit incl. COW, block-aligned hit, cold —
+        see ``_match_candidates``); if even the cold plan cannot be
+        covered after evicting unreferenced trie leaves, the head waits
+        — admission order is preserved and retirement of live requests
+        (whose blocks no eviction can touch) eventually unblocks it, so
+        an oversubscribed pool still never livelocks.
+        """
         admitted = []
         while self.waiting and self._free_slots:
-            need = self.blocks_needed(self.waiting[0])
-            if need > self.allocator.num_free:
+            req = self.waiting[0]
+            if not any(self._try_admit(req, m)
+                       for m in self._match_candidates(req)):
                 break
-            req = self.waiting.popleft()
-            req.blocks = self.allocator.alloc(need)
+            self.waiting.popleft()
             req.slot = self._free_slots.pop()
-            req.prefill_pos = 0
             self.prefilling.append(req)
             admitted.append(req)
         return admitted
@@ -182,7 +291,12 @@ class Scheduler:
     def retire(self, req: Request) -> None:
         req.done = True
         self.decoding.pop(req.slot, None)
-        self.allocator.free(req.blocks)
+        if self.prefix_cache is not None:
+            # cache the request's completed prompt prefix BEFORE releasing:
+            # new trie nodes retain their blocks, so they survive the
+            # request's release; deduped prefixes just release through
+            self.prefix_cache.insert(req.prompt, req.blocks)
+        self.allocator.release(req.blocks)
         req.blocks = []
         self._free_slots.append(req.slot)
 
@@ -250,8 +364,14 @@ class DecodeEngine:
     def __init__(self, cfg: ModelConfig, params, *, max_slots: int = 4,
                  max_context: int = 256,
                  block_size: int = DEFAULT_BLOCK_SIZE,
-                 num_blocks: int | None = None, prefill_chunk: int = 32):
+                 num_blocks: int | None = None, prefill_chunk: int = 32,
+                 prefix_cache: bool = False):
         assert cfg.family in ("dense", "moe", "ssm", "vlm"), cfg.family
+        if prefix_cache and cfg.family == "ssm":
+            raise ValueError(
+                "prefix caching shares paged KV blocks; the 'ssm' family "
+                "carries constant-size recurrent state with no per-token "
+                "KV to share")
         self.cfg = cfg
         self.params = params
         self.max_slots = max_slots
@@ -260,13 +380,19 @@ class DecodeEngine:
                                     max_slots=max_slots,
                                     num_blocks=num_blocks)
         self.layout = self.kv.layout
-        self.scheduler = Scheduler(BlockAllocator(self.kv.num_blocks),
-                                   max_slots, self.layout, prefill_chunk)
+        allocator = BlockAllocator(self.kv.num_blocks)
+        self.prefix_cache = (PrefixCache(allocator, self.layout.block_size)
+                             if prefix_cache else None)
+        self.scheduler = Scheduler(allocator, max_slots, self.layout,
+                                   prefill_chunk,
+                                   prefix_cache=self.prefix_cache)
 
         self._prefill_chunk = jax.jit(api.prefill_chunk_fn(cfg))
         self._decode = jax.jit(api.decode_fn(cfg))
         self._reset_slot = jax.jit(paged.reset_slot)
         self._keep_slots = jax.jit(paged.keep_slots)
+        self._set_lens = jax.jit(paged.set_lens)
+        self._copy_block = jax.jit(paged.copy_block)
 
         self.caches = self.kv.init(max_slots)
         self._next_tokens = jnp.zeros((max_slots, 1), jnp.int32)
@@ -288,9 +414,19 @@ class DecodeEngine:
             cfg.with_(kv_dtype="bf16"), max_context=max_context,
             block_size=block_size, max_slots=max_slots,
             num_blocks=num_blocks).token_bytes(max_slots)
+        # Prefix-caching counters (always present; stay zero when the
+        # cache is off): ``prefix_saved_bytes`` prices the KV store
+        # traffic the hit prefixes never re-moved — hit tokens at the
+        # engine's per-token pool bytes, the same unit as paged_bytes —
+        # and ``prefix_hit_tokens / prefix_prompt_tokens`` is the hit
+        # rate repro.ecm.tpu.predicted_prefill_speedup forecasts from.
         self.kv_stats = {"paged_bytes": 0, "paged_bytes_bf16": 0,
                          "contiguous_bytes": 0,
-                         "decode_steps": 0, "prefill_chunks": 0}
+                         "decode_steps": 0, "prefill_chunks": 0,
+                         "prefill_tokens": 0,
+                         "prefix_hit_tokens": 0, "prefix_prompt_tokens": 0,
+                         "prefix_saved_bytes": 0, "prefix_cow_blocks": 0,
+                         "prefix_evicted_blocks": 0}
 
     # ------------------------------------------------------------ API -----
 
@@ -308,6 +444,38 @@ class DecodeEngine:
             self.caches = self._reset_slot(self.caches,
                                            jnp.int32(req.slot),
                                            jnp.asarray(row))
+            if req.cow_src is not None:
+                # copy-on-write at the divergence block: the request's
+                # table already points at the fresh copy target; fill it
+                # from the shared block, then drop the admission-time
+                # protective reference on the source
+                dst = req.blocks[req.prefix_hit // self.layout.block_size]
+                self.caches = self._copy_block(self.caches,
+                                               jnp.int32(req.cow_src),
+                                               jnp.int32(dst))
+                self.scheduler.allocator.release([req.cow_src])
+                req.cow_src = None
+            if req.prefix_hit:
+                # Pre-set the slot's cached length to the hit: readers
+                # mask correctly from the first chunk, and the batched
+                # decode's stray write for this mid-prefill slot lands at
+                # the request's OWN first writable position — never
+                # inside a shared block.
+                self.caches = self._set_lens(
+                    self.caches, jnp.asarray([req.slot], jnp.int32),
+                    jnp.asarray([req.prefix_hit], jnp.int32))
+            if self.prefix_cache is not None:
+                # one source of truth: PrefixCache.stats (fed by
+                # note_admitted/evict) — the engine only mirrors, and
+                # prices hit tokens at its per-token pool bytes
+                cs = self.prefix_cache.stats
+                self.kv_stats.update(
+                    prefix_hit_tokens=cs["hit_tokens"],
+                    prefix_prompt_tokens=cs["prompt_tokens"],
+                    prefix_cow_blocks=cs["cow_blocks"],
+                    prefix_evicted_blocks=cs["evicted_blocks"],
+                    prefix_saved_bytes=cs["hit_tokens"]
+                    * self._token_bytes)
             self._on_admit(req)
 
         nxt = self.scheduler.next_chunk()
@@ -317,7 +485,13 @@ class DecodeEngine:
                 self.params, jnp.asarray([chunk], jnp.int32), self.caches,
                 jnp.int32(req.slot), jnp.int32(pos0))
             self._on_prefill_chunk(req, chunk, pos0)
-            self._account_prefill(pos0 + len(chunk), first=pos0 == 0)
+            # tokens the engine ACTUALLY pushed through the prefill path:
+            # the measured side of the prefix-cache reduction (a cold
+            # engine accumulates every prompt token here, a hit engine
+            # only the uncached remainder)
+            self.kv_stats["prefill_tokens"] += len(chunk)
+            self._account_prefill(pos0 + len(chunk),
+                                  first=pos0 == req.prefix_hit)
             if self.scheduler.prefill_advance(req, len(chunk)):
                 self._emit_first_token(req, logits)
 
@@ -350,6 +524,13 @@ class DecodeEngine:
     def num_unfinished(self) -> int:
         """Everything still owed tokens: waiting + prefilling + decoding."""
         return self.scheduler.num_unfinished
+
+    @property
+    def prefix_hit_rate(self) -> float:
+        """Fraction of admitted prompt tokens served from the prefix
+        cache (0.0 when the cache is off — nothing was ever matched)."""
+        tot = self.kv_stats["prefix_prompt_tokens"]
+        return self.kv_stats["prefix_hit_tokens"] / tot if tot else 0.0
 
     # ------------------------------------------------------- internals ----
 
@@ -515,7 +696,6 @@ class SpecDecodeEngine(DecodeEngine):
         self.proposer = proposer
         self.spec_k = int(spec_k)
         self._verify = jax.jit(api.verify_fn(cfg))
-        self._set_lens = jax.jit(paged.set_lens)
         self.kv_stats.update({"spec_steps": 0, "spec_slot_steps": 0,
                               "spec_drafted": 0, "spec_accepted": 0,
                               "spec_emitted": 0})

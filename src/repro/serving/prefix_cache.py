@@ -1,0 +1,266 @@
+"""Prefix/radix caching over shared paged KV blocks.
+
+Serving traffic with shared system prompts re-prefills — and re-stores —
+identical KV blocks for every request. That is exactly the redundant data
+traffic the paper's methodology exists to eliminate: the compensated
+kernel is free *because* it stops re-walking data it doesn't need, and a
+prefix cache applies the same rule one level up. Requests whose prompts
+share a prefix share the prefix's pool blocks instead of recomputing
+them; the ECM-style accounting in ``DecodeEngine.kv_stats`` then prices
+the prefill bytes that were never moved (``repro.ecm.tpu
+.predicted_prefill_speedup`` is the analytic forecast the bench_serving
+sweep checks against).
+
+Three cooperating mechanisms:
+
+**Radix trie, block-granular.** Nodes are keyed on the token ids of one
+full KV block (``block_size`` tokens): a path root → node spells out a
+cached prompt prefix, and each node carries the pool block holding that
+span's K/V (and scale tiles — quantized pools ride the same block ids).
+``match`` walks the trie over a new prompt and returns the longest cached
+prefix; ``insert`` (called at request retirement) extends the trie with
+the request's freshly computed full prompt blocks, deduplicating against
+what's already cached.
+
+**Refcounts, not ownership.** Blocks are shared, so ``BlockAllocator``
+counts references instead of tracking a single holder: the trie holds one
+reference per node, every admitted request holds one per table entry, and
+a block returns to the free list only when the last reference is
+released. Double-free and free-while-shared become assertion failures
+(property-tested in tests/test_prefix_cache.py).
+
+**Copy-on-write at the divergence block.** A prompt that diverges from a
+cached prefix mid-block (or that equals it exactly — the last token must
+be re-scored to emit, so its block will be appended to) cannot write into
+the shared block. The matched block is copied into a freshly allocated
+one (``paged.copy_block``: every pool leaf, every layer, scales included)
+and only the copy enters the request's block table; the shared original
+stays bit-identical for its other readers. Stale positions past the
+divergence point are masked by ``kv_len`` exactly like the zero padding
+of a cold prefill, which is what keeps a cache-hit request bitwise equal
+to its cold run.
+
+**LRU eviction under pool pressure.** Trie nodes pin their blocks, so a
+busy cache eventually starves admission. ``evict`` releases
+least-recently-matched *leaf* nodes whose blocks no live request shares
+(refcount 1 — the trie's own), walking up the tree as parents become
+leaves. Admission retains its matched nodes *before* evicting, so an
+eviction triggered by one request can never take blocks a just-admitted
+hit still needs.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+
+def _lcp(a, b) -> int:
+    """Length of the longest common prefix of two token sequences."""
+    n = 0
+    for x, y in zip(a, b):
+        if x != y:
+            break
+        n += 1
+    return n
+
+
+class TrieNode:
+    """One cached full block: ``key`` is its block_size-token span.
+    ``seq`` is a creation-order serial — the deterministic LRU tiebreak
+    for nodes inserted under the same clock tick."""
+
+    __slots__ = ("key", "block", "children", "parent", "last_used", "seq")
+
+    def __init__(self, key: tuple, block: int, parent: "TrieNode | None",
+                 seq: int = 0):
+        self.key = key
+        self.block = block
+        self.children: dict[tuple, TrieNode] = {}
+        self.parent = parent
+        self.last_used = 0
+        self.seq = seq
+
+
+@dataclass
+class PrefixMatch:
+    """Result of a trie walk over one prompt.
+
+    ``blocks`` are the fully shared blocks (retain before use!), ``hit``
+    the total cached tokens usable by the request (capped at
+    ``len(prompt) - 1`` — the final prompt token is always re-scored so
+    the request has logits to emit from), and ``cow_src`` the pool block
+    to copy-on-write when ``hit`` lands mid-block (None otherwise).
+    """
+
+    blocks: list[int] = field(default_factory=list)
+    hit: int = 0
+    cow_src: int | None = None
+
+
+class PrefixCache:
+    """Block-granular radix trie over the shared KV pool.
+
+    Pure host-side bookkeeping: the trie never touches device arrays (the
+    engine performs the one COW copy it requests). All block references
+    it creates/destroys go through the allocator's retain/release, so the
+    pool accounting invariant — free + held == capacity — survives any
+    interleaving of admissions, retirements and evictions.
+    """
+
+    def __init__(self, allocator, block_size: int):
+        self.allocator = allocator
+        self.block_size = block_size
+        self.root = TrieNode((), -1, None)
+        self._clock = 0
+        self._nseq = 0
+        self.stats = {"requests": 0, "hits": 0, "hit_tokens": 0,
+                      "prompt_tokens": 0, "cow_blocks": 0,
+                      "evicted_blocks": 0, "nodes": 0}
+
+    # ------------------------------------------------------------ match ----
+
+    def match(self, prompt: list) -> PrefixMatch:
+        """Longest cached prefix of ``prompt`` (LRU-touches the path).
+
+        Walks full-block trie edges while they match, then checks the
+        children of the last matched node for a partial (mid-block)
+        match — the copy-on-write case. Does NOT retain anything; the
+        caller must retain ``blocks`` (and protect ``cow_src``) before
+        any allocation or eviction can run.
+        """
+        bs = self.block_size
+        if len(prompt) < 2:
+            return PrefixMatch()            # nothing cacheable to reuse
+        self._clock += 1
+        node = self.root
+        blocks: list[int] = []
+        m = 0
+        while m + bs <= len(prompt):
+            child = node.children.get(tuple(prompt[m:m + bs]))
+            if child is None:
+                break
+            child.last_used = self._clock
+            node = child
+            blocks.append(child.block)
+            m += bs
+        partial = 0
+        partial_block = None
+        rem = prompt[m:]
+        if rem:
+            best = None
+            for child in node.children.values():
+                l = _lcp(child.key, rem)
+                if l > partial:
+                    partial, best = l, child
+            if best is not None:
+                partial_block = best.block
+                best.last_used = self._clock
+        hit = min(m + partial, len(prompt) - 1)
+        n_shared = hit // bs
+        cow_src = None
+        if hit % bs:
+            # the block providing positions [n_shared*bs, hit) is shared
+            # but will be appended to — copy-on-write it
+            cow_src = (blocks[n_shared] if n_shared < len(blocks)
+                       else partial_block)
+        return PrefixMatch(blocks[:n_shared], hit, cow_src)
+
+    # ------------------------------------------------------------ insert ---
+
+    def insert(self, prompt: list, blocks: list[int]) -> None:
+        """Cache a retired request's prompt prefix (full blocks only).
+
+        ``blocks`` is the request's block-table row in position order;
+        block i of the prompt lives in ``blocks[i]``. Existing nodes are
+        kept (the duplicate block is simply released with the rest of the
+        request's references); new nodes retain their block so it
+        survives the request's release.
+        """
+        bs = self.block_size
+        self._clock += 1
+        node = self.root
+        for i in range(len(prompt) // bs):
+            if i >= len(blocks):
+                break
+            key = tuple(prompt[i * bs:(i + 1) * bs])
+            child = node.children.get(key)
+            if child is None:
+                self._nseq += 1
+                child = TrieNode(key, blocks[i], node, self._nseq)
+                node.children[key] = child
+                self.allocator.retain([blocks[i]])
+                self.stats["nodes"] += 1
+            child.last_used = self._clock
+            node = child
+
+    # ------------------------------------------------------------ evict ----
+
+    def _evictable_leaves(self) -> list[TrieNode]:
+        out = []
+        stack = list(self.root.children.values())
+        while stack:
+            n = stack.pop()
+            if n.children:
+                stack.extend(n.children.values())
+            elif self.allocator.refcount(n.block) == 1:
+                out.append(n)       # only the trie holds it
+        return out
+
+    def evict(self, n: int) -> int:
+        """Free up to ``n`` pool blocks by dropping LRU unreferenced
+        leaves (parents become evictable as their children go). Returns
+        the number of blocks actually freed — the caller decides whether
+        that unblocked admission. Never touches a node whose block a live
+        request shares (refcount > 1): a just-admitted hit retains its
+        nodes before any eviction can run.
+
+        ONE trie traversal seeds a min-heap of evictable leaves; after
+        each eviction only the victim's parent — the sole node whose
+        leaf-status can have changed — is re-examined, so an n-block
+        eviction costs O(trie + n log trie), not n full scans.
+        """
+        import heapq
+
+        def entry(nd):
+            return (nd.last_used, nd.seq, nd)
+
+        heap = [entry(nd) for nd in self._evictable_leaves()]
+        heapq.heapify(heap)
+        freed = 0
+        while freed < n and heap:
+            _, _, victim = heapq.heappop(heap)
+            parent = victim.parent
+            parent.children.pop(victim.key)
+            self.allocator.release([victim.block])
+            self.stats["nodes"] -= 1
+            self.stats["evicted_blocks"] += 1
+            freed += 1
+            if (parent is not self.root and not parent.children
+                    and self.allocator.refcount(parent.block) == 1):
+                heapq.heappush(heap, entry(parent))
+        return freed
+
+    # ------------------------------------------------------------ stats ----
+
+    def note_admitted(self, hit: int, prompt_len: int,
+                      cow: bool) -> None:
+        """Admission-time accounting (match() itself stays side-effect
+        free so re-matching a head-blocked request doesn't inflate the
+        hit rate)."""
+        self.stats["requests"] += 1
+        self.stats["prompt_tokens"] += prompt_len
+        if hit:
+            self.stats["hits"] += 1
+            self.stats["hit_tokens"] += hit
+        if cow:
+            self.stats["cow_blocks"] += 1
+
+    @property
+    def hit_rate(self) -> float:
+        """Fraction of admitted prompt tokens served from the cache."""
+        tot = self.stats["prompt_tokens"]
+        return self.stats["hit_tokens"] / tot if tot else 0.0
+
+    @property
+    def num_nodes(self) -> int:
+        return self.stats["nodes"]

@@ -153,11 +153,25 @@ class DraftModelProposer(Proposer):
                                                          layout))
         self._null_row = jnp.full((layout.max_blocks,), paged.NULL_BLOCK,
                                   jnp.int32)
+        self._chunk_size = engine.scheduler.prefill_chunk
 
     def on_admit(self, req) -> None:
         self.caches = self._reset_slot(
             self.caches, jnp.int32(req.slot),
             jnp.asarray(self._identity[req.slot]))
+        # The target may admit with a prefix-cache hit: its prefill starts
+        # at req.prefill_pos, so on_prefill_chunk will never see the
+        # cached span. The draft has no prefix cache of its own — replay
+        # exactly the hit span through the same chunked path so the
+        # mirror stays exact (chunked prefill is bitwise chunk-boundary
+        # invariant, so the drafts match a cold run's drafts; the final
+        # replay chunk is clamped to the hit, the target's own chunks
+        # deliver the rest).
+        pos = 0
+        while pos < req.prefill_pos:
+            end = min(pos + self._chunk_size, req.prefill_pos)
+            self.on_prefill_chunk(req, req.prompt[pos:end], pos)
+            pos = end
 
     def on_prefill_chunk(self, req, chunk, pos0) -> None:
         _, self.caches = self._chunk(

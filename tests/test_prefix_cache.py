@@ -1,0 +1,588 @@
+"""Prefix/radix-cache tests — parity first.
+
+The whole value of prefix caching rests on one claim: a cache-hit request
+is indistinguishable from a cold run — same emitted tokens, same
+logprobs, and bitwise the same K/V (and scale tiles) written to the pool.
+The suite here checks that claim across bf16/int8/fp8 pools, greedy and
+seeded sampling, and under the speculative engine (n-gram proposals over
+the shared history), then drives the sharp edges: copy-on-write at a
+mid-block divergence, admission under a pool too small for the trie
+(never livelocks), eviction racing a just-admitted hit, and
+reset_slot/keep_slots on slots holding shared blocks. Allocator refcount
+and trie invariants are property-tested over random
+submit/retire/evict interleavings (hypothesis, or the deterministic
+fallback shim when it isn't installed).
+"""
+
+import sys
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+sys.path.insert(0, str(Path(__file__).parent))
+from _hypothesis_fallback import given, settings, strategies as st
+
+from repro.configs import get_config, reduced
+from repro.models import api, common, paged
+from repro.serving.engine import (BlockAllocator, DecodeEngine, Request,
+                                  SpecDecodeEngine)
+from repro.serving.prefix_cache import PrefixCache
+from repro.spec import NGramProposer
+
+MAX_CONTEXT = 64
+BLOCK = 16
+CHUNK = 32
+
+SYS = [7, 3, 9, 1, 4, 4, 8, 2, 6, 5, 1, 9, 2, 8, 3, 7,
+       5, 5, 2, 9, 6, 1, 7, 3, 8, 8, 4, 2, 9, 5, 6, 1]   # 2 full blocks
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = reduced(get_config("qwen1.5-0.5b")).with_(num_layers=2)
+    params = common.init_params(api.schema(cfg), jax.random.key(0))
+    return cfg, params
+
+
+# -------------------------------------------------------------- helpers ----
+
+def _slot_kv(engine, req):
+    """Gather the pool data (K/V + scale tiles, every layer) the request
+    actually cached: its blocks in table order, sliced to the slot's
+    cached length. Must run while the request still owns its slot."""
+    from jax.tree_util import tree_flatten_with_path
+    leaves = tree_flatten_with_path(engine.caches)[0]
+    n_tok = None
+    for path, leaf in leaves:
+        if str(getattr(path[-1], "key", path[-1])) == "len":
+            n_tok = int(np.asarray(leaf)[0, req.slot])
+            break
+    assert n_tok is not None and n_tok > 0
+    out = {}
+    for path, leaf in leaves:
+        name = str(getattr(path[-1], "key", path[-1]))
+        if name in paged.POOL_KEYS:
+            g = np.asarray(leaf)[:, req.blocks]           # [L, n, bs, ...]
+            g = g.reshape((g.shape[0], -1) + g.shape[3:])  # [L, n*bs, ...]
+            out[jax.tree_util.keystr(path)] = g[:, :n_tok]
+    return out
+
+
+def _with_snapshots(base):
+    class Snap(base):
+        def __init__(self, *a, **kw):
+            super().__init__(*a, **kw)
+            self.snapshots = {}
+
+        def _on_retire(self, req):
+            super()._on_retire(req)
+            self.snapshots[req.rid] = _slot_kv(self, req)
+    return Snap
+
+
+SnapEngine = _with_snapshots(DecodeEngine)
+SnapSpecEngine = _with_snapshots(SpecDecodeEngine)
+
+
+def _assert_bitwise(a: dict, b: dict):
+    assert set(a) == set(b)
+    for k in a:
+        assert a[k].shape == b[k].shape, k
+        assert np.array_equal(a[k], b[k]), f"pool mismatch at {k}"
+
+
+def _assert_request_parity(warm_req, warm_eng, cold_req, cold_eng):
+    """The parity contract: tokens, logprobs and written pool data of a
+    cache-hit request are bitwise those of its cold run."""
+    assert warm_req.output == cold_req.output
+    assert warm_req.logprobs == cold_req.logprobs        # exact floats
+    _assert_bitwise(warm_eng.snapshots[warm_req.rid],
+                    cold_eng.snapshots[cold_req.rid])
+
+
+def _engine(cfg, params, cls=SnapEngine, **kw):
+    kw.setdefault("max_context", MAX_CONTEXT)
+    kw.setdefault("block_size", BLOCK)
+    kw.setdefault("prefill_chunk", CHUNK)
+    kw.setdefault("max_slots", 2)
+    return cls(cfg, params, **kw)
+
+
+# ------------------------------------------------------- parity suite ------
+
+@pytest.mark.parametrize("kv_dtype", ["bf16", "int8", "fp8"])
+def test_hit_parity_bitwise(setup, kv_dtype):
+    """Warm engine: request A caches SYS; requests B (greedy) and C
+    (seeded sampling) hit it. Cold engine: B and C alone, no cache.
+    Tokens, logprobs and written K/V/scales must be bitwise identical."""
+    cfg, _ = setup
+    cfg = cfg.with_(kv_dtype=kv_dtype)
+    params = common.init_params(api.schema(cfg), jax.random.key(0))
+
+    def reqs():
+        return [Request(rid=1, prompt=SYS + [11, 12, 13], max_new_tokens=5),
+                Request(rid=2, prompt=SYS + [21, 22], max_new_tokens=5,
+                        temperature=1.3, seed=9)]
+
+    warm = _engine(cfg, params, prefix_cache=True)
+    a = Request(rid=0, prompt=SYS + [41, 42], max_new_tokens=3)
+    warm.submit(a)
+    warm.run_until_done()
+    wb, wc = reqs()
+    warm.submit(wb)
+    warm.submit(wc)
+    warm.run_until_done()
+    assert wb.prefix_hit == len(SYS) and wc.prefix_hit == len(SYS)
+
+    cold = _engine(cfg, params, prefix_cache=False)
+    cb, cc = reqs()
+    cold.submit(cb)
+    cold.submit(cc)
+    cold.run_until_done()
+
+    _assert_request_parity(wb, warm, cb, cold)
+    _assert_request_parity(wc, warm, cc, cold)
+    assert warm.kv_stats["prefix_hit_tokens"] == 2 * len(SYS)
+    assert warm.kv_stats["prefix_saved_bytes"] > 0
+
+
+@pytest.mark.parametrize("kv_dtype", ["bf16", "int8"])
+def test_spec_engine_hit_parity(setup, kv_dtype):
+    """Prefix hits under the speculative engine: the n-gram proposer
+    drafts from the shared history, the verify windows land on shared
+    tables, and set_lens rollback rides along — emitted stream, logprobs
+    and written pools stay bitwise the cold spec run's."""
+    cfg, _ = setup
+    cfg = cfg.with_(kv_dtype=kv_dtype)
+    params = common.init_params(api.schema(cfg), jax.random.key(0))
+    # repetitive continuation so the n-gram lookup actually fires
+    prompt = SYS + [5, 6, 5, 6, 5]
+
+    def build(prefix_cache):
+        return _engine(cfg, params, cls=SnapSpecEngine,
+                       proposer=NGramProposer(), spec_k=3,
+                       prefix_cache=prefix_cache)
+
+    warm = build(True)
+    a = Request(rid=0, prompt=SYS + [41], max_new_tokens=3)
+    warm.submit(a)
+    warm.run_until_done()
+    wb = Request(rid=1, prompt=prompt, max_new_tokens=8)
+    wc = Request(rid=2, prompt=prompt[:-1], max_new_tokens=6,
+                 temperature=1.1, seed=4)
+    warm.submit(wb)
+    warm.submit(wc)
+    warm.run_until_done()
+    assert wb.prefix_hit >= len(SYS)
+
+    cold = build(False)
+    cb = Request(rid=1, prompt=prompt, max_new_tokens=8)
+    cc = Request(rid=2, prompt=prompt[:-1], max_new_tokens=6,
+                 temperature=1.1, seed=4)
+    cold.submit(cb)
+    cold.submit(cc)
+    cold.run_until_done()
+
+    _assert_request_parity(wb, warm, cb, cold)
+    _assert_request_parity(wc, warm, cc, cold)
+
+
+def test_spec_draft_model_replays_hit_prefix(setup):
+    """The draft model has no prefix cache of its own: on a target-side
+    hit it must replay the cached span into its mirror cache, or its
+    drafts (and sampled residual draws) diverge from the cold run."""
+    cfg, params = setup
+    dcfg = cfg.with_(num_layers=1)
+    dparams = common.init_params(api.schema(dcfg), jax.random.key(1))
+    from repro.spec import DraftModelProposer
+
+    def build(prefix_cache):
+        return _engine(cfg, params, cls=SnapSpecEngine,
+                       proposer=DraftModelProposer(dcfg, dparams),
+                       spec_k=3, prefix_cache=prefix_cache)
+
+    warm = build(True)
+    a = Request(rid=0, prompt=SYS + [41], max_new_tokens=3)
+    warm.submit(a)
+    warm.run_until_done()
+    base = dict(warm.kv_stats)          # A's drafts don't count below
+    wb = Request(rid=1, prompt=SYS + [5, 6], max_new_tokens=6,
+                 temperature=1.2, seed=11)
+    warm.submit(wb)
+    warm.run_until_done()
+    assert wb.prefix_hit == len(SYS)
+
+    cold = build(False)
+    cb = Request(rid=1, prompt=SYS + [5, 6], max_new_tokens=6,
+                 temperature=1.2, seed=11)
+    cold.submit(cb)
+    cold.run_until_done()
+    _assert_request_parity(wb, warm, cb, cold)
+    # identical drafts prove the mirror replay, not just verify-rescue
+    for key in ("spec_drafted", "spec_accepted"):
+        assert (warm.kv_stats[key] - base[key] == cold.kv_stats[key]), key
+
+
+def test_cow_mid_block_divergence(setup):
+    """A prompt diverging mid-block from the cached prefix gets a private
+    copy of the divergence block (COW) — and stays bitwise the cold run;
+    the shared original serves a later full hit untouched."""
+    cfg, params = setup
+    warm = _engine(cfg, params, prefix_cache=True)
+    a = Request(rid=0, prompt=SYS + [41], max_new_tokens=3)
+    warm.submit(a)
+    warm.run_until_done()
+
+    div = SYS[:24] + [99, 98, 97, 96]       # diverges inside block 1
+    wb = Request(rid=1, prompt=div, max_new_tokens=5)
+    warm.submit(wb)
+    warm.run_until_done()
+    assert wb.prefix_hit == 24
+    assert warm.kv_stats["prefix_cow_blocks"] == 1
+
+    # the shared block survived the divergent writer: a full-prefix hit
+    # afterwards still matches its cold run bitwise
+    wc = Request(rid=2, prompt=SYS + [55, 56], max_new_tokens=4)
+    warm.submit(wc)
+    warm.run_until_done()
+    assert wc.prefix_hit == len(SYS)
+
+    cold = _engine(cfg, params, prefix_cache=False)
+    cb = Request(rid=1, prompt=div, max_new_tokens=5)
+    cc = Request(rid=2, prompt=SYS + [55, 56], max_new_tokens=4)
+    cold.submit(cb)
+    cold.submit(cc)
+    cold.run_until_done()
+    _assert_request_parity(wb, warm, cb, cold)
+    _assert_request_parity(wc, warm, cc, cold)
+
+
+def test_identical_prompt_full_hit_cow(setup):
+    """A repeat of a cached prompt hits everything but the final token
+    (it must be re-scored to emit) — the last block is COW'd so the
+    emitted continuation can append without touching the shared copy."""
+    cfg, params = setup
+    warm = _engine(cfg, params, prefix_cache=True)
+    a = Request(rid=0, prompt=list(SYS), max_new_tokens=4)
+    warm.submit(a)
+    warm.run_until_done()
+    wb = Request(rid=1, prompt=list(SYS), max_new_tokens=4)
+    warm.submit(wb)
+    warm.run_until_done()
+    assert wb.prefix_hit == len(SYS) - 1
+    assert warm.kv_stats["prefix_cow_blocks"] == 1
+    assert wb.output == a.output and wb.logprobs == a.logprobs
+
+    cold = _engine(cfg, params, prefix_cache=False)
+    cb = Request(rid=1, prompt=list(SYS), max_new_tokens=4)
+    cold.submit(cb)
+    cold.run_until_done()
+    _assert_request_parity(wb, warm, cb, cold)
+
+
+def test_interleaved_hit_admission_during_decode(setup):
+    """reset_slot/keep_slots on slots holding shared blocks: a hit
+    request admitted while another slot is mid-decode prefills in small
+    chunks (batched decode keeps stepping around it); the stray
+    full-batch writes must land in the request's OWN blocks — never the
+    shared prefix — and everyone matches their cold runs."""
+    cfg, params = setup
+    warm = _engine(cfg, params, prefix_cache=True, prefill_chunk=4)
+    a = Request(rid=0, prompt=SYS + [41], max_new_tokens=3)
+    warm.submit(a)
+    warm.run_until_done()
+
+    r1 = Request(rid=1, prompt=[1, 2, 3], max_new_tokens=12)
+    warm.submit(r1)
+    warm.step()
+    warm.step()                       # r1 resident and decoding
+    wb = Request(rid=2, prompt=SYS + [61, 62, 63], max_new_tokens=4)
+    warm.submit(wb)                   # hit; prefill interleaves with r1
+    warm.run_until_done()
+    assert wb.prefix_hit == len(SYS)
+
+    cold = _engine(cfg, params, prefix_cache=False, prefill_chunk=4)
+    c1 = Request(rid=1, prompt=[1, 2, 3], max_new_tokens=12)
+    cb = Request(rid=2, prompt=SYS + [61, 62, 63], max_new_tokens=4)
+    cold.submit(c1)
+    cold.step()
+    cold.step()
+    cold.submit(cb)
+    cold.run_until_done()
+    assert r1.output == c1.output
+    _assert_request_parity(wb, warm, cb, cold)
+
+    # a third hit confirms the shared blocks came through both the
+    # interleaving AND wb's retirement (reset_slot to the null row must
+    # not touch pool leaves) bit-intact
+    wc = Request(rid=3, prompt=SYS + [71], max_new_tokens=3)
+    warm.submit(wc)
+    warm.run_until_done()
+    cc = Request(rid=3, prompt=SYS + [71], max_new_tokens=3)
+    cold.submit(cc)
+    cold.run_until_done()
+    _assert_request_parity(wc, warm, cc, cold)
+
+
+# ------------------------------------------------- pressure / eviction -----
+
+def test_oversubscribed_pool_evicts_not_livelocks(setup):
+    """Prefix longer than the pool's free blocks: the trie pins blocks,
+    so admission must evict its unreferenced leaves to make room — and a
+    request the pool can never satisfy is still rejected at submit (the
+    PR-2 oversubmit contract, now with a trie holding most of the pool).
+    """
+    cfg, params = setup
+    # 4 usable blocks = 64 tokens; each request needs 3 blocks
+    engine = _engine(cfg, params, num_blocks=5, prefix_cache=True)
+    p_shared = (SYS + SYS)[:40]
+    reqs = [Request(rid=i, prompt=list(p_shared), max_new_tokens=8)
+            for i in range(3)]
+    for r in reqs:
+        engine.submit(r)
+    # a distinct-prefix request: its admission must evict the trie's
+    # cached blocks (2 per retired prefix) or it could never fit
+    other = Request(rid=9, prompt=[200 + i for i in range(40)],
+                    max_new_tokens=8)
+    engine.submit(other)
+    again = Request(rid=10, prompt=list(p_shared), max_new_tokens=8)
+    engine.submit(again)
+    engine.run_until_done()
+    assert all(r.done for r in reqs) and other.done and again.done
+    assert engine.kv_stats["prefix_evicted_blocks"] >= 2
+    assert reqs[1].output == reqs[0].output     # identical shared-prefix
+    assert again.output == reqs[0].output       # streams stay identical
+    with pytest.raises(ValueError):
+        engine.submit(Request(rid=11, prompt=list(range(60)),
+                              max_new_tokens=10))    # 70 > 64 never fits
+
+
+def test_full_pool_request_with_cow_hit_degrades_not_livelocks(setup):
+    """A request sized at the pool's full capacity whose prompt repeats
+    a cached one: the best match pins its COW source ON TOP of the
+    request's own budget — un-admittable forever. Admission must degrade
+    the plan (drop the COW, then go cold) instead of re-pinning and
+    failing identically every step."""
+    cfg, params = setup
+    engine = _engine(cfg, params, max_context=128, num_blocks=9,
+                     prefix_cache=True)
+    prompt = list(range(1, 113))        # 112 tok; +16 new = 8 = whole pool
+    a = Request(rid=0, prompt=prompt, max_new_tokens=16)
+    engine.submit(a)
+    engine.run_until_done()
+    assert a.done and engine.prefix_cache.num_nodes == 7
+    b = Request(rid=1, prompt=list(prompt), max_new_tokens=16)
+    engine.submit(b)
+    engine.run_until_done()
+    assert b.done
+    assert b.output == a.output         # degraded hit, identical stream
+    assert b.prefix_hit == 96           # block-aligned plan, no COW pin
+
+
+def test_eviction_races_just_admitted_hit(setup):
+    """Eviction triggered by a later admission in the SAME admit() sweep
+    must not free blocks a just-admitted hit retained: stale trie leaves
+    go first, the hit's blocks are pinned by its refcount."""
+    cfg, params = setup
+    engine = _engine(cfg, params, num_blocks=9, prefix_cache=True)
+    a = Request(rid=0, prompt=SYS + [41], max_new_tokens=3)      # prefix P
+    stale = Request(rid=1, prompt=[150 + i for i in range(33)],  # prefix Q
+                    max_new_tokens=3)
+    engine.submit(a)
+    engine.submit(stale)
+    engine.run_until_done()
+    assert engine.prefix_cache.num_nodes == 4       # P and Q, 2 blocks each
+
+    # B hits P (retains 2 blocks, allocs 1, leaving 3 free); C's
+    # admission in the same sweep needs 4 blocks -> must evict one of
+    # Q's leaves, never B's retained P blocks
+    wb = Request(rid=2, prompt=SYS + [61, 62], max_new_tokens=5)
+    c = Request(rid=3, prompt=[90 + i for i in range(48)], max_new_tokens=8)
+    engine.submit(wb)
+    engine.submit(c)
+    engine.run_until_done()
+    assert wb.done and c.done
+    assert wb.prefix_hit == len(SYS)
+    assert engine.kv_stats["prefix_evicted_blocks"] >= 1
+
+    cold = _engine(cfg, params, prefix_cache=False)
+    cb = Request(rid=2, prompt=SYS + [61, 62], max_new_tokens=5)
+    cold.submit(cb)
+    cold.run_until_done()
+    _assert_request_parity(wb, engine, cb, cold)
+
+
+def test_ssm_family_rejects_prefix_cache():
+    cfg = reduced(get_config("mamba2-780m"))
+    with pytest.raises(ValueError):
+        DecodeEngine(cfg, None, prefix_cache=True)
+
+
+def test_ecm_prefill_forecast():
+    """The ECM prefix forecast is the bookkeeping the engine realizes:
+    1/(1-hit_rate) in token form, the cold/warm chunk-launch ratio in
+    chunked form, and input validation instead of silent nonsense."""
+    from repro.ecm.tpu import predicted_prefill_speedup
+    assert predicted_prefill_speedup(0.0) == 1.0
+    assert predicted_prefill_speedup(0.5) == pytest.approx(2.0)
+    assert predicted_prefill_speedup(0.75) == pytest.approx(4.0)
+    # chunk-granular: 64-token prompt, 32-token chunks, half cached ->
+    # 2 cold launches vs 1 residual launch
+    assert predicted_prefill_speedup(0.5, prompt_tokens=64,
+                                     chunk_tokens=32) == pytest.approx(2.0)
+    # hits smaller than one chunk save no launches
+    assert predicted_prefill_speedup(0.25, prompt_tokens=32,
+                                     chunk_tokens=32) == pytest.approx(1.0)
+    with pytest.raises(ValueError):
+        predicted_prefill_speedup(1.0)       # nothing left to prefill
+    with pytest.raises(ValueError):
+        predicted_prefill_speedup(-0.1)
+
+
+# ------------------------------------------------------ allocator unit -----
+
+def test_allocator_refcounts():
+    a = BlockAllocator(num_blocks=6)
+    x = a.alloc(2)
+    assert [a.refcount(b) for b in x] == [1, 1]
+    a.retain(x)                      # a second sharer
+    a.release(x)                     # first sharer gone: still held
+    assert a.num_free == 3 and all(a.refcount(b) == 1 for b in x)
+    a.release(x)                     # last reference: back to the pool
+    assert a.num_free == 5 and all(a.refcount(b) == 0 for b in x)
+    with pytest.raises(AssertionError):
+        a.release(x)                 # double free
+    with pytest.raises(AssertionError):
+        a.retain([x[0]])             # retain of a free block
+
+
+# ------------------------------------------------------- property tests ----
+
+_BS = 4          # tiny blocks so prompts span several trie nodes
+_POOL = 13       # 12 usable blocks
+_MAX_NEW = 3
+
+
+def _sim_admit(cache, alloc, rng):
+    """The scheduler's admission dance, minus the device ops."""
+    # tiny alphabet + shared stems -> real prefix collisions
+    stem = [0, 1, 0, 1, 0, 0, 1, 1] * 2
+    n = rng.randrange(1, 17)
+    prompt = stem[:n] if rng.random() < 0.6 else \
+        [rng.randrange(2) for _ in range(n)]
+    m = cache.match(prompt)
+    alloc.retain(m.blocks)
+    if m.cow_src is not None:
+        alloc.retain([m.cow_src])
+    need = -(-(len(prompt) + _MAX_NEW) // _BS) - len(m.blocks)
+    if need > alloc.num_free:
+        cache.evict(need - alloc.num_free)
+    if need > alloc.num_free:
+        alloc.release(m.blocks)
+        if m.cow_src is not None:
+            alloc.release([m.cow_src])
+        return None
+    blocks = m.blocks + alloc.alloc(need)
+    if m.cow_src is not None:
+        alloc.release([m.cow_src])   # engine copies, then releases
+    cache.note_admitted(m.hit, len(prompt), m.cow_src is not None)
+    return prompt, blocks
+
+
+def _trie_nodes(cache):
+    out, stack = [], list(cache.root.children.values())
+    while stack:
+        n = stack.pop()
+        out.append(n)
+        stack.extend(n.children.values())
+    return out
+
+
+def _check_invariants(cache, alloc, live):
+    # pool accounting always sums to capacity
+    assert alloc.num_free + alloc.num_held == alloc.num_blocks - 1
+    nodes = _trie_nodes(cache)
+    blocks = [n.block for n in nodes]
+    # a trie node's block is held (never freed under it) and unique
+    assert all(alloc.refcount(b) >= 1 for b in blocks)
+    assert len(set(blocks)) == len(blocks)
+    assert paged.NULL_BLOCK not in blocks
+    # every live request's references are held too
+    for _, bs in live:
+        assert all(alloc.refcount(b) >= 1 for b in bs)
+    assert cache.num_nodes == len(nodes)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.integers(min_value=0, max_value=5),
+                min_size=1, max_size=60),
+       st.integers(min_value=0, max_value=2 ** 20))
+def test_allocator_trie_invariants_random_interleavings(ops, seed):
+    """Random submit/retire/evict interleavings never double-free, never
+    free a block with live references, never evict a referenced node,
+    and pool accounting always sums to capacity. (Double free and
+    free-while-shared are assertions inside the allocator itself — any
+    violation fails the example.)"""
+    import random
+    rng = random.Random(seed)
+    alloc = BlockAllocator(_POOL)
+    cache = PrefixCache(alloc, _BS)
+    live = []
+    for op in ops:
+        if op <= 2:                              # submit/admit
+            got = _sim_admit(cache, alloc, rng)
+            if got is not None:
+                live.append(got)
+        elif op <= 4 and live:                   # retire (FIFO-ish)
+            prompt, blocks = live.pop(0)
+            cache.insert(prompt, blocks)
+            alloc.release(blocks)
+        else:                                    # eviction pressure
+            cache.evict(rng.randrange(1, 4))
+        _check_invariants(cache, alloc, live)
+    while live:                                  # drain
+        prompt, blocks = live.pop(0)
+        cache.insert(prompt, blocks)
+        alloc.release(blocks)
+        _check_invariants(cache, alloc, live)
+    # with everything retired, evicting the whole trie returns the pool
+    cache.evict(alloc.num_blocks)
+    assert cache.num_nodes == 0
+    assert alloc.num_free == alloc.num_blocks - 1
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(min_value=2, max_value=9),
+       st.integers(min_value=0, max_value=2 ** 20))
+def test_trie_match_is_prefix_of_prompt(k, seed):
+    """Whatever the trie returns is literally a cached prefix: hit <=
+    len(prompt) - 1, full blocks + COW span reconstruct prompt[:hit]."""
+    import random
+    rng = random.Random(seed)
+    alloc = BlockAllocator(64)
+    cache = PrefixCache(alloc, _BS)
+    inserted = {}
+    for _ in range(k):
+        n = rng.randrange(1, 17)
+        prompt = [rng.randrange(2) for _ in range(n)]
+        blocks = alloc.alloc(-(-n // _BS))
+        cache.insert(prompt, blocks)
+        for i in range(n // _BS):
+            inserted[blocks[i]] = tuple(prompt[i * _BS:(i + 1) * _BS])
+        alloc.release(blocks)        # trie keeps what it retained
+    probe = [rng.randrange(2) for _ in range(rng.randrange(1, 17))]
+    m = cache.match(probe)
+    assert 0 <= m.hit <= max(len(probe) - 1, 0)
+    assert len(m.blocks) == m.hit // _BS
+    for i, b in enumerate(m.blocks):
+        assert inserted[b] == tuple(probe[i * _BS:(i + 1) * _BS])
+    if m.hit % _BS:
+        assert m.cow_src is not None
+        span = inserted[m.cow_src]
+        off = (m.hit // _BS) * _BS
+        assert span[:m.hit - off] == tuple(probe[off:m.hit])
+    else:
+        assert m.cow_src is None
