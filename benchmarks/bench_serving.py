@@ -65,13 +65,15 @@ def _prompts(kind: str, rng) -> list[list[int]]:
 _MIX_SEED = {"short": 1, "mixed": 2, "long": 3}
 
 
-def _build(cfg, params, kind: str, slots: int, *, prefix_cache: bool):
+def _build(cfg, params, kind: str, slots: int, *, prefix_cache: bool,
+           **engine_kw):
     # fixed seed per cell: the CI perf-trajectory JSON must measure the
     # SAME workload every run (hash() is salted per process)
     rng = np.random.default_rng(100 * _MIX_SEED[kind] + slots)
     engine = DecodeEngine(cfg, params, max_slots=slots,
                           max_context=MAX_CONTEXT, block_size=BLOCK,
-                          prefill_chunk=32, prefix_cache=prefix_cache)
+                          prefill_chunk=32, prefix_cache=prefix_cache,
+                          **engine_kw)
     reqs = [Request(rid=i, prompt=p, max_new_tokens=MAX_NEW)
             for i, p in enumerate(_prompts(kind, rng))]
     for r in reqs:
@@ -99,7 +101,10 @@ def _run_mix(cfg, params, kind: str, slots: int) -> tuple:
             f" paged_kv_kib={st['paged_bytes'] / 1024:.0f}"
             f" contig_kv_kib={st['contiguous_bytes'] / 1024:.0f}"
             f" kv_reduction={reduction:.2f}x"
-            f" prefix_hit={engine.prefix_hit_rate:.2f}")
+            f" prefix_hit={engine.prefix_hit_rate:.2f}"
+            f" preempted={st['preempted']}"
+            f" restored_blocks={st['restored_blocks']}"
+            f" guard_trips={st['guard_trips']}")
 
 
 def _run_prefix_sweep(cfg, params, kind: str, slots: int) -> tuple:
@@ -131,6 +136,31 @@ def _run_prefix_sweep(cfg, params, kind: str, slots: int) -> tuple:
             f" cow_blocks={st['prefix_cow_blocks']}")
 
 
+def _run_preempt_sweep(cfg, params, kind: str, slots: int) -> tuple:
+    """Preemption-to-host under a deliberately tight pool: the LRU
+    victim policy swaps decoding requests out so the queue head can
+    admit, and the restored requests must still ALL finish. The row
+    tracks how much swap traffic the pressure generates (counters from
+    ``DecodeEngine.kv_stats``) plus the throughput cost vs the unpinched
+    pool measured by the plain ``serving/<kind>`` row."""
+    # 16 blocks: the largest single request fits (<= 8 blocks at this
+    # geometry — submission would reject it otherwise) but two long
+    # requests plus the queue head do not, so admission must preempt
+    engine, reqs, dt = _build(cfg, params, kind, slots, prefix_cache=False,
+                              num_blocks=16, preempt="lru")
+    st = engine.kv_stats
+    toks = sum(len(r.output) for r in reqs)
+    steps = max(st["decode_steps"] + st["prefill_chunks"], 1)
+    return (f"serving/preempt/{kind}-sys32/slots={slots}",
+            f"{dt * 1e6 / steps:.0f}",
+            f"tok_s={toks / dt:.1f}"
+            f" preempted={st['preempted']}"
+            f" swapped_blocks={st['preempted_blocks']}"
+            f" restored_blocks={st['restored_blocks']}"
+            f" host_kib={engine.swap.stats['host_bytes_total'] / 1024:.0f}"
+            f" guard_trips={st['guard_trips']}")
+
+
 def run() -> list[tuple]:
     cfg = reduced(get_config("qwen1.5-0.5b")).with_(num_layers=2)
     params = common.init_params(api.schema(cfg), jax.random.key(0))
@@ -142,6 +172,8 @@ def run() -> list[tuple]:
     # of the shared-system-prompt traffic is servable from the trie
     for kind in ("short", "mixed"):
         rows.append(_run_prefix_sweep(cfg, params, kind, 2))
+    # preempt sweep: long prompts on a 16-block pool force swap-out
+    rows.append(_run_preempt_sweep(cfg, params, "long", 4))
     return rows
 
 

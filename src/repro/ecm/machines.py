@@ -107,4 +107,9 @@ TPU_V5E = dict(
     ici_bw_per_link=50e9 * 2,      # 50 GB/s per direction per link
     ici_links=4,                   # 2D torus: 4 links per chip (v5e: 4)
     chips_per_pod=256,
+    # host<->device link for the KV preemption-to-host tier
+    # (repro.serving.swap): PCIe gen3 x16-class effective bandwidth —
+    # documented assumption, the conservative end for v5e hosts. Feeds
+    # repro.ecm.tpu.predicted_restore_vs_reprefill.
+    host_link_bw=16e9,
 )

@@ -298,3 +298,46 @@ def predicted_spec_speedup(alpha: float, k: int, *,
     if context_len:
         verify_walk = (context_len + (k + 1) / 2) / context_len
     return e / (verify_walk + (k + 1) * draft_byte_ratio)
+
+
+def predicted_restore_vs_reprefill(tokens: int, token_bytes: float,
+                                   flops_per_token: float,
+                                   hw: dict = TPU_V5E) -> float:
+    """ECM crossover for preemption-to-host (``repro.serving.swap``):
+    time to RE-PREFILL a preempted request over time to RESTORE its KV
+    snapshot from host memory. > 1 means restoring wins.
+
+    Both paths end with the request's ``tokens * token_bytes`` of KV
+    resident in HBM, so the HBM write is common and the comparison is
+
+        T_restore   = tokens * token_bytes / host_link_bw   (PCIe copy)
+        T_reprefill = max(tokens * flops_per_token / peak,  (MXU recompute,
+                          tokens * token_bytes / hbm_bw)     overlap form)
+
+    — the same max(T_compute, T_data) overlap form ``predict_level``
+    uses everywhere else. ``token_bytes`` is the engine's measured
+    per-token pool bytes (``KVCache.token_bytes``), so quantized pools
+    shrink the restore side automatically; ``flops_per_token`` is
+    ~2 * n_params for a dense forward pass.
+    """
+    if tokens <= 0 or token_bytes <= 0 or flops_per_token <= 0:
+        raise ValueError("tokens, token_bytes and flops_per_token must "
+                         "be positive")
+    t_restore = tokens * token_bytes / hw["host_link_bw"]
+    t_reprefill = max(tokens * flops_per_token / hw["peak_bf16_flops"],
+                      tokens * token_bytes / hw["hbm_bw"])
+    return t_reprefill / t_restore
+
+
+def restore_crossover_flops_per_token(token_bytes: float,
+                                      hw: dict = TPU_V5E) -> float:
+    """Model size (in FLOPs per prefill token, ~2 * n_params) above which
+    restoring a preempted request beats re-prefilling it: the equality
+    point of ``predicted_restore_vs_reprefill`` in its compute-bound
+    regime, flops/token = token_bytes * peak / host_link_bw. For any
+    realistic serving model this is tiny (a few million parameters), so
+    the swap tier is effectively always the right call — which is why
+    the scheduler restores rather than re-prefills."""
+    if token_bytes <= 0:
+        raise ValueError("token_bytes must be positive")
+    return token_bytes * hw["peak_bf16_flops"] / hw["host_link_bw"]

@@ -2,8 +2,12 @@
 random-weight continuous-batching demo of the paged-KV decode engine (see
 examples/serve.py for the scripted walkthrough). ``--spec-mode`` switches
 on speculative decoding (n-gram prompt-lookup or a draft model from the
-registry); invalid combinations are rejected with a clear error before
-any model is built."""
+registry); ``--preempt``/``--deadline-steps`` exercise the fault-tolerance
+layer (preemption-to-host, request deadlines), and ``--faults`` runs the
+deterministic fault-injection smoke used by CI: every applicable injector
+site fires once and the engine must finish all surviving requests.
+Invalid combinations are rejected with a clear error before any model is
+built; Ctrl-C triggers the ``--shutdown`` policy (drain or cancel)."""
 
 from __future__ import annotations
 
@@ -16,6 +20,8 @@ import numpy as np
 from repro.configs import REGISTRY, get_config, reduced
 from repro.models import api, common
 from repro.serving.engine import DecodeEngine, Request, SpecDecodeEngine
+from repro.serving.faults import (FailoverServer, FaultInjector, FaultSpec,
+                                  StallError)
 
 SPEC_FAMILIES = ("dense", "moe", "vlm")
 
@@ -53,7 +59,59 @@ def build_parser() -> argparse.ArgumentParser:
                     choices=sorted(REGISTRY),
                     help="registry config drafting for the target "
                          "(required by --spec-mode draft)")
+    ap.add_argument("--num-blocks", type=int, default=None,
+                    help="override the KV block-pool size (default: enough "
+                         "for max_slots full contexts); small pools plus "
+                         "--preempt demonstrate swap-out under pressure")
+    ap.add_argument("--deadline-steps", type=int, default=None,
+                    help="retire any request still unfinished this many "
+                         "engine steps after submission (partial output is "
+                         "kept, state == 'expired')")
+    ap.add_argument("--preempt", default="off",
+                    choices=("off", "lru", "priority"),
+                    help="under pool pressure, swap a victim's KV blocks "
+                         "to host (repro.serving.swap) so the head of the "
+                         "queue can admit; restored requests resume "
+                         "bitwise identically")
+    ap.add_argument("--shutdown", default="drain",
+                    choices=("drain", "cancel"),
+                    help="Ctrl-C policy: 'drain' finishes in-flight "
+                         "requests (no new admissions), 'cancel' retires "
+                         "them immediately with partial output")
+    ap.add_argument("--faults", action="store_true",
+                    help="deterministic fault-injection smoke: arm every "
+                         "applicable injector site once (kv_corrupt, "
+                         "logit_nan, alloc_fail, + proposer_stall under "
+                         "--spec-mode), serve through a FailoverServer, "
+                         "and require all surviving requests to finish")
+    ap.add_argument("--fault-seed", type=int, default=0,
+                    help="FaultInjector seed (replays bit-for-bit)")
+    ap.add_argument("--max-steps", type=int, default=10_000,
+                    help="StallError watchdog for the serve loop")
     return ap
+
+
+def validate_fault_args(args, cfg) -> None:
+    """Reject invalid fault-tolerance combinations before building."""
+    if args.deadline_steps is not None and args.deadline_steps < 1:
+        raise SystemExit(
+            f"--deadline-steps must be >= 1, got {args.deadline_steps}")
+    if args.max_steps < 1:
+        raise SystemExit(f"--max-steps must be >= 1, got {args.max_steps}")
+    if args.num_blocks is not None and args.num_blocks < 2:
+        raise SystemExit(
+            f"--num-blocks must be >= 2 (null block + capacity), "
+            f"got {args.num_blocks}")
+    if args.preempt != "off" and cfg.family == "ssm":
+        raise SystemExit(
+            f"--preempt {args.preempt}: {args.arch} is an 'ssm'-family "
+            f"model with constant-size recurrent state — there are no "
+            f"per-token KV blocks to swap to host")
+    if args.faults and cfg.family == "ssm":
+        raise SystemExit(
+            "--faults: the injection sites target paged-KV serving "
+            "(kv_corrupt poisons pool blocks); pick an attention-family "
+            "--arch")
 
 
 def validate_spec_args(args, cfg) -> None:
@@ -105,16 +163,28 @@ def main() -> None:
             f"constant-size recurrent state — there are no per-token KV "
             f"blocks to share")
     validate_spec_args(args, cfg)
+    validate_fault_args(args, cfg)
     if cfg.family == "vlm":
         cfg = cfg.with_(vlm=None, family="dense")   # text-only serving demo
     cfg = cfg.with_(kv_dtype=args.kv_dtype)
     params = common.init_params(api.schema(cfg), jax.random.key(0))
 
+    injector = None
+    if args.faults:
+        sites = ["kv_corrupt", "logit_nan", "alloc_fail"]
+        if args.spec_mode != "off":
+            sites.append("proposer_stall")
+        injector = FaultInjector(args.fault_seed,
+                                 [FaultSpec(site=s) for s in sites])
+
     engine_kw: dict = dict(max_slots=args.slots,
                            max_context=args.max_context,
                            block_size=args.block_size,
+                           num_blocks=args.num_blocks,
                            prefill_chunk=args.prefill_chunk,
-                           prefix_cache=args.prefix_cache)
+                           prefix_cache=args.prefix_cache,
+                           preempt=args.preempt,
+                           fault_injector=injector)
     if args.spec_mode == "off":
         engine = DecodeEngine(cfg, params, **engine_kw)
     else:
@@ -142,16 +212,36 @@ def main() -> None:
                         prompt=system
                         + rng.integers(0, cfg.vocab_size, 4).tolist(),
                         max_new_tokens=args.max_new,
-                        eos_id=int(rng.integers(0, cfg.vocab_size)))
+                        eos_id=int(rng.integers(0, cfg.vocab_size)),
+                        deadline_steps=args.deadline_steps)
                 for i in range(args.requests)]
+    server = FailoverServer(engine) if args.faults else engine
     t0 = time.time()
     for req in requests:        # queue everything; admission is the engine's
-        engine.submit(req)
-    while engine.num_unfinished:
-        engine.step()
+        server.submit(req)
+    try:
+        server.run_until_done(max_steps=args.max_steps)
+    except KeyboardInterrupt:
+        # --shutdown policy: drain finishes what is in flight (the queue
+        # keeps admitting only already-submitted work — exactly the loop
+        # below), cancel retires everything now with partial output.
+        if args.shutdown == "cancel":
+            n = engine.cancel_all()
+            if args.faults and server.degraded is not None:
+                n += server.degraded.cancel_all()
+            print(f"shutdown: cancelled {n} in-flight requests")
+        else:
+            print(f"shutdown: draining "
+                  f"{server.num_unfinished} in-flight requests")
+            server.run_until_done(max_steps=args.max_steps)
+    except StallError as e:
+        raise SystemExit(f"stalled: {e}; diagnostics: {e.diagnostics}")
     dt = time.time() - t0
     done = [r for r in requests if r.done]
-    assert len(done) == len(requests), "engine finished with pending work"
+    if not (args.deadline_steps or args.shutdown == "cancel"):
+        survivors = [r for r in requests if r.state != "failed"]
+        assert len(done) == len(survivors), \
+            "engine finished with pending work"
     # EOS can retire a request early — count the tokens actually emitted,
     # not requests × max_new.
     total = sum(len(r.output) for r in done)
@@ -178,7 +268,33 @@ def main() -> None:
         line += (f" | spec[{args.spec_mode}] accept "
                  f"{engine.acceptance_rate:.0%}, "
                  f"{engine.mean_accepted_length:.2f} tok/verify-walk")
+    if args.preempt != "off" or st["preempted"]:
+        line += (f" | preempted {st['preempted']} "
+                 f"(restored {st['restored_blocks']} blocks, "
+                 f"{st['preempted_blocks']} swapped to host)")
+    if st["cancelled"] or st["expired"]:
+        line += (f" | cancelled {st['cancelled']}, "
+                 f"expired {st['expired']}")
     print(line)
+
+    if args.faults:
+        fired = sorted({site for _, site, _ in injector.log})
+        armed = sorted(f.site for f in injector.faults)
+        print(f"faults: armed {armed}, fired {fired} "
+              f"(log: {injector.log})")
+        print(f"faults: guard_trips={st['guard_trips']} "
+              f"alloc_faults={st['alloc_faults']} "
+              f"retried={len(server.retried)} failed={len(server.failed)}")
+        if fired != armed:
+            raise SystemExit(f"fault smoke: armed sites {armed} did not "
+                             f"all fire (fired {fired})")
+        unfinished = [r.rid for r in requests
+                      if not r.done and r.state != "failed"]
+        if unfinished:
+            raise SystemExit(f"fault smoke: surviving requests "
+                             f"{unfinished} never finished")
+        print("faults: all armed sites fired once; every surviving "
+              "request finished")
 
 
 if __name__ == "__main__":

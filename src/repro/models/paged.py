@@ -241,6 +241,89 @@ def copy_block(caches, src, dst):
     return tree_map_with_path(one, caches)
 
 
+def extract_blocks(caches, blocks) -> dict:
+    """Gather the listed pool blocks out of every pool leaf of a batched
+    LM cache tree: ``{leaf path: array [L, len(blocks), block_size, ...]}``.
+
+    This is the device half of preemption-to-host
+    (``repro.serving.swap.KVSwap``): the snapshot covers EVERY pool leaf
+    — quantized payloads and their per-block scale tiles alike — so a
+    restored slot is bit-identical however the pool is quantized. The
+    dict is keyed by ``jax.tree_util.keystr`` paths so ``restore_blocks``
+    can route each snapshot back to its leaf without assuming a cache
+    schema. Block IDs are not part of the contract: content is addressed
+    through the slot's table, so a snapshot taken from one set of blocks
+    restores bitwise into any other (tests/test_paged_kv.py proves
+    table-permutation invariance).
+    """
+    from jax.tree_util import keystr, tree_flatten_with_path
+
+    idx = jnp.asarray(blocks, jnp.int32)
+    out = {}
+    for path, leaf in tree_flatten_with_path(caches)[0]:
+        name = str(getattr(path[-1], "key", path[-1]))
+        if name in POOL_KEYS:
+            out[keystr(path)] = leaf[:, idx]
+    return out
+
+
+def restore_blocks(caches, blocks, snapshot: dict):
+    """Scatter an ``extract_blocks`` snapshot back into the pool at the
+    (possibly different) ``blocks``: pool leaves present in ``snapshot``
+    get ``leaf[:, blocks] = snapshot[path]``; everything else passes
+    through untouched."""
+    from jax.tree_util import keystr, tree_map_with_path
+
+    idx = jnp.asarray(blocks, jnp.int32)
+
+    def one(path, leaf):
+        snap = snapshot.get(keystr(path))
+        if snap is None:
+            return leaf
+        return leaf.at[:, idx].set(jnp.asarray(snap, leaf.dtype))
+
+    return tree_map_with_path(one, caches)
+
+
+def zero_blocks(caches, blocks):
+    """Zero the listed pool blocks across every pool leaf (scale tiles
+    included). Quarantine scrubbing: a numerics-guard trip releases the
+    victim's blocks, and non-finite payloads must not ride along — masked
+    attention multiplies masked positions by an exact 0, and ``0 * NaN``
+    is NaN, so a stale NaN row would poison the block's next owner where
+    ordinary stale (finite) data is harmless."""
+    from jax.tree_util import tree_map_with_path
+
+    idx = jnp.asarray(blocks, jnp.int32)
+
+    def one(path, leaf):
+        name = str(getattr(path[-1], "key", path[-1]))
+        if name in POOL_KEYS:
+            return leaf.at[:, idx].set(jnp.zeros((), leaf.dtype))
+        return leaf
+
+    return tree_map_with_path(one, caches)
+
+
+def poison_blocks(caches, blocks):
+    """NaN-fill the listed blocks in every FLOAT pool leaf (integer
+    payloads keep their bits; their scale tiles take the NaN, which
+    dequantizes to NaN all the same). Deterministic fault injection
+    (``repro.serving.faults.FaultInjector``) uses this to model silent
+    KV corruption that the serving numerics guards must catch."""
+    from jax.tree_util import tree_map_with_path
+
+    idx = jnp.asarray(blocks, jnp.int32)
+
+    def one(path, leaf):
+        name = str(getattr(path[-1], "key", path[-1]))
+        if name in POOL_KEYS and jnp.issubdtype(leaf.dtype, jnp.inexact):
+            return leaf.at[:, idx].set(jnp.asarray(jnp.nan, leaf.dtype))
+        return leaf
+
+    return tree_map_with_path(one, caches)
+
+
 def reset_slot(caches, slot, table_row: Array):
     """Point slot ``slot`` of a batched LM cache tree at ``table_row`` and
     clear its per-slot state (len; SSM/conv state slices).

@@ -1,5 +1,7 @@
 """Paged-KV serving subsystem: continuous batching over shared block
-pools, chunked prefill, speculative decoding, and prefix/radix caching.
+pools, chunked prefill, speculative decoding, prefix/radix caching, and
+the fault-tolerance layer (typed failures, numerics guards, deterministic
+fault injection, preemption-to-host).
 
   engine        — refcounting ``BlockAllocator``, strict-FIFO
                   ``Scheduler`` (chunked prefill interleaved with the
@@ -8,11 +10,25 @@ pools, chunked prefill, speculative decoding, and prefix/radix caching.
   prefix_cache  — block-granular radix trie sharing prompt-prefix KV
                   blocks between requests (copy-on-write at the
                   divergence block, LRU eviction under pool pressure)
+  faults        — typed recoverable exceptions (``AllocatorError``,
+                  ``AdmissionError``, ``StallError``), per-step logit
+                  ``NumericsGuard``, keyed replayable ``FaultInjector``,
+                  and the degraded-retry ``FailoverServer``
+  swap          — ``KVSwap`` host tier: preempted slots' blocks (scale
+                  tiles included) snapshot to host and restore bitwise
 """
 
 from repro.serving.engine import (BlockAllocator, DecodeEngine, Request,
                                   Scheduler, SpecDecodeEngine)
+from repro.serving.faults import (AdmissionError, AllocatorError,
+                                  FailoverServer, FaultInjector, FaultSpec,
+                                  NumericsGuard, ProposerStallError,
+                                  ServingError, StallError)
 from repro.serving.prefix_cache import PrefixCache, PrefixMatch
+from repro.serving.swap import KVSwap
 
 __all__ = ["BlockAllocator", "DecodeEngine", "Request", "Scheduler",
-           "SpecDecodeEngine", "PrefixCache", "PrefixMatch"]
+           "SpecDecodeEngine", "PrefixCache", "PrefixMatch",
+           "AdmissionError", "AllocatorError", "FailoverServer",
+           "FaultInjector", "FaultSpec", "NumericsGuard",
+           "ProposerStallError", "ServingError", "StallError", "KVSwap"]

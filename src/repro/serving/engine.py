@@ -47,6 +47,20 @@ is bitwise its cold run (tests/test_prefix_cache.py). Requests can opt
 into temperature + top-k sampling with a per-request ``seed``; the
 sampling stream is keyed on (seed, tokens emitted) only, so it too is
 independent of batch composition and admission timing.
+
+Fault tolerance (``repro.serving.faults`` / ``repro.serving.swap``):
+requests carry ``deadline_steps`` and can be cancelled mid-flight with
+every reference (slot, refcounted blocks, proposer mirror state)
+released correctly; under pool pressure the scheduler can PREEMPT a
+decoding victim — its blocks snapshot to host memory (``KVSwap``) and
+restore bitwise on re-admission, so a preempted request's output is
+identical to a never-preempted run; a ``NumericsGuard`` watches the
+fused logit stats every step and quarantines (rather than crashes or
+poisons) a slot whose logits go non-finite or whose compensated-vs-naive
+sum deviation explodes; and allocator/scheduler failures raise typed,
+recoverable exceptions (``AllocatorError``/``AdmissionError``) the
+admission path absorbs. All of it is exercised by the keyed, replayable
+``FaultInjector`` in tests/test_faults.py.
 """
 
 from __future__ import annotations
@@ -63,7 +77,11 @@ from repro.kernels import ops
 from repro.models import api, paged
 from repro.models.config import ModelConfig
 from repro.models.paged import NULL_BLOCK, PagedLayout
+from repro.serving.faults import (AdmissionError, AllocatorError,
+                                  NumericsGuard, ProposerStallError,
+                                  StallError)
 from repro.serving.prefix_cache import PrefixCache, PrefixMatch
+from repro.serving.swap import KVSwap
 
 DEFAULT_BLOCK_SIZE = paged.DEFAULT_BLOCK_SIZE
 
@@ -96,11 +114,39 @@ class Request:
     # shared block awaiting its copy-on-write copy
     prefix_hit: int = 0
     cow_src: int | None = None
+    # lifecycle: deadline_steps bounds the request's wall-clock in ENGINE
+    # STEPS from submission (None = no deadline); priority feeds the
+    # "priority" preemption victim policy (higher survives). ``state``
+    # walks queued -> prefilling -> decoding (-> preempted -> decoding)*
+    # -> done | cancelled | expired | quarantined | failed.
+    deadline_steps: int | None = None
+    priority: int = 0
+    state: str = "queued"
+    error: str | None = None
+    submit_step: int = 0
+    last_progress_step: int = 0
+    admit_seq: int = -1
+    retries: int = 0
 
     @property
     def num_cached(self) -> int:
         """Tokens currently occupying KV positions (prompt + emitted)."""
         return self.prefill_pos + len(self.output)
+
+    def reset_for_retry(self) -> None:
+        """Scrub per-run state so the request can be resubmitted (the
+        FailoverServer's degraded-tier retry path)."""
+        assert self.slot is None and not self.blocks, \
+            "reset of a request still holding engine resources"
+        self.output = []
+        self.logprobs = []
+        self.done = False
+        self.prefill_pos = 0
+        self.prefix_hit = 0
+        self.cow_src = None
+        self.state = "queued"
+        self.admit_seq = -1
+        self.retries += 1
 
 
 class BlockAllocator:
@@ -111,9 +157,15 @@ class BlockAllocator:
     trie, so ownership is a count, not a holder: ``alloc`` hands out
     blocks at refcount 1, every additional sharer ``retain``s, and a
     block rejoins the free list only when ``release`` drops the count to
-    zero. Releasing an unheld block (double free) or retaining a free one
-    is an assertion failure — the Hypothesis interleavings in
-    tests/test_prefix_cache.py drive these invariants.
+    zero. Every misuse — exhaustion, double free, retain of a free block
+    — raises the typed, recoverable ``AllocatorError`` (the admission
+    path catches it and lets the head wait); the Hypothesis
+    interleavings in tests/test_prefix_cache.py drive these invariants.
+
+    ``fail_next`` is the deterministic-fault hook: when armed (by a
+    ``FaultInjector``), the next ``alloc`` raises ``AllocatorError``
+    once — modeling a transient allocation failure the engine must
+    absorb, not crash on.
     """
 
     def __init__(self, num_blocks: int):
@@ -121,6 +173,8 @@ class BlockAllocator:
         self.num_blocks = num_blocks
         self._free = list(range(num_blocks - 1, NULL_BLOCK, -1))
         self._ref: dict[int, int] = {}
+        self.fail_next = False
+        self.faults = 0
 
     @property
     def num_free(self) -> int:
@@ -135,9 +189,13 @@ class BlockAllocator:
         return self._ref.get(block, 0)
 
     def alloc(self, n: int) -> list[int]:
+        if self.fail_next:
+            self.fail_next = False
+            self.faults += 1
+            raise AllocatorError("injected allocation failure")
         if n > len(self._free):
-            raise RuntimeError(f"block pool exhausted: want {n}, "
-                               f"have {len(self._free)}")
+            raise AllocatorError(f"block pool exhausted: want {n}, "
+                                 f"have {len(self._free)}")
         blocks = [self._free.pop() for _ in range(n)]
         for b in blocks:
             self._ref[b] = 1
@@ -145,12 +203,14 @@ class BlockAllocator:
 
     def retain(self, blocks: list[int]) -> None:
         for b in blocks:
-            assert b in self._ref, f"retain of free block {b}"
+            if b not in self._ref:
+                raise AllocatorError(f"retain of free block {b}")
             self._ref[b] += 1
 
     def release(self, blocks: list[int]) -> None:
         for b in blocks:
-            assert b in self._ref, f"double free of block {b}"
+            if b not in self._ref:
+                raise AllocatorError(f"double free of block {b}")
             self._ref[b] -= 1
             if self._ref[b] == 0:
                 del self._ref[b]
@@ -173,21 +233,28 @@ class Scheduler:
         self.waiting: deque[Request] = deque()
         self.prefilling: deque[Request] = deque()
         self.decoding: dict[int, Request] = {}
+        self.preempted: deque[Request] = deque()
         self._free_slots = list(range(max_slots))
+        self._admit_seq = 0
 
     def submit(self, req: Request) -> None:
         need = len(req.prompt) + req.max_new_tokens
         if need > self.layout.max_context:
-            raise ValueError(
+            raise AdmissionError(
                 f"request {req.rid}: prompt+max_new = {need} exceeds "
                 f"max_context {self.layout.max_context}")
         usable = self.allocator.num_blocks - 1          # minus null block
         if self.blocks_needed(req) > usable:
             # would head-block the FIFO queue forever on an oversubscribed
             # pool — reject at submission, not livelock at admission
-            raise ValueError(
+            raise AdmissionError(
                 f"request {req.rid}: needs {self.blocks_needed(req)} blocks "
                 f"but the pool only has {usable}")
+        if req.deadline_steps is not None and req.deadline_steps < 1:
+            raise AdmissionError(
+                f"request {req.rid}: deadline_steps must be >= 1, "
+                f"got {req.deadline_steps}")
+        req.state = "queued"
         self.waiting.append(req)
 
     def blocks_needed(self, req: Request) -> int:
@@ -235,7 +302,18 @@ class Scheduler:
                     if match.cow_src is not None:
                         self.allocator.release([match.cow_src])
                 return False
-        req.blocks = match.blocks + self.allocator.alloc(need)
+        try:
+            fresh = self.allocator.alloc(need)
+        except AllocatorError:
+            # transient allocation failure (e.g. injected): roll the
+            # protective retains back and let the head wait — the FIFO
+            # contract survives, nothing crashes
+            if self.prefix_cache is not None:
+                self.allocator.release(match.blocks)
+                if match.cow_src is not None:
+                    self.allocator.release([match.cow_src])
+            return False
+        req.blocks = match.blocks + fresh
         req.prefix_hit = match.hit
         req.cow_src = match.cow_src       # engine copies, then releases
         req.prefill_pos = match.hit       # first uncached token
@@ -265,8 +343,32 @@ class Scheduler:
                 break
             self.waiting.popleft()
             req.slot = self._free_slots.pop()
+            req.state = "prefilling"
+            req.admit_seq = self._admit_seq
+            self._admit_seq += 1
             self.prefilling.append(req)
             admitted.append(req)
+        # Preempted requests re-admit only once the waiting queue has
+        # drained: a restore that displaced the very request whose
+        # admission forced the preemption would swap-thrash forever.
+        # They need no prefix match — their content comes back verbatim
+        # from the host snapshot (the engine's restore path).
+        while not self.waiting and self.preempted and self._free_slots:
+            req = self.preempted[0]
+            need = self.blocks_needed(req)
+            if need > self.allocator.num_free and self.prefix_cache:
+                self.prefix_cache.evict(need - self.allocator.num_free)
+            if need > self.allocator.num_free:
+                break
+            try:
+                req.blocks = self.allocator.alloc(need)
+            except AllocatorError:
+                break
+            self.preempted.popleft()
+            req.slot = self._free_slots.pop()
+            req.admit_seq = self._admit_seq
+            self._admit_seq += 1
+            admitted.append(req)      # engine restores, then start_decoding
         return admitted
 
     def next_chunk(self) -> tuple[Request, list, int] | None:
@@ -286,10 +388,50 @@ class Scheduler:
         return False
 
     def start_decoding(self, req: Request) -> None:
+        req.state = "decoding"
         self.decoding[req.slot] = req
+
+    def preempt(self, req: Request) -> None:
+        """Bookkeeping half of preemption-to-host (the engine snapshots
+        the blocks FIRST): drop the victim from the decode batch, release
+        its blocks (trie-shared ones survive via their refcounts) and
+        free the slot; the request queues for re-admission."""
+        assert req.slot in self.decoding, "only decoding requests preempt"
+        self.decoding.pop(req.slot)
+        self.allocator.release(req.blocks)
+        req.blocks = []
+        self._free_slots.append(req.slot)
+        req.slot = None
+        req.state = "preempted"
+        self.preempted.append(req)
+
+    def drop(self, req: Request, state: str) -> bool:
+        """Remove ``req`` from whichever queue holds it (cancellation /
+        deadline expiry), releasing slot + refcounted blocks. Returns
+        False if the request is not in flight (already done/terminated).
+        The caller owns device-side cleanup (table reset, swap drop)."""
+        if req in self.waiting:
+            self.waiting.remove(req)
+        elif req in self.preempted:
+            self.preempted.remove(req)
+        elif req.slot is not None and (req in self.prefilling
+                                       or self.decoding.get(req.slot) is req):
+            if req in self.prefilling:
+                self.prefilling.remove(req)
+            self.decoding.pop(req.slot, None)
+            # no trie insert: a partial/cancelled prompt is not a prefix
+            # other requests should trust
+            self.allocator.release(req.blocks)
+            req.blocks = []
+            self._free_slots.append(req.slot)
+        else:
+            return False
+        req.state = state
+        return True
 
     def retire(self, req: Request) -> None:
         req.done = True
+        req.state = "done"
         self.decoding.pop(req.slot, None)
         if self.prefix_cache is not None:
             # cache the request's completed prompt prefix BEFORE releasing:
@@ -303,7 +445,7 @@ class Scheduler:
     @property
     def num_unfinished(self) -> int:
         return (len(self.waiting) + len(self.prefilling)
-                + len(self.decoding))
+                + len(self.decoding) + len(self.preempted))
 
 
 @jax.jit
@@ -316,6 +458,15 @@ def _logit_stats(logits: jax.Array, tokens: jax.Array
 
     ``tokens`` (B,) selects each row's chosen token; the logprob gather
     happens device-side so only (B,)-sized results ever reach the host.
+
+    ``round_off`` is the in-band numerical-fault detector
+    (``repro.serving.faults.NumericsGuard``): the relative deviation
+    between the engine's compensated row sum and a naive float32 sum of
+    the same row — i.e. the naive stream's accumulated round-off, the
+    quantity Dukhan & Vondele's round-off-instruction proposal would
+    expose in hardware. Healthy rows sit near float32 epsilon;
+    catastrophic cancellation or corrupted logits push it orders of
+    magnitude higher.
     """
     l32 = logits.astype(jnp.float32)
     st = ops.batched_fused_reduce(l32, outputs=("max", "sum", "sumsq"))
@@ -325,9 +476,12 @@ def _logit_stats(logits: jax.Array, tokens: jax.Array
     lse = st["max"] + jnp.log(sumexp)
     chosen = jnp.take_along_axis(l32, tokens[:, None], axis=-1)[:, 0]
     vocab = logits.shape[-1]
+    naive = jnp.sum(l32, axis=-1)
     return {"logprob": chosen - lse, "logsumexp": lse, "max": st["max"],
             "mean": st["sum"] / vocab,
-            "rms": jnp.sqrt(st["sumsq"] / vocab)}
+            "rms": jnp.sqrt(st["sumsq"] / vocab),
+            "round_off": jnp.abs(st["sum"] - naive)
+            / (jnp.abs(st["sum"]) + 1.0)}
 
 
 def _sample_row(row: jax.Array, temperature: jax.Array, key: jax.Array,
@@ -359,19 +513,39 @@ class DecodeEngine:
     capacity — every slot could hold ``max_context``); passing a smaller
     pool oversubscribes slots against blocks and the scheduler's admission
     gate enforces real availability.
+
+    ``preempt`` arms preemption-to-host under pool pressure: when the
+    FIFO head cannot be admitted, a decoding victim's blocks snapshot to
+    host memory (``KVSwap``) and it re-admits bitwise later. ``"lru"``
+    picks the most recently admitted victim (least completed work to
+    redo), ``"priority"`` the lowest ``Request.priority`` strictly below
+    the head's. ``guard`` (default on) is the per-step logit health
+    check; ``fault_injector`` arms the keyed fault-injection harness.
     """
+
+    PREEMPT_POLICIES = ("off", "lru", "priority")
 
     def __init__(self, cfg: ModelConfig, params, *, max_slots: int = 4,
                  max_context: int = 256,
                  block_size: int = DEFAULT_BLOCK_SIZE,
                  num_blocks: int | None = None, prefill_chunk: int = 32,
-                 prefix_cache: bool = False):
+                 prefix_cache: bool = False, preempt: str = "off",
+                 guard: NumericsGuard | None = NumericsGuard(),
+                 fault_injector=None):
         assert cfg.family in ("dense", "moe", "ssm", "vlm"), cfg.family
         if prefix_cache and cfg.family == "ssm":
             raise ValueError(
                 "prefix caching shares paged KV blocks; the 'ssm' family "
                 "carries constant-size recurrent state with no per-token "
                 "KV to share")
+        if preempt not in self.PREEMPT_POLICIES:
+            raise ValueError(f"preempt must be one of "
+                             f"{self.PREEMPT_POLICIES}, got {preempt!r}")
+        if preempt != "off" and cfg.family == "ssm":
+            raise ValueError(
+                "preemption snapshots paged KV blocks; the 'ssm' family "
+                "carries recurrent state that cannot be swapped out "
+                "block-wise")
         self.cfg = cfg
         self.params = params
         self.max_slots = max_slots
@@ -386,6 +560,12 @@ class DecodeEngine:
         self.scheduler = Scheduler(allocator, max_slots, self.layout,
                                    prefill_chunk,
                                    prefix_cache=self.prefix_cache)
+        self.preempt_policy = preempt
+        self.guard = guard
+        self.injector = fault_injector
+        self.swap = KVSwap()
+        self.quarantined: list[Request] = []
+        self._step_count = 0
 
         self._prefill_chunk = jax.jit(api.prefill_chunk_fn(cfg))
         self._decode = jax.jit(api.decode_fn(cfg))
@@ -420,63 +600,55 @@ class DecodeEngine:
         # engine's per-token pool bytes, the same unit as paged_bytes —
         # and ``prefix_hit_tokens / prefix_prompt_tokens`` is the hit
         # rate repro.ecm.tpu.predicted_prefill_speedup forecasts from.
+        # Fault-tolerance counters ride the same dict: preempted /
+        # restored_blocks / guard_trips are the bench_serving trajectory
+        # columns; stall_diagnostics appears only after a StallError.
         self.kv_stats = {"paged_bytes": 0, "paged_bytes_bf16": 0,
                          "contiguous_bytes": 0,
                          "decode_steps": 0, "prefill_chunks": 0,
                          "prefill_tokens": 0,
                          "prefix_hit_tokens": 0, "prefix_prompt_tokens": 0,
                          "prefix_saved_bytes": 0, "prefix_cow_blocks": 0,
-                         "prefix_evicted_blocks": 0}
+                         "prefix_evicted_blocks": 0,
+                         "preempted": 0, "preempted_blocks": 0,
+                         "restored_blocks": 0, "guard_trips": 0,
+                         "cancelled": 0, "expired": 0, "alloc_faults": 0,
+                         "stalled_requests": 0}
 
     # ------------------------------------------------------------ API -----
 
     def submit(self, req: Request) -> None:
         """Enqueue a request. Never fails on a full slot/block pool — the
-        scheduler admits FIFO as capacity frees up."""
+        scheduler admits FIFO as capacity frees up. Raises
+        ``AdmissionError`` for requests that could NEVER run (context
+        overflow, pool oversubmit, bad deadline)."""
+        req.submit_step = self._step_count
+        req.last_progress_step = self._step_count
         self.scheduler.submit(req)
 
     def step(self) -> None:
-        """One engine step: admit, run at most one prefill chunk, then one
-        batched decode step for every decoding slot."""
-        for req in self.scheduler.admit():
-            row = np.full((self.layout.max_blocks,), NULL_BLOCK, np.int32)
-            row[:len(req.blocks)] = req.blocks
-            self.caches = self._reset_slot(self.caches,
-                                           jnp.int32(req.slot),
-                                           jnp.asarray(row))
-            if req.cow_src is not None:
-                # copy-on-write at the divergence block: the request's
-                # table already points at the fresh copy target; fill it
-                # from the shared block, then drop the admission-time
-                # protective reference on the source
-                dst = req.blocks[req.prefix_hit // self.layout.block_size]
-                self.caches = self._copy_block(self.caches,
-                                               jnp.int32(req.cow_src),
-                                               jnp.int32(dst))
-                self.scheduler.allocator.release([req.cow_src])
-                req.cow_src = None
-            if req.prefix_hit:
-                # Pre-set the slot's cached length to the hit: readers
-                # mask correctly from the first chunk, and the batched
-                # decode's stray write for this mid-prefill slot lands at
-                # the request's OWN first writable position — never
-                # inside a shared block.
-                self.caches = self._set_lens(
-                    self.caches, jnp.asarray([req.slot], jnp.int32),
-                    jnp.asarray([req.prefix_hit], jnp.int32))
-            if self.prefix_cache is not None:
-                # one source of truth: PrefixCache.stats (fed by
-                # note_admitted/evict) — the engine only mirrors, and
-                # prices hit tokens at its per-token pool bytes
-                cs = self.prefix_cache.stats
-                self.kv_stats.update(
-                    prefix_hit_tokens=cs["hit_tokens"],
-                    prefix_prompt_tokens=cs["prompt_tokens"],
-                    prefix_cow_blocks=cs["cow_blocks"],
-                    prefix_evicted_blocks=cs["evicted_blocks"],
-                    prefix_saved_bytes=cs["hit_tokens"]
-                    * self._token_bytes)
-            self._on_admit(req)
+        """One engine step: expire deadlines, admit (preempting a victim
+        to host under pool pressure if armed), run at most one prefill
+        chunk, then one batched decode step for every decoding slot."""
+        self._step_count += 1
+        self._expire_deadlines()
+        if self.injector is not None:
+            self._inject_step_faults()
+        admitted = self.scheduler.admit()
+        if self.preempt_policy != "off":
+            # pool pressure: the FIFO head couldn't be admitted — swap a
+            # decoding victim's blocks to host and retry (bounded by the
+            # slot count; each spin shrinks the decode batch by one)
+            spins = 0
+            while (self.scheduler.waiting and self.scheduler.decoding
+                   and spins < self.max_slots and self._preempt_for_head()):
+                spins += 1
+                admitted += self.scheduler.admit()
+        for req in admitted:
+            if req.state == "preempted":
+                self._restore(req)
+            else:
+                self._admit_slot(req)
 
         nxt = self.scheduler.next_chunk()
         if nxt is not None:
@@ -485,6 +657,7 @@ class DecodeEngine:
                 self.params, jnp.asarray([chunk], jnp.int32), self.caches,
                 jnp.int32(req.slot), jnp.int32(pos0))
             self._on_prefill_chunk(req, chunk, pos0)
+            req.last_progress_step = self._step_count
             # tokens the engine ACTUALLY pushed through the prefill path:
             # the measured side of the prefix-cache reduction (a cold
             # engine accumulates every prompt token here, a hit engine
@@ -497,6 +670,50 @@ class DecodeEngine:
 
         if self.scheduler.decoding:
             self._decode_step()
+        self.kv_stats["alloc_faults"] = self.scheduler.allocator.faults
+
+    def _admit_slot(self, req: Request) -> None:
+        """Device-side half of a fresh admission: point the slot's table
+        at the request's blocks, run the COW copy, pre-set the prefix-hit
+        length, mirror prefix stats."""
+        row = np.full((self.layout.max_blocks,), NULL_BLOCK, np.int32)
+        row[:len(req.blocks)] = req.blocks
+        self.caches = self._reset_slot(self.caches,
+                                       jnp.int32(req.slot),
+                                       jnp.asarray(row))
+        if req.cow_src is not None:
+            # copy-on-write at the divergence block: the request's
+            # table already points at the fresh copy target; fill it
+            # from the shared block, then drop the admission-time
+            # protective reference on the source
+            dst = req.blocks[req.prefix_hit // self.layout.block_size]
+            self.caches = self._copy_block(self.caches,
+                                           jnp.int32(req.cow_src),
+                                           jnp.int32(dst))
+            self.scheduler.allocator.release([req.cow_src])
+            req.cow_src = None
+        if req.prefix_hit:
+            # Pre-set the slot's cached length to the hit: readers
+            # mask correctly from the first chunk, and the batched
+            # decode's stray write for this mid-prefill slot lands at
+            # the request's OWN first writable position — never
+            # inside a shared block.
+            self.caches = self._set_lens(
+                self.caches, jnp.asarray([req.slot], jnp.int32),
+                jnp.asarray([req.prefix_hit], jnp.int32))
+        if self.prefix_cache is not None:
+            # one source of truth: PrefixCache.stats (fed by
+            # note_admitted/evict) — the engine only mirrors, and
+            # prices hit tokens at its per-token pool bytes
+            cs = self.prefix_cache.stats
+            self.kv_stats.update(
+                prefix_hit_tokens=cs["hit_tokens"],
+                prefix_prompt_tokens=cs["prompt_tokens"],
+                prefix_cow_blocks=cs["cow_blocks"],
+                prefix_evicted_blocks=cs["evicted_blocks"],
+                prefix_saved_bytes=cs["hit_tokens"]
+                * self._token_bytes)
+        self._on_admit(req)
 
     # Subclass hooks (speculative engine mirrors these into its proposer).
     def _on_admit(self, req: Request) -> None:
@@ -509,11 +726,234 @@ class DecodeEngine:
     def _on_retire(self, req: Request) -> None:
         pass
 
+    def _on_preempt(self, req: Request) -> None:
+        pass
+
+    def _on_restore(self, req: Request) -> None:
+        pass
+
+    def _on_drop(self, req: Request) -> None:
+        """A slot-holding request leaves the engine abnormally
+        (cancelled / expired / quarantined); ``req.slot`` is still
+        valid. Subclasses tear down mirror state here."""
+
     def run_until_done(self, max_steps: int = 10_000) -> None:
+        """Drive steps until every request finishes. Raises ``StallError``
+        (with per-request diagnostics, mirrored into
+        ``kv_stats['stall_diagnostics']``) if ``max_steps`` pass with
+        work still pending — a silent return here used to mask livelocks
+        and left callers holding half-finished requests."""
         for _ in range(max_steps):
             if not self.scheduler.num_unfinished:
                 return
             self.step()
+        if self.scheduler.num_unfinished:
+            diags = self.request_diagnostics()
+            self.kv_stats["stalled_requests"] = len(diags)
+            self.kv_stats["stall_diagnostics"] = diags
+            raise StallError(
+                f"{len(diags)} requests unfinished after {max_steps} "
+                f"steps", diags)
+
+    def request_diagnostics(self) -> list[dict]:
+        """One dict per in-flight request: queue state, slot, blocks
+        held, prefill/emit progress, steps since last progress."""
+        sched = self.scheduler
+        out = []
+        for state, reqs in (("waiting", sched.waiting),
+                            ("prefilling", sched.prefilling),
+                            ("decoding", sched.decoding.values()),
+                            ("preempted", sched.preempted)):
+            for req in reqs:
+                out.append({
+                    "rid": req.rid, "state": state, "slot": req.slot,
+                    "blocks_held": len(req.blocks),
+                    "prefill_pos": req.prefill_pos,
+                    "emitted": len(req.output),
+                    "steps_since_progress":
+                        self._step_count - req.last_progress_step,
+                })
+        return out
+
+    # ----------------------------------------------- lifecycle control ----
+
+    def _in_flight(self) -> list[Request]:
+        sched = self.scheduler
+        return (list(sched.waiting) + list(sched.prefilling)
+                + list(sched.decoding.values()) + list(sched.preempted))
+
+    def cancel(self, rid: int) -> bool:
+        """Cancel an in-flight request wherever it is (waiting,
+        prefilling, decoding, preempted), releasing its slot, refcounted
+        blocks (trie-shared blocks survive via their remaining
+        references), swap snapshot and proposer mirror state. Returns
+        False if no such request is in flight."""
+        for req in self._in_flight():
+            if req.rid == rid:
+                return self._terminate(req, "cancelled")
+        return False
+
+    def cancel_all(self) -> int:
+        """Cancel everything in flight (the serve loop's hard-shutdown
+        path); returns how many requests were cancelled."""
+        return sum(self._terminate(r, "cancelled")
+                   for r in self._in_flight())
+
+    def _expire_deadlines(self) -> None:
+        for req in self._in_flight():
+            if (req.deadline_steps is not None
+                    and self._step_count - req.submit_step
+                    > req.deadline_steps):
+                self._terminate(req, "expired")
+
+    def _terminate(self, req: Request, state: str) -> bool:
+        sched = self.scheduler
+        slot = req.slot
+        preempted = req in sched.preempted
+        active = slot is not None and (req in sched.prefilling
+                                       or sched.decoding.get(slot) is req)
+        if active:
+            # mirror teardown needs the slot still valid
+            self._on_drop(req)
+        if not sched.drop(req, state):
+            return False
+        if preempted:
+            self.swap.drop(req.rid)
+        if active:
+            null_row = jnp.full((self.layout.max_blocks,), NULL_BLOCK,
+                                jnp.int32)
+            self.caches = self._reset_slot(self.caches, jnp.int32(slot),
+                                           null_row)
+            req.slot = None
+        self.kv_stats[state] += 1
+        return True
+
+    # ------------------------------------------------ preemption-to-host --
+
+    def preempt(self, rid: int) -> None:
+        """Preempt a DECODING request: snapshot its blocks (every pool
+        leaf, scale tiles included) to host memory, release them, free
+        the slot. The request re-admits — bitwise — once the waiting
+        queue has drained (``Scheduler.admit``)."""
+        req = next((r for r in self.scheduler.decoding.values()
+                    if r.rid == rid), None)
+        if req is None:
+            raise KeyError(
+                f"request {rid} is not decoding; only decoding requests "
+                f"hold restorable KV state")
+        slot = req.slot
+        self.swap.swap_out(rid, self.caches, req.blocks)
+        self.kv_stats["preempted"] += 1
+        self.kv_stats["preempted_blocks"] += len(req.blocks)
+        self._on_preempt(req)
+        self.scheduler.preempt(req)
+        null_row = jnp.full((self.layout.max_blocks,), NULL_BLOCK,
+                            jnp.int32)
+        self.caches = self._reset_slot(self.caches, jnp.int32(slot),
+                                       null_row)
+
+    def _preempt_for_head(self) -> bool:
+        """Pick and preempt one victim to make room for the FIFO head;
+        False when the policy yields no eligible victim."""
+        head = self.scheduler.waiting[0]
+        cands = list(self.scheduler.decoding.values())
+        if self.preempt_policy == "priority":
+            victim = min(cands, key=lambda r: (r.priority, -r.admit_seq))
+            if victim.priority >= head.priority:
+                return False
+        else:   # "lru": most recently admitted — least completed work
+            victim = max(cands, key=lambda r: r.admit_seq)
+        self.preempt(victim.rid)
+        return True
+
+    def _restore(self, req: Request) -> None:
+        """Device-side half of re-admission after preemption: fresh
+        blocks are already allocated (IDs need not match the originals —
+        content is table-addressed), the host snapshot scatters back,
+        and the cached length returns to ``prompt + emitted - 1`` (the
+        last emitted token is pending in ``_next_tokens``, exactly the
+        decode-step invariant). Decoding resumes bitwise."""
+        row = np.full((self.layout.max_blocks,), NULL_BLOCK, np.int32)
+        row[:len(req.blocks)] = req.blocks
+        self.caches = self._reset_slot(self.caches, jnp.int32(req.slot),
+                                       jnp.asarray(row))
+        self.caches = self.swap.swap_in(req.rid, self.caches, req.blocks)
+        kvlen = req.prefill_pos + len(req.output) - 1
+        self.caches = self._set_lens(
+            self.caches, jnp.asarray([req.slot], jnp.int32),
+            jnp.asarray([kvlen], jnp.int32))
+        self._next_tokens = self._next_tokens.at[req.slot, 0].set(
+            int(req.output[-1]))
+        self.kv_stats["restored_blocks"] += len(req.blocks)
+        req.last_progress_step = self._step_count
+        self.scheduler.start_decoding(req)
+        self._on_restore(req)
+
+    # -------------------------------------------- faults & quarantine -----
+
+    def _inject_step_faults(self) -> None:
+        """Step-granular injection sites: corrupt a decoding victim's KV
+        block (NaNs in float pool leaves / scale tiles — the numerics
+        guard must catch the fallout) and arm a one-shot allocator
+        failure (the admission path must absorb it)."""
+        step = self._step_count
+        if (self.scheduler.decoding
+                and self.injector.fire("kv_corrupt", step)):
+            reqs = [self.scheduler.decoding[s]
+                    for s in sorted(self.scheduler.decoding)]
+            victim = reqs[self.injector.choose("kv_corrupt", step,
+                                               len(reqs))]
+            alloc = self.scheduler.allocator
+            bs = self.layout.block_size
+            # prefer a privately held block that already carries cached
+            # tokens: its NaNs enter the victim's very next attention
+            # read (shared blocks would poison innocent readers)
+            priv = [b for b in victim.blocks if alloc.refcount(b) == 1]
+            cached = [b for i, b in enumerate(victim.blocks)
+                      if alloc.refcount(b) == 1
+                      and i * bs < victim.num_cached - 1]
+            target = (cached or priv)[:1]
+            if target:
+                self.caches = paged.poison_blocks(self.caches, target)
+        if self.injector.fire("alloc_fail", self._step_count):
+            self.scheduler.allocator.fail_next = True
+
+    def _guard_tripped(self, stats: dict, row_reqs) -> list:
+        """Evaluate the numerics guard over host-side stats rows;
+        returns [(req, reason)] for every tripped row."""
+        if self.guard is None:
+            return []
+        out = []
+        for idx, req in row_reqs:
+            reason = self.guard.check_row(stats, idx)
+            if reason is not None:
+                out.append((req, reason))
+        return out
+
+    def _quarantine(self, req: Request, reason: str) -> None:
+        """A numerics guard tripped on this slot: scrub the request's
+        privately held blocks (NaNs must never ride a recycled block —
+        masked attention's exact-zero weights still produce 0 * NaN =
+        NaN), release everything, and park the request on
+        ``self.quarantined`` for a degraded-path retry
+        (``repro.serving.faults.FailoverServer``) instead of letting it
+        poison the batch."""
+        self.kv_stats["guard_trips"] += 1
+        req.error = reason
+        self._on_drop(req)
+        alloc = self.scheduler.allocator
+        scrub = [b for b in req.blocks if alloc.refcount(b) == 1]
+        if scrub:
+            self.caches = paged.zero_blocks(self.caches, scrub)
+        slot = req.slot
+        dropped = self.scheduler.drop(req, "quarantined")
+        assert dropped, f"quarantine of request {req.rid} not in flight"
+        null_row = jnp.full((self.layout.max_blocks,), NULL_BLOCK,
+                            jnp.int32)
+        self.caches = self._reset_slot(self.caches, jnp.int32(slot),
+                                       null_row)
+        req.slot = None
+        self.quarantined.append(req)
 
     @property
     def num_active(self) -> int:
@@ -554,8 +994,17 @@ class DecodeEngine:
         tok = self._choose_token(req, logits[0])
         stats = _logit_stats(logits.reshape(1, -1),
                              jnp.asarray([tok], jnp.int32))
+        host_stats = {k: np.asarray(v) for k, v in stats.items()}
+        tripped = self._guard_tripped(host_stats, [(0, req)])
+        if tripped:
+            # not yet registered as decoding — route through the shared
+            # quarantine path so slot + blocks release uniformly
+            self.scheduler.start_decoding(req)
+            self._quarantine(req, tripped[0][1])
+            return
         req.output.append(tok)
         req.logprobs.append(float(stats["logprob"][0]))
+        req.last_progress_step = self._step_count
         self._next_tokens = self._next_tokens.at[req.slot, 0].set(tok)
         if self._finished(req, tok):
             self._retire(req)
@@ -578,6 +1027,14 @@ class DecodeEngine:
             self.caches = self._keep_slots(before, self.caches,
                                            jnp.asarray(mask))
         rows = logits.reshape(logits.shape[0], -1)
+        if (self.injector is not None
+                and self.injector.fire("logit_nan", self._step_count)):
+            # fault injection: NaN one decoding victim's whole logit row
+            # — the guard's nonfinite sentinel must quarantine it
+            slots_sorted = sorted(self.scheduler.decoding)
+            victim = slots_sorted[self.injector.choose(
+                "logit_nan", self._step_count, len(slots_sorted))]
+            rows = rows.at[victim].set(jnp.nan)
         tokens_dev = jnp.argmax(rows, axis=-1).astype(jnp.int32)
         sampled = {slot: req for slot, req in self.scheduler.decoding.items()
                    if req.temperature > 0.0}
@@ -608,14 +1065,23 @@ class DecodeEngine:
         logprobs = np.asarray(stats["logprob"])
         self.last_logit_stats = {k: np.asarray(v) for k, v in stats.items()}
         self._account_decode()
+        tripped = self._guard_tripped(
+            self.last_logit_stats,
+            [(slot, req) for slot, req in self.scheduler.decoding.items()])
+        skip = {req.rid for req, _ in tripped}
         retired = []
         for slot, req in self.scheduler.decoding.items():
+            if req.rid in skip:
+                continue
             tok = int(tokens[slot])
             req.output.append(tok)
             req.logprobs.append(float(logprobs[slot]))
+            req.last_progress_step = self._step_count
             self._next_tokens = self._next_tokens.at[slot, 0].set(tok)
             if self._finished(req, tok):
                 retired.append(req)
+        for req, reason in tripped:
+            self._quarantine(req, reason)
         for req in retired:
             self._retire(req)
 
@@ -698,7 +1164,7 @@ class SpecDecodeEngine(DecodeEngine):
         self._verify = jax.jit(api.verify_fn(cfg))
         self.kv_stats.update({"spec_steps": 0, "spec_slot_steps": 0,
                               "spec_drafted": 0, "spec_accepted": 0,
-                              "spec_emitted": 0})
+                              "spec_emitted": 0, "proposer_stalls": 0})
         proposer.attach(self)
 
     # proposer mirrors admission, prompt caching and retirement ----------
@@ -710,6 +1176,17 @@ class SpecDecodeEngine(DecodeEngine):
         self.proposer.on_prefill_chunk(req, chunk, pos0)
 
     def _on_retire(self, req: Request) -> None:
+        self.proposer.on_retire(req)
+
+    def _on_preempt(self, req: Request) -> None:
+        self.proposer.on_preempt(req)
+
+    def _on_restore(self, req: Request) -> None:
+        self.proposer.on_restore(req)
+
+    def _on_drop(self, req: Request) -> None:
+        # cancellation/expiry/quarantine: the mirror slot resets exactly
+        # like retirement — the draft cache holds no refcounted blocks
         self.proposer.on_retire(req)
 
     # ------------------------------------------------------- spec step ----
@@ -733,7 +1210,22 @@ class SpecDecodeEngine(DecodeEngine):
         decoding = [self.scheduler.decoding[s]
                     for s in sorted(self.scheduler.decoding)]
         ks = [self._effective_k(r) for r in decoding]
-        drafts, qdists = self.proposer.propose(decoding, ks)
+        stalled = (self.injector is not None
+                   and self.injector.fire("proposer_stall",
+                                          self._step_count))
+        if not stalled:
+            try:
+                drafts, qdists = self.proposer.propose(decoding, ks)
+            except ProposerStallError:
+                stalled = True
+        if stalled:
+            # degrade, don't crash: zero drafts turn this step into the
+            # plain verify-path decode (k == 0 for every slot) — one
+            # token per slot, exact, just unaccelerated
+            drafts = [[] for _ in decoding]
+            qdists = [None] * len(decoding)
+            ks = [0] * len(decoding)
+            self.kv_stats["proposer_stalls"] += 1
 
         window = self.spec_k + 1
         tokens, slots, pos0s = pack_windows(decoding, ks, drafts,
@@ -741,6 +1233,11 @@ class SpecDecodeEngine(DecodeEngine):
         logits, self.caches = self._verify(
             self.params, jnp.asarray(tokens), self.caches,
             jnp.asarray(slots), jnp.asarray(pos0s))
+        if (self.injector is not None
+                and self.injector.fire("logit_nan", self._step_count)):
+            victim = self.injector.choose("logit_nan", self._step_count,
+                                          len(decoding))
+            logits = logits.at[victim].set(jnp.nan)
         argmax = np.asarray(jnp.argmax(logits, axis=-1))       # [B, C]
         # Greedy batches keep the host-transfer discipline (only the
         # [B, C] argmax crosses). Exact accept/residual math for SAMPLED
@@ -786,8 +1283,14 @@ class SpecDecodeEngine(DecodeEngine):
 
         self._account_spec(pos0s[:len(decoding)], ks, emitted_all, accepted)
 
+        tripped = self._guard_tripped(
+            self.last_logit_stats,
+            [(i, req) for i, req in enumerate(decoding)])
+        skip = {req.rid for req, _ in tripped}
         retired, alive, alive_lens = [], [], []
         for i, req in enumerate(decoding):
+            if req.rid in skip:
+                continue
             done = False
             for j, tok in enumerate(emitted_all[i]):
                 req.output.append(int(tok))
@@ -795,6 +1298,7 @@ class SpecDecodeEngine(DecodeEngine):
                 if self._finished(req, int(tok)):
                     done = True
                     break
+            req.last_progress_step = self._step_count
             self._next_tokens = self._next_tokens.at[req.slot, 0].set(
                 req.output[-1])
             if done:
@@ -803,6 +1307,8 @@ class SpecDecodeEngine(DecodeEngine):
                 alive.append(req)
                 alive_lens.append(new_lens[i])
         self.proposer.sync(alive, alive_lens)
+        for req, reason in tripped:
+            self._quarantine(req, reason)
         for req in retired:
             self._retire(req)
 

@@ -1,0 +1,84 @@
+"""Preemption-to-host: snapshot a victim slot's KV blocks to host
+memory, restore them bitwise on re-admission.
+
+Under pool pressure the scheduler can preempt a decoding request instead
+of letting the head of the FIFO queue wait forever: the victim's pool
+blocks — EVERY pool leaf, quantized payloads and their per-block scale
+tiles alike (``paged.extract_blocks``) — are copied to host memory, the
+blocks are released, and the slot is freed. When capacity returns, the
+request is re-admitted: fresh blocks are allocated (their IDs need not
+match — content is addressed through the slot's table, and table
+permutation is bitwise invisible), the snapshot is scattered back
+(``paged.restore_blocks``), the slot's cached length is restored to
+``prefill_pos + emitted - 1`` (the last emitted token lives in the
+engine's pending-token buffer, not the cache — the same bookkeeping the
+verify window uses), and decoding resumes. Because every byte the
+request ever computed comes back exactly, the continuation is bitwise
+identical to a never-preempted run (tests/test_faults.py).
+
+Whether restoring beats re-running prefill is an ECM crossover — restore
+moves ``tokens x token_bytes`` over the host link, re-prefill re-spends
+``tokens x flops_per_token`` on the MXU — modeled in
+``repro.ecm.tpu.predicted_restore_vs_reprefill``: for anything but toy
+models the host-link copy wins by orders of magnitude.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.models import paged
+
+
+class KVSwap:
+    """Host-memory tier for preempted requests' KV blocks.
+
+    One snapshot per request id: ``swap_out`` gathers the listed blocks
+    from every pool leaf to host numpy arrays, ``swap_in`` scatters them
+    back into (possibly different) blocks and forgets the snapshot,
+    ``drop`` forgets it without restoring (cancellation/expiry while
+    preempted)."""
+
+    def __init__(self):
+        self._store: dict[int, dict[str, np.ndarray]] = {}
+        self._nblocks: dict[int, int] = {}
+        # host_bytes is CURRENT residency (drops back on swap_in/drop);
+        # host_bytes_total accumulates all swap-out traffic ever moved
+        self.stats = {"swapped_out_blocks": 0, "restored_blocks": 0,
+                      "dropped_blocks": 0, "host_bytes": 0,
+                      "host_bytes_total": 0}
+
+    def __len__(self) -> int:
+        return len(self._store)
+
+    def holds(self, rid: int) -> bool:
+        return rid in self._store
+
+    def swap_out(self, rid: int, caches, blocks: list[int]) -> None:
+        assert rid not in self._store, f"request {rid} already swapped out"
+        snap = {k: np.asarray(v)
+                for k, v in paged.extract_blocks(caches, blocks).items()}
+        self._store[rid] = snap
+        self._nblocks[rid] = len(blocks)
+        self.stats["swapped_out_blocks"] += len(blocks)
+        nbytes = sum(a.nbytes for a in snap.values())
+        self.stats["host_bytes"] += nbytes
+        self.stats["host_bytes_total"] += nbytes
+
+    def swap_in(self, rid: int, caches, blocks: list[int]):
+        """Restore ``rid``'s snapshot into ``blocks`` (same count, any
+        IDs); returns the updated cache tree."""
+        snap = self._store.pop(rid)
+        n = self._nblocks.pop(rid)
+        assert len(blocks) == n, (
+            f"request {rid}: snapshot holds {n} blocks, restore offered "
+            f"{len(blocks)}")
+        self.stats["restored_blocks"] += len(blocks)
+        self.stats["host_bytes"] -= sum(a.nbytes for a in snap.values())
+        return paged.restore_blocks(caches, blocks, snap)
+
+    def drop(self, rid: int) -> None:
+        if rid in self._store:
+            snap = self._store.pop(rid)
+            self.stats["dropped_blocks"] += self._nblocks.pop(rid)
+            self.stats["host_bytes"] -= sum(a.nbytes for a in snap.values())

@@ -21,9 +21,11 @@ Two strategies with opposite cost profiles:
     target uses.
 
 Proposers see the engine through a narrow hook surface (``attach`` /
-``on_admit`` / ``on_prefill_chunk`` / ``on_retire`` / ``propose`` /
-``sync``); the scheduler guarantees ``propose`` is only ever called for
-slots that finished prefill — a mid-chunked-prefill slot is never drafted.
+``on_admit`` / ``on_prefill_chunk`` / ``on_retire`` / ``on_preempt`` /
+``on_restore`` / ``propose`` / ``sync``); the scheduler guarantees
+``propose`` is only ever called for slots that finished prefill — a
+mid-chunked-prefill slot is never drafted, and a preempted slot's mirror
+is torn down and replayed on restore.
 """
 
 from __future__ import annotations
@@ -53,6 +55,16 @@ class Proposer:
 
     def on_retire(self, req) -> None:
         """``req`` left its slot; release any per-slot state."""
+
+    def on_preempt(self, req) -> None:
+        """``req`` was preempted to host (slot still valid when called).
+        Default: indistinguishable from retirement — drop slot state."""
+        self.on_retire(req)
+
+    def on_restore(self, req) -> None:
+        """``req`` re-admitted after preemption: the TARGET cache came
+        back bitwise from the host snapshot; rebuild whatever mirror
+        state the proposer needs for ``req.slot``."""
 
     def propose(self, reqs: list, ks: list[int]
                 ) -> tuple[list[list[int]], list]:
@@ -181,6 +193,25 @@ class DraftModelProposer(Proposer):
     def on_retire(self, req) -> None:
         self.caches = self._reset_slot(self.caches, jnp.int32(req.slot),
                                        self._null_row)
+
+    def on_restore(self, req) -> None:
+        # The draft mirror was torn down at preemption (on_preempt ->
+        # on_retire); rebuild it by replaying the request's entire known
+        # history — prompt plus all-but-the-last emitted token (the last
+        # one is pending, exactly the target's restore invariant) —
+        # through the same chunked prefill path the admission-time
+        # prefix-hit replay uses. The draft re-derives its KV from
+        # tokens alone, so the mirror's cached length lands back at the
+        # target's restored length and drafting resumes seamlessly.
+        self.caches = self._reset_slot(
+            self.caches, jnp.int32(req.slot),
+            jnp.asarray(self._identity[req.slot]))
+        hist = list(req.prompt) + [int(t) for t in req.output[:-1]]
+        pos = 0
+        while pos < len(hist):
+            end = min(pos + self._chunk_size, len(hist))
+            self.on_prefill_chunk(req, hist[pos:end], pos)
+            pos = end
 
     def propose(self, reqs, ks):
         k_max = max(ks) if ks else 0

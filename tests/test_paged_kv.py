@@ -14,6 +14,7 @@ from repro.models import api, common, paged
 from repro.models.attention import attend_cache
 from repro.models.paged import PagedLayout
 from repro.serving.engine import BlockAllocator, DecodeEngine, Request
+from repro.serving.faults import AllocatorError
 
 
 # ------------------------------------------------------------ allocator ----
@@ -36,10 +37,15 @@ def test_allocator_alloc_free_reuse():
 def test_allocator_exhaustion_and_double_free():
     a = BlockAllocator(num_blocks=4)
     blocks = a.alloc(3)
-    with pytest.raises(RuntimeError):
+    # AllocatorError subclasses RuntimeError: recoverable (admission
+    # catches it and lets the queue head wait) yet still a loud failure
+    # for callers that don't
+    with pytest.raises(AllocatorError):
+        a.alloc(1)
+    with pytest.raises(RuntimeError):           # back-compat contract
         a.alloc(1)
     a.free(blocks)
-    with pytest.raises(AssertionError):
+    with pytest.raises(AllocatorError):
         a.free(blocks)                          # double free detected
 
 

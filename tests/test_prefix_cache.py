@@ -29,6 +29,7 @@ from repro.configs import get_config, reduced
 from repro.models import api, common, paged
 from repro.serving.engine import (BlockAllocator, DecodeEngine, Request,
                                   SpecDecodeEngine)
+from repro.serving.faults import AllocatorError
 from repro.serving.prefix_cache import PrefixCache
 from repro.spec import NGramProposer
 
@@ -453,9 +454,9 @@ def test_allocator_refcounts():
     assert a.num_free == 3 and all(a.refcount(b) == 1 for b in x)
     a.release(x)                     # last reference: back to the pool
     assert a.num_free == 5 and all(a.refcount(b) == 0 for b in x)
-    with pytest.raises(AssertionError):
+    with pytest.raises(AllocatorError):
         a.release(x)                 # double free
-    with pytest.raises(AssertionError):
+    with pytest.raises(AllocatorError):
         a.retain([x[0]])             # retain of a free block
 
 

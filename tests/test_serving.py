@@ -10,6 +10,7 @@ import pytest
 from repro.configs import get_config, reduced
 from repro.models import api, common, paged
 from repro.serving.engine import DecodeEngine, Request
+from repro.serving.faults import AdmissionError
 
 
 @pytest.fixture(scope="module")
@@ -143,9 +144,13 @@ def test_chunked_prefill_interleaves_with_decode(setup):
 def test_context_overflow_rejected(setup):
     cfg, params = setup
     engine = _engine(cfg, params, max_slots=2)
-    with pytest.raises(ValueError):
+    # AdmissionError subclasses ValueError — both contracts hold
+    with pytest.raises(AdmissionError):
         engine.submit(Request(rid=0, prompt=list(range(60)),
                               max_new_tokens=10))   # 70 > 64
+    with pytest.raises(ValueError):
+        engine.submit(Request(rid=0, prompt=list(range(60)),
+                              max_new_tokens=10))
 
 
 def test_ssm_family_engine():
@@ -189,7 +194,7 @@ def test_submit_rejects_pool_overflow(setup):
     cfg, params = setup
     engine = _engine(cfg, params, max_slots=2, max_context=64,
                      num_blocks=3)     # 2 usable blocks = 32 tokens
-    with pytest.raises(ValueError):
+    with pytest.raises(AdmissionError):
         engine.submit(Request(rid=0, prompt=[1] * 30, max_new_tokens=10))
     ok = Request(rid=1, prompt=[1] * 20, max_new_tokens=10)
     engine.submit(ok)
@@ -233,7 +238,7 @@ def test_logprobs_fused_path(setup):
     assert all(lp <= 0.0 for lp in req.logprobs)
     # the batched stats dict is exposed for monitoring
     assert set(engine.last_logit_stats) == {"logprob", "logsumexp", "max",
-                                            "mean", "rms"}
+                                            "mean", "rms", "round_off"}
 
 
 def test_sampling_deterministic_per_seed(setup):
