@@ -66,12 +66,12 @@ _MIX_SEED = {"short": 1, "mixed": 2, "long": 3}
 
 
 def _build(cfg, params, kind: str, slots: int, *, prefix_cache: bool,
-           **engine_kw):
+           block_size: int = BLOCK, **engine_kw):
     # fixed seed per cell: the CI perf-trajectory JSON must measure the
     # SAME workload every run (hash() is salted per process)
     rng = np.random.default_rng(100 * _MIX_SEED[kind] + slots)
     engine = DecodeEngine(cfg, params, max_slots=slots,
-                          max_context=MAX_CONTEXT, block_size=BLOCK,
+                          max_context=MAX_CONTEXT, block_size=block_size,
                           prefill_chunk=32, prefix_cache=prefix_cache,
                           **engine_kw)
     reqs = [Request(rid=i, prompt=p, max_new_tokens=MAX_NEW)
@@ -161,6 +161,38 @@ def _run_preempt_sweep(cfg, params, kind: str, slots: int) -> tuple:
             f" guard_trips={st['guard_trips']}")
 
 
+def _run_block_sweep(cfg, params, slots: int = 4) -> list[tuple]:
+    """Block-size sweep on the workload where paging is weakest: the long
+    mix at slots=4 reports kv_reduction < 1.0x at the default block=16 —
+    long sequences keep every block nearly full, so paging's win shrinks
+    to the tail padding while each partially-filled last block still
+    rounds traffic UP to a block multiple. Sweeping the block size maps
+    that trade: small blocks waste bookkeeping but touch almost exactly
+    ``len`` tokens; large blocks round a 90-token sequence up to 128.
+    The crossover row names the largest block size whose paged traffic
+    still beats the contiguous max_context row."""
+    rows, red = [], {}
+    for bs in (8, 16, 32, 64):
+        engine, reqs, dt = _build(cfg, params, "long", slots,
+                                  prefix_cache=True, block_size=bs)
+        st = engine.kv_stats
+        toks = sum(len(r.output) for r in reqs)
+        steps = max(st["decode_steps"] + st["prefill_chunks"], 1)
+        red[bs] = st["contiguous_bytes"] / max(st["paged_bytes"], 1)
+        rows.append((f"serving/blocksweep/long-sys32/bs={bs}",
+                     f"{dt * 1e6 / steps:.0f}",
+                     f"tok_s={toks / dt:.1f}"
+                     f" paged_kv_kib={st['paged_bytes'] / 1024:.0f}"
+                     f" contig_kv_kib={st['contiguous_bytes'] / 1024:.0f}"
+                     f" kv_reduction={red[bs]:.2f}x"
+                     f" prefix_hit={engine.prefix_hit_rate:.2f}"))
+    crossover = max((b for b in red if red[b] >= 1.0), default=None)
+    rows.append(("serving/blocksweep/long-sys32/crossover", "0",
+                 f"largest_bs_with_reduction_ge_1={crossover}"
+                 + "".join(f" bs{b}={red[b]:.2f}x" for b in sorted(red))))
+    return rows
+
+
 def run() -> list[tuple]:
     cfg = reduced(get_config("qwen1.5-0.5b")).with_(num_layers=2)
     params = common.init_params(api.schema(cfg), jax.random.key(0))
@@ -174,6 +206,7 @@ def run() -> list[tuple]:
         rows.append(_run_prefix_sweep(cfg, params, kind, 2))
     # preempt sweep: long prompts on a 16-block pool force swap-out
     rows.append(_run_preempt_sweep(cfg, params, "long", 4))
+    rows.extend(_run_block_sweep(cfg, params, 4))
     return rows
 
 

@@ -24,12 +24,23 @@ CLI:
                   PATH the name is derived deterministically from the git
                   commit (BENCH_<shortsha>.json) so the CI workflow can
                   commit it and the trajectory accumulates in-repo.
+  --compare PREV.json
+                  regression gate: after running, compare every series
+                  that reports ``tok_s=`` against the same series in a
+                  previous trajectory JSON and exit nonzero when any
+                  shared series lost more than --compare-tolerance of
+                  its throughput. Series only one side has are ignored
+                  (benches come and go); CI feeds the last committed
+                  BENCH_*.json so a PR cannot silently land a tok/s
+                  cliff.
+  --compare-tolerance FRAC   allowed fractional loss (default 0.20)
 """
 
 from __future__ import annotations
 
 import argparse
 import json
+import re
 import subprocess
 import traceback
 
@@ -65,6 +76,31 @@ def default_json_path() -> str:
     return f"BENCH_{sha or 'local'}.json"
 
 
+def _tok_s(derived: str) -> float | None:
+    m = re.search(r"\btok_s=([0-9.]+)", derived or "")
+    return float(m.group(1)) if m else None
+
+
+def find_regressions(current: list[dict], prev_path: str,
+                     tolerance: float = 0.20) -> tuple[list[tuple], int]:
+    """Compare ``tok_s=`` across series shared with a previous trajectory
+    JSON. Returns (regressions as (name, was, now), shared-series count).
+    Wall-clock on shared CI runners is noisy, so the gate is a wide one —
+    it exists to catch step-function cliffs (an accidental recompile per
+    step, a dtype falling off the fast path), not single-digit drift."""
+    with open(prev_path) as f:
+        prev = json.load(f)
+    ref = {r["name"]: _tok_s(r.get("derived", "")) for r in prev}
+    regressions, shared = [], 0
+    for row in current:
+        was, now = ref.get(row["name"]), _tok_s(row.get("derived", ""))
+        if was and now:
+            shared += 1
+            if now < was * (1.0 - tolerance):
+                regressions.append((row["name"], was, now))
+    return regressions, shared
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", action="append", default=None, metavar="SUBSTR",
@@ -73,6 +109,11 @@ def main() -> None:
                     const="auto",
                     help="also write results as JSON; omit PATH for the "
                          "deterministic per-commit BENCH_<shortsha>.json")
+    ap.add_argument("--compare", default=None, metavar="PREV.json",
+                    help="exit nonzero if any shared tok_s series lost "
+                         "more than --compare-tolerance vs this trajectory")
+    ap.add_argument("--compare-tolerance", type=float, default=0.20,
+                    metavar="FRAC", help="allowed fractional tok/s loss")
     args = ap.parse_args()
     if args.json == "auto":
         args.json = default_json_path()
@@ -103,6 +144,18 @@ def main() -> None:
         with open(args.json, "w") as f:
             json.dump(collected, f, indent=1)
         print(f"# wrote {len(collected)} rows to {args.json}")
+    if args.compare is not None:
+        regressions, shared = find_regressions(collected, args.compare,
+                                               args.compare_tolerance)
+        for name, was, now in regressions:
+            print(f"# REGRESSION {name}: tok_s {was:.1f} -> {now:.1f} "
+                  f"({now / was - 1.0:+.0%})")
+        if regressions:
+            raise SystemExit(
+                f"{len(regressions)} of {shared} shared series regressed "
+                f">{args.compare_tolerance:.0%} vs {args.compare}")
+        print(f"# compare vs {args.compare}: {shared} shared series "
+              f"within {args.compare_tolerance:.0%}")
     if failures:
         raise SystemExit(failures)
 

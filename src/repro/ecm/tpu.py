@@ -169,45 +169,66 @@ def vpu_ridge_flops_per_byte(hw: dict = TPU_V5E) -> float:
 # The paged decode walk streams each resident sequence's KV blocks once per
 # step — the serving engine's dominant HBM traffic (kv_stats counts exactly
 # these bytes). Per cached KV *element* the kernel does ~2 flops for the
-# q·k score, ~2 for the p·v fold; a quantized pool adds 1 dequant multiply
-# (scale amortizes over the vector) — so the arithmetic intensity stays far
-# below the VPU ridge and the ECM prediction is pure byte ratio: decode
-# speeds up by bytes_bf16 / bytes_quant. That ratio (< the naive 2× because
-# each vec_len-element tile carries a 4-byte f32 scale) is the analytic
-# bound benchmarks/bench_quant.py compares the measured tok/s against.
+# q·k score, ~2 for the p·v fold; a quantized pool adds dequant work whose
+# size depends on WHERE the dequant runs — the forecast is the overlap form
+# max(T_data, T_compute), and the dequant term is what makes it falsifiable
+# (a pure byte ratio predicts 1.88x for every format and can never match
+# the measured fp8 0.70x regression).
+#
+#   ``folded``  — the superkernel's formulation: scale tiles load once per
+#     (block, head) and fold post-dot into the [rows, block] score tile and
+#     the post-softmax probabilities, so the per-streamed-element overhead
+#     is ~1 multiply amortized over head_dim plus the widened (sum, carry)
+#     fold; fp8 additionally pays the bit-shift f8->f32 reinterpretation
+#     (3 integer ops) on the payload itself.
+#   ``native``  — the pre-superkernel formulation it replaced: dequantize
+#     the [block, head_dim] payload in registers before the dots — int8
+#     pays a full per-element multiply-widen, and fp8's elementwise
+#     f8e4m3->f32 convert expands to ~10 scalar-ish ops on XLA CPU/VPU,
+#     which is exactly what ate the byte savings (measured 0.70x; the
+#     calibrated forecast below reproduces it).
 
 DECODE_FLOPS_PER_KV_ELEM = 4.0      # qk dot + pv fold, per element streamed
-DEQUANT_FLOPS_PER_KV_ELEM = 1.0     # in-register scale multiply
+# dequant flops per streamed KV element, by formulation (calibration notes
+# above; benchmarks/bench_quant.py reports both forecasts vs measured)
+DEQUANT_FLOPS = {
+    "folded": {"bf16": 0.0, "int8": 1.0, "fp8": 3.0},
+    "native": {"bf16": 0.0, "int8": 2.0, "fp8": 10.0},
+}
 
 
-def paged_decode_spec(kv_dtype: str, vec_len: int = 64) -> TpuKernelSpec:
+def paged_decode_spec(kv_dtype: str, vec_len: int = 64,
+                      dequant: str = "folded") -> TpuKernelSpec:
     """Streaming-kernel spec of the paged decode walk per cached KV element.
 
     ``vec_len`` is the quantization tile length (head_dim for GQA pools,
-    the latent width for MLA) over which the 4-byte f32 scale amortizes.
-    """
+    the latent width for MLA) over which the 4-byte f32 scale amortizes;
+    ``dequant`` selects the formulation ("folded" — post-dot scale fold,
+    the superkernel; "native" — in-register payload dequant before the
+    dots, the formulation it replaced)."""
     from repro.quant.core import kv_bytes_per_value
     bytes_per = kv_bytes_per_value(kv_dtype, vec_len)
-    flops = DECODE_FLOPS_PER_KV_ELEM
-    if kv_dtype != "bf16":
-        flops += DEQUANT_FLOPS_PER_KV_ELEM
-    return TpuKernelSpec(f"paged_decode_{kv_dtype}",
+    flops = DECODE_FLOPS_PER_KV_ELEM + DEQUANT_FLOPS[dequant][kv_dtype]
+    return TpuKernelSpec(f"paged_decode_{kv_dtype}_{dequant}",
                          bytes_per_update=bytes_per,
                          flops_per_update=flops, dep_chain_ops=5)
 
 
 def predicted_decode_speedup(kv_dtype: str, vec_len: int = 64,
                              level: str = "HBM", hw: dict = TPU_V5E,
-                             unroll: int | None = None) -> float:
+                             unroll: int | None = None,
+                             dequant: str = "folded") -> float:
     """ECM-predicted decode-attention speedup of a quantized KV pool over
-    bf16 (>1 means faster). In the memory-bound regime this is the KV
-    byte ratio; if dequant ever pushed the kernel compute-bound the max()
-    in ``predict_level`` would cap it — the same mechanism that makes the
-    paper's compensation-free region visible."""
+    bf16 (>1 means faster): max(T_data, T_compute) per formulation, NOT a
+    byte ratio. In the memory-bound regime it degenerates to the KV byte
+    ratio (int8-folded: ~1.9x); when the dequant term pushes the walk
+    compute-bound, the max() caps it — fp8-"native" lands at ~0.7x, the
+    measured regression the superkernel's folded dequant fixes (~1.4x) —
+    the same mechanism that bounds the paper's compensation-free region."""
     base = predict_level(paged_decode_spec("bf16", vec_len), level, hw,
                          unroll=unroll)
-    quant = predict_level(paged_decode_spec(kv_dtype, vec_len), level, hw,
-                          unroll=unroll)
+    quant = predict_level(paged_decode_spec(kv_dtype, vec_len, dequant),
+                          level, hw, unroll=unroll)
     return quant.updates_per_s / base.updates_per_s
 
 
@@ -221,6 +242,9 @@ def predicted_decode_speedup(kv_dtype: str, vec_len: int = 64,
 # query rows ride the same block traversal — extra q·k / p·v flops per
 # streamed element stay under the ridge). The forecast is therefore pure
 # bookkeeping over walks, the same ECM methodology as the quantized pools.
+# The paged-attention superkernel realizes exactly this one-walk traffic on
+# TPU — verify IS the decode kernel at query width k+1, so the per-walk
+# byte cost this model prices is the byte cost the kernel pays.
 
 # ---------------------------------------------------- prefix caching -------
 #

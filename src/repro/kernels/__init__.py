@@ -36,9 +36,11 @@ Public entry points:
   ops.batched_fused_reduce       (B, N) -> per-row statistic family
   ops.batched_kahan_dot          many independent dots per launch
   ops.kahan_accumulate           fused elementwise compensated accumulate
-  ops.paged_decode_attention     block-table decode attention (serving)
-  ops.paged_decode_attention_quant  same walk over int8/fp8 KV blocks with
-                                 in-register dequant (repro.quant scales)
+  ops.paged_attention            the paged-attention superkernel: decode,
+                                 spec-verify (query width 1..k+1), GQA/MLA
+                                 layouts and bf16/int8/fp8 pools behind
+                                 one block-table walk (repro.quant scales
+                                 folded post-dot into the streams)
   ops.q8_matmul                  int8 weight matmul, compensated K-accum
   kahan_matmul                   compensated K-loop matmul accumulation
   flash_attention                VMEM-resident online softmax
@@ -54,6 +56,4 @@ from repro.kernels import engine, ops, ref  # noqa: F401
 from repro.kernels.flash_attention import flash_attention_pallas  # noqa: F401
 from repro.kernels.kahan_matmul import kahan_matmul  # noqa: F401
 from repro.kernels.paged_attention import (  # noqa: F401
-    paged_decode_attention_pallas)
-from repro.kernels.paged_attention_quant import (  # noqa: F401
-    paged_decode_attention_quant_pallas)
+    paged_attention_pallas, paged_latent_attention_pallas)

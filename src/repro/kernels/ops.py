@@ -174,59 +174,65 @@ def batched_kahan_dot(x: jax.Array, y: jax.Array, *,
 
 # ------------------------------------------------------------ paged -------
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def _paged_decode_impl(q, kpool, vpool, table, lens, interpret):
+@functools.partial(jax.jit, static_argnames=("scale", "interpret"))
+def _paged_attention_impl(q, kpool, vpool, kscale, vscale, q_rope,
+                          rope_pool, rope_scale, table, lens, offs, scale,
+                          interpret):
     from repro.kernels import paged_attention
-    return paged_attention.paged_decode_attention_pallas(
-        q, kpool, vpool, table, lens, interpret=interpret)
+    if q_rope is not None:
+        return paged_attention.paged_latent_attention_pallas(
+            q, q_rope, kpool, rope_pool, table, lens, offs,
+            ck_scale=kscale, kr_scale=rope_scale, scale=scale,
+            interpret=interpret)
+    return paged_attention.paged_attention_pallas(
+        q, kpool, vpool, table, lens, offs, kscale=kscale, vscale=vscale,
+        scale=scale, interpret=interpret)
 
 
-def paged_decode_attention(q: jax.Array, kpool: jax.Array, vpool: jax.Array,
-                           block_table: jax.Array, lens: jax.Array, *,
-                           interpret: bool | None = None) -> jax.Array:
-    """Serving decode attention over block-paged KV (one token/sequence).
+def paged_attention(q: jax.Array, kpool: jax.Array, vpool: jax.Array | None,
+                    block_table: jax.Array, lens: jax.Array, *,
+                    q_offsets: jax.Array | None = None,
+                    kscale: jax.Array | None = None,
+                    vscale: jax.Array | None = None,
+                    q_rope: jax.Array | None = None,
+                    rope_pool: jax.Array | None = None,
+                    rope_scale: jax.Array | None = None,
+                    scale: float | None = None,
+                    interpret: bool | None = None) -> jax.Array:
+    """THE serving attention dispatch: one scalar-prefetch block-table
+    walk (``repro.kernels.paged_attention``) configured per call.
 
-    q: [B, Hq, D]; kpool/vpool: [num_blocks, bs, Hkv, Dh]; block_table:
-    [B, max_blocks]; lens: [B]. The kernel walks each sequence's block
-    table with scalar prefetch and keeps compensated (sum, carry) streams
-    for the softmax normalizer and output accumulator; see
-    ``repro.kernels.paged_attention``.
+    q: [B, W, Hq, D] — W query rows per sequence (1 for decode, k+1 for
+    the speculative verify window) at absolute positions
+    ``q_offsets + w``; defaults to ``lens - W``, i.e. the window was just
+    appended to the cache. Returns [B, W, Hq, Dv].
+
+    GQA pools: kpool/vpool [nb, bs, Hkv, D]; quantized pools (int8/fp8)
+    pass kscale/vscale [nb, bs, Hkv] and the kernel folds the scales
+    post-dot into the compensated streams.
+
+    MLA latents: pass the c_kv pool as ``kpool`` [nb, bs, C] with
+    ``vpool=None`` (the value IS the latent block), the rope stream via
+    ``q_rope`` [B, W, H, R] / ``rope_pool`` [nb, bs, R], per-token
+    ``kscale``/``rope_scale`` [nb, bs] when quantized, and the explicit
+    MLA softmax ``scale``. Returns context latents [B, W, H, C] f32.
     """
-    assert q.ndim == 3 and kpool.ndim == 4, (q.shape, kpool.shape)
+    assert q.ndim == 4, q.shape
     assert block_table.shape[0] == q.shape[0] == lens.shape[0]
-    return _paged_decode_impl(q, kpool, vpool, block_table,
-                              lens.astype(jnp.int32),
-                              _auto_interpret(interpret))
-
-
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def _paged_decode_quant_impl(q, kpool, vpool, kscale, vscale, table, lens,
-                             interpret):
-    from repro.kernels import paged_attention_quant
-    return paged_attention_quant.paged_decode_attention_quant_pallas(
-        q, kpool, vpool, kscale, vscale, table, lens, interpret=interpret)
-
-
-def paged_decode_attention_quant(q: jax.Array, kpool: jax.Array,
-                                 vpool: jax.Array, kscale: jax.Array,
-                                 vscale: jax.Array, block_table: jax.Array,
-                                 lens: jax.Array, *,
-                                 interpret: bool | None = None) -> jax.Array:
-    """Serving decode attention over QUANTIZED block-paged KV.
-
-    q: [B, Hq, D]; kpool/vpool: [num_blocks, bs, Hkv, Dh] int8/fp8;
-    kscale/vscale: [num_blocks, bs, Hkv] f32 scale tiles (one per cached
-    (token, head) — ``repro.quant.core.quantize_lastdim``); block_table:
-    [B, max_blocks]; lens: [B]. The kernel dequantizes in-register while
-    walking the table, keeping the compensated (sum, carry) online-softmax
-    streams; see ``repro.kernels.paged_attention_quant``.
-    """
-    assert q.ndim == 3 and kpool.ndim == 4, (q.shape, kpool.shape)
-    assert kscale.shape == kpool.shape[:3], (kscale.shape, kpool.shape)
-    assert block_table.shape[0] == q.shape[0] == lens.shape[0]
-    return _paged_decode_quant_impl(q, kpool, vpool, kscale, vscale,
-                                    block_table, lens.astype(jnp.int32),
-                                    _auto_interpret(interpret))
+    if q_rope is None:
+        assert vpool is not None and kpool.ndim == 4, kpool.shape
+        if kscale is not None:
+            assert kscale.shape == kpool.shape[:3], (kscale.shape,
+                                                     kpool.shape)
+    else:
+        assert vpool is None and rope_pool is not None and kpool.ndim == 3
+        assert scale is not None, "MLA needs the explicit softmax scale"
+    lens = lens.astype(jnp.int32)
+    offs = (lens - q.shape[1] if q_offsets is None
+            else q_offsets.astype(jnp.int32))
+    return _paged_attention_impl(q, kpool, vpool, kscale, vscale, q_rope,
+                                 rope_pool, rope_scale, block_table, lens,
+                                 offs, scale, _auto_interpret(interpret))
 
 
 # ------------------------------------------------------ quantized matmul --

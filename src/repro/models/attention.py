@@ -284,52 +284,79 @@ def _flash_causal_packed(qg: Array, kt: Array, vt: Array, *, qc: int,
     return out
 
 
-def attend_cache(q: Array, k: Array, v: Array, valid_len: Array) -> Array:
+def attend_cache(q: Array, k: Array, v: Array, valid_len: Array, *,
+                 kscale: Array | None = None, vscale: Array | None = None,
+                 out_dtype=None) -> Array:
     """Single-token attention against materialized K/V rows.
 
     q: [B, 1, Hq, D]; k/v: [B, S, Hkv, D]; valid_len: [B] valid lengths
     (the new token's K/V must already be written at valid_len-1). Used on
     block-gathered paged rows and on encoder cross-attention memory.
+
+    Quantized rows pass RAW payloads plus per-(token, head) ``kscale`` /
+    ``vscale`` [B, S, Hkv]: the scales are folded post-dot into the
+    [B, Hkv, G, S] score tile and post-softmax into p — the hoisted-scale
+    formulation of the superkernel (head_dim× less dequant arithmetic
+    than materializing dequantized rows, and fp8 widens via the cheap
+    ``cast_f32`` bit reinterpretation). The bf16 path (kscale None) is
+    bitwise the historical implementation.
     """
     b, _, hq, d = q.shape
     _, s_max, hkv, dv = v.shape
     groups = hq // hkv
     scale = d ** -0.5
     qg = q.reshape(b, hkv, groups, d)
-    s = jnp.einsum("bhgd,bshd->bhgs", qg.astype(jnp.float32),
-                   k.astype(jnp.float32)) * scale
+    kf = qcore.cast_f32(k) if kscale is not None else k.astype(jnp.float32)
+    s = jnp.einsum("bhgd,bshd->bhgs", qg.astype(jnp.float32), kf) * scale
+    if kscale is not None:
+        s = s * kscale.transpose(0, 2, 1)[:, :, None, :]       # [B,Hkv,1,S]
     mask = jnp.arange(s_max)[None, :] < valid_len[:, None]     # [B,S]
     s = jnp.where(mask[:, None, None, :], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
-    out = jnp.einsum("bhgs,bshd->bhgd", p.astype(v.dtype), v,
+    if vscale is None:
+        out = jnp.einsum("bhgs,bshd->bhgd", p.astype(v.dtype), v,
+                         preferred_element_type=jnp.float32)
+        return out.reshape(b, 1, hq, dv).astype(out_dtype or v.dtype)
+    pv = p * vscale.transpose(0, 2, 1)[:, :, None, :]
+    out = jnp.einsum("bhgs,bshd->bhgd", pv, qcore.cast_f32(v),
                      preferred_element_type=jnp.float32)
-    return out.reshape(b, 1, hq, dv).astype(v.dtype)
+    return out.reshape(b, 1, hq, dv).astype(out_dtype or jnp.float32)
 
 
-def attend_cache_multi(q: Array, k: Array, v: Array, q_pos: Array) -> Array:
+def attend_cache_multi(q: Array, k: Array, v: Array, q_pos: Array, *,
+                       kscale: Array | None = None,
+                       vscale: Array | None = None, out_dtype=None) -> Array:
     """Multi-query attention against materialized K/V rows.
 
     q: [B, C, Hq, D]; k/v: [B, S, Hkv, D]; q_pos: [B, C] absolute positions
     (query j attends keys at positions <= q_pos[b, j], which must already
     be written). This is ``attend_cache`` widened to C queries with the
-    same score/softmax structure — the CPU-side speculative verify uses it
-    so that a verify row reproduces the decode step's numerics: C == 1
-    with q_pos == valid_len - 1 is exactly the decode formulation.
+    same score/softmax structure (including the hoisted-scale quantized
+    fold) — the CPU-side speculative verify uses it so that a verify row
+    reproduces the decode step's numerics: C == 1 with
+    q_pos == valid_len - 1 is exactly the decode formulation.
     """
     b, c, hq, d = q.shape
     _, s_max, hkv, dv = v.shape
     groups = hq // hkv
     scale = d ** -0.5
     qg = q.reshape(b, c, hkv, groups, d)
-    s = jnp.einsum("bchgd,bshd->bchgs", qg.astype(jnp.float32),
-                   k.astype(jnp.float32)) * scale
+    kf = qcore.cast_f32(k) if kscale is not None else k.astype(jnp.float32)
+    s = jnp.einsum("bchgd,bshd->bchgs", qg.astype(jnp.float32), kf) * scale
+    if kscale is not None:
+        s = s * kscale.transpose(0, 2, 1)[:, None, :, None, :]
     k_pos = jnp.arange(s_max)
     mask = q_pos[:, :, None] >= k_pos[None, None, :]           # [B,C,S]
     s = jnp.where(mask[:, :, None, None, :], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
-    out = jnp.einsum("bchgs,bshd->bchgd", p.astype(v.dtype), v,
+    if vscale is None:
+        out = jnp.einsum("bchgs,bshd->bchgd", p.astype(v.dtype), v,
+                         preferred_element_type=jnp.float32)
+        return out.reshape(b, c, hq, dv).astype(out_dtype or v.dtype)
+    pv = p * vscale.transpose(0, 2, 1)[:, None, :, None, :]
+    out = jnp.einsum("bchgs,bshd->bchgd", pv, qcore.cast_f32(v),
                      preferred_element_type=jnp.float32)
-    return out.reshape(b, c, hq, dv).astype(v.dtype)
+    return out.reshape(b, c, hq, dv).astype(out_dtype or jnp.float32)
 
 
 def gqa_forward(p: dict, x: Array, cfg: AttnConfig, *,
@@ -412,6 +439,20 @@ def _gather_kv(pools: dict, table: Array, fmt: qcore.QuantFormat | None,
                 v, paged.gather_blocks(pools["vscale"], table), dtype))
 
 
+def _gather_kv_raw(pools: dict, table: Array
+                   ) -> tuple[Array, Array, Array | None, Array | None]:
+    """Materialize virtual K/V rows WITHOUT dequantizing: raw payloads plus
+    the per-(token, head) scale rows (None for bf16 pools). Feeds the
+    hoisted-scale ``attend_cache`` / ``attend_cache_multi`` quant paths,
+    which fold the scales post-dot instead of widening the payloads."""
+    k = paged.gather_blocks(pools["kpool"], table)
+    v = paged.gather_blocks(pools["vpool"], table)
+    if "kscale" not in pools:
+        return k, v, None, None
+    return (k, v, paged.gather_blocks(pools["kscale"], table),
+            paged.gather_blocks(pools["vscale"], table))
+
+
 def paged_kernel_enabled() -> bool:
     """Dispatch policy for the serving decode: the Pallas block-table
     kernel on TPU (it moves exactly the table's blocks — the traffic the
@@ -427,9 +468,10 @@ def gqa_decode(p: dict, x: Array, cfg: AttnConfig, cache: dict
     """One-token paged decode. x: [B, 1, d]; cache: paged (pool + table).
 
     Quantized pools (``cfg.kv_dtype``) scatter the new token's quantized
-    K/V plus its per-head scales, then dispatch to the dequantizing Pallas
-    kernel on TPU (``kernels.paged_attention_quant`` — in-register dequant,
-    compensated (sum, carry) streams) or gather + dequantize elsewhere.
+    K/V plus its per-head scales. TPU dispatches to the paged-attention
+    superkernel (``ops.paged_attention``, width 1 — scales folded post-dot
+    into the compensated streams); elsewhere the gather formulation runs
+    the same hoisted-scale fold over materialized raw rows.
     """
     b, _, _ = x.shape
     idx = cache["len"]                                 # [B]
@@ -442,17 +484,14 @@ def gqa_decode(p: dict, x: Array, cfg: AttnConfig, cache: dict
         lambda pool, vals: paged.scatter_token(pool, table, idx, vals))
     if paged_kernel_enabled():
         from repro.kernels import ops
-        if fmt is None:
-            out = ops.paged_decode_attention(
-                q[:, 0], pools["kpool"], pools["vpool"], table,
-                idx + 1)[:, None].astype(pools["vpool"].dtype)
-        else:
-            out = ops.paged_decode_attention_quant(
-                q[:, 0], pools["kpool"], pools["vpool"], pools["kscale"],
-                pools["vscale"], table, idx + 1)[:, None].astype(x.dtype)
+        out = ops.paged_attention(
+            q, pools["kpool"], pools["vpool"], table, idx + 1,
+            kscale=pools.get("kscale"),
+            vscale=pools.get("vscale")).astype(x.dtype)
     else:
-        k, v = _gather_kv(pools, table, fmt, x.dtype)  # [B, mb*bs, H, D]
-        out = attend_cache(q, k, v, idx + 1)
+        k, v, ks, vs = _gather_kv_raw(pools, table)    # [B, mb*bs, H, D]
+        out = attend_cache(q, k, v, idx + 1, kscale=ks, vscale=vs,
+                           out_dtype=x.dtype)
     new_cache = {**pools, "block_table": table, "len": idx + 1}
     return common.dense(out.reshape(b, 1, -1), p["wo"]), new_cache
 
@@ -511,23 +550,24 @@ def gqa_verify_chunk(p: dict, x: Array, cfg: AttnConfig, cache: dict,
         cache, k_new, v_new, fmt,
         lambda pool, vals: paged.scatter_chunk_multi(pool, tables, pos0s,
                                                      vals))
-    k, v = _gather_kv(pools, tables, fmt, x.dtype)     # [S, mb*bs, H, D]
     if paged_kernel_enabled():
-        # TPU: per-slot q_offset flash over the gathered rows. Like the
-        # chunk-prefill path, this materializes full virtual rows — the
-        # kv_stats spec accounting prices the block-bounded LAYOUT bound
-        # that a scalar-prefetch verify kernel (the decode kernel widened
-        # to k+1 query rows; ROADMAP) would realize on device.
-        out = flash_attention(q, k, v, causal=cfg.causal,
-                              q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk,
-                              kahan_acc=cfg.kahan_acc, q_offset=pos0s,
-                              kv_len=pos0s + c)
+        # TPU: the superkernel at query width C — ONE walk of each slot's
+        # resident blocks for the whole window (the one-walk traffic the
+        # kv_stats spec accounting prices), and row w is bitwise the
+        # width-1 decode step at that position, so greedy accept/reject
+        # cannot flip on formulation rounding.
+        from repro.kernels import ops
+        out = ops.paged_attention(
+            q, pools["kpool"], pools["vpool"], tables, pos0s + c,
+            kscale=pools.get("kscale"),
+            vscale=pools.get("vscale")).astype(x.dtype)
     else:
         # CPU fallback mirrors gqa_decode's attend_cache numerics so a
         # verify row scores a position exactly like the decode step it
-        # replaces — greedy accept/reject must not flip on formulation
-        # rounding (spec == non-spec greedy streams)
-        out = attend_cache_multi(q, k, v, positions)
+        # replaces (spec == non-spec greedy streams)
+        k, v, ks, vs = _gather_kv_raw(pools, tables)   # [S, mb*bs, H, D]
+        out = attend_cache_multi(q, k, v, positions, kscale=ks, vscale=vs,
+                                 out_dtype=x.dtype)
     new_cache = {**pools, "block_table": cache["block_table"],
                  "len": cache["len"].at[slots].set(pos0s + c)}
     return common.dense(out.reshape(s_n, c, -1), p["wo"]), new_cache
@@ -540,9 +580,9 @@ def gqa_cache_spec(batch: int, layout: PagedLayout, cfg: AttnConfig,
     fmt = qcore.get_format(cfg.kv_dtype)
     pool = (nb, layout.block_size, cfg.num_kv_heads, cfg.head_dim)
     spec = {"kpool": jax.ShapeDtypeStruct(pool, dtype if fmt is None
-                                          else fmt.dtype),
+                                          else fmt.storage),
             "vpool": jax.ShapeDtypeStruct(pool, dtype if fmt is None
-                                          else fmt.dtype),
+                                          else fmt.storage),
             "block_table": jax.ShapeDtypeStruct((batch, layout.max_blocks),
                                                 jnp.int32),
             "len": jax.ShapeDtypeStruct((batch,), jnp.int32)}

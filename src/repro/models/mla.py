@@ -16,6 +16,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models import common, paged
+from repro.models import attention
 from repro.models.attention import flash_attention
 from repro.models.common import ParamSpec
 from repro.models.paged import PagedLayout
@@ -172,6 +173,22 @@ def _gather_latents(pools: dict, table: Array, fmt,
                 dtype))
 
 
+def _absorbed_q(p: dict, cfg: MLAConfig, q_nope: Array) -> Array:
+    """Absorb ``wk_b`` into the query: [B,Q,H,nope] -> latent-space query
+    [B,Q,H,kv_lora] f32 (the MLA inference optimization — scores are then
+    dot products against the cached latents directly)."""
+    wk_b = p["wk_b"].reshape(cfg.kv_lora, cfg.num_heads, cfg.nope_dim)
+    return jnp.einsum("bqhn,chn->bqhc", q_nope.astype(jnp.float32),
+                      wk_b.astype(jnp.float32))
+
+
+def _apply_wv(p: dict, cfg: MLAConfig, ctx_lat: Array) -> Array:
+    """Map context latents [B,Q,H,kv_lora] f32 through the absorbed value
+    up-projection -> per-head context values [B,Q,H,v_dim]."""
+    wv_b = p["wv_b"].reshape(cfg.kv_lora, cfg.num_heads, cfg.v_dim)
+    return jnp.einsum("bqhc,chv->bqhv", ctx_lat, wv_b.astype(jnp.float32))
+
+
 def _latent_attend(p: dict, cfg: MLAConfig, q_nope: Array, q_rope: Array,
                    c_kv: Array, k_rope: Array, valid_len: Array,
                    q_pos: Array | None = None) -> Array:
@@ -181,10 +198,7 @@ def _latent_attend(p: dict, cfg: MLAConfig, q_nope: Array, q_rope: Array,
     multi-query chunks; None means single-token decode (mask by length
     only). Returns per-head context values [B, Q, H, v_dim].
     """
-    h = cfg.num_heads
-    wk_b = p["wk_b"].reshape(cfg.kv_lora, h, cfg.nope_dim)
-    q_lat = jnp.einsum("bqhn,chn->bqhc", q_nope.astype(jnp.float32),
-                       wk_b.astype(jnp.float32))
+    q_lat = _absorbed_q(p, cfg, q_nope)
     scale = (cfg.nope_dim + cfg.rope_dim) ** -0.5
     s = (jnp.einsum("bqhc,bsc->bhqs", q_lat, c_kv.astype(jnp.float32))
          + jnp.einsum("bqhr,bsr->bhqs", q_rope.astype(jnp.float32),
@@ -198,13 +212,31 @@ def _latent_attend(p: dict, cfg: MLAConfig, q_nope: Array, q_rope: Array,
     s = jnp.where(mask[:, None], s, -1e30)
     probs = jax.nn.softmax(s, axis=-1)
     ctx_lat = jnp.einsum("bhqs,bsc->bqhc", probs, c_kv.astype(jnp.float32))
-    wv_b = p["wv_b"].reshape(cfg.kv_lora, h, cfg.v_dim)
-    return jnp.einsum("bqhc,chv->bqhv", ctx_lat, wv_b.astype(jnp.float32))
+    return _apply_wv(p, cfg, ctx_lat)
+
+
+def _kernel_latent_attend(p: dict, cfg: MLAConfig, q_nope: Array,
+                          q_rope: Array, pools: dict, table: Array,
+                          lens: Array) -> Array:
+    """TPU path: absorbed-latent attention through the paged-attention
+    superkernel — one walk of the latent blocks per call (any query width),
+    c_kv streamed once for both the score and value uses, per-token quant
+    scales folded post-dot. Returns [B, Q, H, v_dim] f32."""
+    from repro.kernels import ops
+    ctx_lat = ops.paged_attention(
+        _absorbed_q(p, cfg, q_nope), pools["c_kv"], None, table, lens,
+        q_rope=q_rope, rope_pool=pools["k_rope"],
+        kscale=pools.get("c_kv_scale"),
+        rope_scale=pools.get("k_rope_scale"),
+        scale=(cfg.nope_dim + cfg.rope_dim) ** -0.5)
+    return _apply_wv(p, cfg, ctx_lat)
 
 
 def mla_decode(p: dict, x: Array, cfg: MLAConfig, cache: dict
                ) -> tuple[Array, dict]:
-    """Latent-space paged decode: scores/context against the gathered c_kv."""
+    """Latent-space paged decode: scores/context against the c_kv pool —
+    via the paged-attention superkernel on TPU, the gather formulation
+    elsewhere."""
     b = x.shape[0]
     idx = cache["len"]
     positions = idx[:, None]
@@ -215,8 +247,12 @@ def mla_decode(p: dict, x: Array, cfg: MLAConfig, cache: dict
     pools = _scatter_latents(
         cache, c_kv_new[:, 0], k_rope_new[:, 0], fmt,
         lambda pool, vals: paged.scatter_token(pool, table, idx, vals))
-    c_kv, k_rope = _gather_latents(pools, table, fmt, x.dtype)  # [B,mb*bs,*]
-    ctx = _latent_attend(p, cfg, q_nope, q_rope, c_kv, k_rope, idx + 1)
+    if attention.paged_kernel_enabled():
+        ctx = _kernel_latent_attend(p, cfg, q_nope, q_rope, pools, table,
+                                    idx + 1)
+    else:
+        c_kv, k_rope = _gather_latents(pools, table, fmt, x.dtype)
+        ctx = _latent_attend(p, cfg, q_nope, q_rope, c_kv, k_rope, idx + 1)
     out = common.dense(ctx.reshape(b, 1, -1).astype(x.dtype), p["wo"])
     return out, {**pools, "block_table": table, "len": idx + 1}
 
@@ -258,9 +294,15 @@ def mla_verify_chunk(p: dict, x: Array, cfg: MLAConfig, cache: dict,
         cache, c_kv_new, k_rope_new, fmt,
         lambda pool, vals: paged.scatter_chunk_multi(pool, tables, pos0s,
                                                      vals))
-    c_kv, k_rope = _gather_latents(pools, tables, fmt, x.dtype)
-    ctx = _latent_attend(p, cfg, q_nope, q_rope, c_kv, k_rope, pos0s + c,
-                         q_pos=positions)
+    if attention.paged_kernel_enabled():
+        # superkernel at width C: one latent-block walk for the window,
+        # each row bitwise the width-1 decode step at its position
+        ctx = _kernel_latent_attend(p, cfg, q_nope, q_rope, pools, tables,
+                                    pos0s + c)
+    else:
+        c_kv, k_rope = _gather_latents(pools, tables, fmt, x.dtype)
+        ctx = _latent_attend(p, cfg, q_nope, q_rope, c_kv, k_rope,
+                             pos0s + c, q_pos=positions)
     out = common.dense(ctx.reshape(s_n, c, -1).astype(x.dtype), p["wo"])
     new_cache = {**pools, "block_table": cache["block_table"],
                  "len": cache["len"].at[slots].set(pos0s + c)}
@@ -272,7 +314,7 @@ def mla_cache_spec(batch: int, layout: PagedLayout, cfg: MLAConfig,
     nb = (paged.default_num_blocks(layout, batch) if num_blocks is None
           else num_blocks)
     fmt = qcore.get_format(cfg.kv_dtype)
-    pool_dtype = dtype if fmt is None else fmt.dtype
+    pool_dtype = dtype if fmt is None else fmt.storage
     spec = {
         "c_kv": jax.ShapeDtypeStruct(
             (nb, layout.block_size, cfg.kv_lora), pool_dtype),

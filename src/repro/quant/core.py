@@ -50,7 +50,7 @@ SCALE_EPS = 1e-12
 
 
 class QuantFormat(NamedTuple):
-    """A symmetric quantization target: storage dtype + max representable
+    """A symmetric quantization target: value dtype + max representable
     magnitude (the amax of a tile maps onto ``qmax``)."""
 
     name: str
@@ -61,9 +61,65 @@ class QuantFormat(NamedTuple):
     def itemsize(self) -> int:
         return jnp.dtype(self.dtype).itemsize
 
+    @property
+    def storage(self) -> jnp.dtype:
+        """Pool/payload dtype as STORED. fp8 payloads are stored as raw
+        e4m3 bytes (uint8), not ``float8_e4m3fn``: XLA CPU scalarizes any
+        loop fusion whose element type is f8 — a gather, transpose or
+        dynamic-update-slice touching an f8-typed pool runs ~20x slower
+        than the same byte traffic as u8/int8, which is where most of the
+        fp8 decode regression lived (the profile shows the whole-pool
+        ``transpose_copy`` and ``dynamic-update-slice`` fusions, not the
+        dot, eating the step). Every read path widens via the
+        ``e4m3_to_f32`` bit trick, which starts from the u8 view anyway,
+        so the f8 dtype only ever exists transiently inside ``_encode``."""
+        if self.dtype == jnp.float8_e4m3fn:
+            return jnp.dtype(jnp.uint8)
+        return jnp.dtype(self.dtype)
+
 
 INT8 = QuantFormat("int8", jnp.int8, 127.0)
 FP8 = QuantFormat("fp8", jnp.float8_e4m3fn, 448.0)
+
+
+def e4m3_to_f32(q: Array) -> Array:
+    """Widen fp8 e4m3fn to f32 by bit reinterpretation, not convert.
+
+    XLA CPU lowers the elementwise ``f8e4m3fn -> f32`` convert to a slow
+    scalar-ish expansion, and when that convert sits fused inside a jitted
+    decode step it costs MORE than the fp8 byte cut saves — the root cause
+    of the fp8 0.70x decode regression. The same value is reachable with
+    three integer ops: e4m3 (1-4-3) is a bit-subset of f16 (1-5-10), so
+    shifting sign to bit 15 and exponent+mantissa to bits 14..7 yields an
+    f16 whose exponent is biased 15 instead of 7 — multiply by 2^8 after
+    the (hardware-fast) f16->f32 widen and the result is BITWISE the
+    native convert for every e4m3 value, denormals included (verified
+    exhaustively over all 256 bytes in tests/test_quant.py). The two NaN
+    encodings (0x7f/0xff) map to ±480 instead of NaN; quantized caches
+    never store NaN (``_encode`` scales into range), so the hot paths
+    below use this unconditionally.
+
+    Accepts either ``float8_e4m3fn`` values or their raw-byte ``uint8``
+    view (how pools store them — see ``QuantFormat.storage``).
+    """
+    u8 = (q if q.dtype == jnp.uint8
+          else jax.lax.bitcast_convert_type(q, jnp.uint8)).astype(jnp.uint16)
+    u16 = ((u8 & 0x80) << 8) | ((u8 & 0x7F) << 7)
+    return (jax.lax.bitcast_convert_type(u16, jnp.float16)
+            .astype(jnp.float32) * jnp.float32(256.0))
+
+
+def cast_f32(x: Array) -> Array:
+    """Widen any pool payload dtype to f32, routing fp8 e4m3 through the
+    bit-shift reinterpretation (``e4m3_to_f32``) instead of XLA's slow
+    elementwise convert. The single cast used by every quantized read
+    path: ``dequantize_lastdim``, the hoisted-scale attends in
+    ``repro.models.attention``, and the paged-attention superkernel.
+    ``uint8`` payloads ARE fp8 here — pools store e4m3 as raw bytes
+    (``QuantFormat.storage``)."""
+    if x.dtype in (jnp.float8_e4m3fn, jnp.uint8):
+        return e4m3_to_f32(x)
+    return x.astype(jnp.float32)
 
 FORMATS: dict[str, QuantFormat | None] = {
     "bf16": None,            # identity — keep the bf16 pools
@@ -86,8 +142,9 @@ def _encode(x: Array, scale: Array, fmt: QuantFormat) -> Array:
     if fmt.dtype == jnp.int8:
         return jnp.clip(jnp.round(y), -fmt.qmax, fmt.qmax).astype(jnp.int8)
     # fp8 e4m3: amax lands exactly on ±448, so no clip is needed (and the
-    # format has no inf to overflow into — values are in range by scaling)
-    return y.astype(fmt.dtype)
+    # format has no inf to overflow into — values are in range by scaling).
+    # Stored as the raw-byte u8 view: see ``QuantFormat.storage``.
+    return jax.lax.bitcast_convert_type(y.astype(fmt.dtype), fmt.storage)
 
 
 # ------------------------------------------------------------ last-dim ----
@@ -108,8 +165,11 @@ def quantize_lastdim(x: Array, fmt: QuantFormat) -> tuple[Array, Array]:
 
 def dequantize_lastdim(q: Array, scales: Array,
                        dtype=jnp.float32) -> Array:
-    """Inverse of ``quantize_lastdim``: q [..., D], scales [...] -> [..., D]."""
-    return (q.astype(jnp.float32) * scales[..., None]).astype(dtype)
+    """Inverse of ``quantize_lastdim``: q [..., D], scales [...] -> [..., D].
+
+    fp8 payloads widen via ``e4m3_to_f32`` (bitwise the native convert,
+    ~2x faster fused on XLA CPU — see the postmortem in README.md)."""
+    return (cast_f32(q) * scales[..., None]).astype(dtype)
 
 
 # ------------------------------------------------------------ flat blocks --
@@ -137,7 +197,7 @@ def quantize_blocks(x: Array, fmt: QuantFormat = INT8,
 def dequantize_blocks(q: Array, scales: Array, pad: int,
                       shape: tuple) -> Array:
     """Inverse of ``quantize_blocks`` back to ``shape`` (f32)."""
-    out = (q.astype(jnp.float32) * scales).reshape(-1)
+    out = (cast_f32(q) * scales).reshape(-1)
     if pad:
         out = out[:-pad]
     return out.reshape(shape)
@@ -168,7 +228,7 @@ def dequantize_weight(q: Array, scales: Array) -> Array:
     """Inverse of ``quantize_weight`` -> f32 [K, N]."""
     nk, n = scales.shape
     k = q.shape[0]
-    wb = q.astype(jnp.float32).reshape(nk, k // nk, n)
+    wb = cast_f32(q).reshape(nk, k // nk, n)
     return (wb * scales[:, None, :]).reshape(k, n)
 
 

@@ -484,6 +484,18 @@ def _logit_stats(logits: jax.Array, tokens: jax.Array
             / (jnp.abs(st["sum"]) + 1.0)}
 
 
+@jax.jit
+def _greedy_tokens(rows: jax.Array) -> jax.Array:
+    """Batched greedy choice as ONE cached launch — an eager ``argmax`` +
+    ``astype`` here would pay two uncached dispatches per decode step."""
+    return jnp.argmax(rows, axis=-1).astype(jnp.int32)
+
+
+# host-transfer order of the decode step's packed stats row block (the
+# engine's fused decode launch stacks [tokens] + these six)
+_STAT_KEYS = ("logprob", "logsumexp", "max", "mean", "rms", "round_off")
+
+
 def _sample_row(row: jax.Array, temperature: jax.Array, key: jax.Array,
                 top_k: int) -> jax.Array:
     """Temperature + top-k draw from one logit row (vmapped below)."""
@@ -568,14 +580,36 @@ class DecodeEngine:
         self._step_count = 0
 
         self._prefill_chunk = jax.jit(api.prefill_chunk_fn(cfg))
-        self._decode = jax.jit(api.decode_fn(cfg))
+        decode_raw = api.decode_fn(cfg)
+
+        def _decode_fused(params, tokens, caches):
+            # One launch per decode step: model step + greedy choice +
+            # the fused _logit_stats metrics, packed [1 + 6, B] f32 so a
+            # single host transfer carries everything the scheduler
+            # reads. Separate jit calls for choice/stats plus one sync
+            # per stat array cost ~25% of a CPU decode step. Token ids
+            # ride the f32 packing exactly (vocab << 2^24). ``rows``
+            # comes back device-side, untransferred, for the sampling /
+            # fault-injection override paths.
+            logits, new_caches = decode_raw(params, tokens, caches)
+            rows = logits.reshape(logits.shape[0], -1)
+            toks = jnp.argmax(rows, axis=-1).astype(jnp.int32)
+            stats = _logit_stats(rows, toks)
+            packed = jnp.stack([toks.astype(jnp.float32)]
+                               + [stats[k] for k in _STAT_KEYS])
+            return rows, packed, new_caches
+
+        self._decode = jax.jit(_decode_fused)
         self._reset_slot = jax.jit(paged.reset_slot)
         self._keep_slots = jax.jit(paged.keep_slots)
         self._set_lens = jax.jit(paged.set_lens)
         self._copy_block = jax.jit(paged.copy_block)
 
         self.caches = self.kv.init(max_slots)
-        self._next_tokens = jnp.zeros((max_slots, 1), jnp.int32)
+        # host-side: slots mutate one int per emitted token, and an
+        # eager device scatter per token costs more than the whole
+        # decode launch on CPU — upload once per step instead
+        self._next_tokens = np.zeros((max_slots, 1), np.int32)
 
         # ECM-style KV traffic accounting: the bytes each LAYOUT must
         # address per step (paged: the slot's allocated blocks; contiguous:
@@ -882,8 +916,7 @@ class DecodeEngine:
         self.caches = self._set_lens(
             self.caches, jnp.asarray([req.slot], jnp.int32),
             jnp.asarray([kvlen], jnp.int32))
-        self._next_tokens = self._next_tokens.at[req.slot, 0].set(
-            int(req.output[-1]))
+        self._next_tokens[req.slot, 0] = int(req.output[-1])
         self.kv_stats["restored_blocks"] += len(req.blocks)
         req.last_progress_step = self._step_count
         self.scheduler.start_decoding(req)
@@ -923,12 +956,9 @@ class DecodeEngine:
         returns [(req, reason)] for every tripped row."""
         if self.guard is None:
             return []
-        out = []
-        for idx, req in row_reqs:
-            reason = self.guard.check_row(stats, idx)
-            if reason is not None:
-                out.append((req, reason))
-        return out
+        reasons = self.guard.check_rows(stats)
+        return [(req, reasons[idx]) for idx, req in row_reqs
+                if idx in reasons]
 
     def _quarantine(self, req: Request, reason: str) -> None:
         """A numerics guard tripped on this slot: scrub the request's
@@ -1005,7 +1035,7 @@ class DecodeEngine:
         req.output.append(tok)
         req.logprobs.append(float(stats["logprob"][0]))
         req.last_progress_step = self._step_count
-        self._next_tokens = self._next_tokens.at[req.slot, 0].set(tok)
+        self._next_tokens[req.slot, 0] = tok
         if self._finished(req, tok):
             self._retire(req)
         else:
@@ -1014,8 +1044,8 @@ class DecodeEngine:
     def _decode_step(self) -> None:
         prefilling = [r.slot for r in self.scheduler.prefilling]
         before = self.caches
-        logits, self.caches = self._decode(self.params, self._next_tokens,
-                                           self.caches)
+        rows, packed_dev, self.caches = self._decode(
+            self.params, jnp.asarray(self._next_tokens), self.caches)
         if prefilling:
             # The full-batch decode also "stepped" slots that are mid-
             # chunked-prefill. Their pool writes are harmless (overwritten
@@ -1026,16 +1056,15 @@ class DecodeEngine:
             mask[prefilling] = True
             self.caches = self._keep_slots(before, self.caches,
                                            jnp.asarray(mask))
-        rows = logits.reshape(logits.shape[0], -1)
-        if (self.injector is not None
-                and self.injector.fire("logit_nan", self._step_count)):
+        injected = (self.injector is not None
+                    and self.injector.fire("logit_nan", self._step_count))
+        if injected:
             # fault injection: NaN one decoding victim's whole logit row
             # — the guard's nonfinite sentinel must quarantine it
             slots_sorted = sorted(self.scheduler.decoding)
             victim = slots_sorted[self.injector.choose(
                 "logit_nan", self._step_count, len(slots_sorted))]
             rows = rows.at[victim].set(jnp.nan)
-        tokens_dev = jnp.argmax(rows, axis=-1).astype(jnp.int32)
         sampled = {slot: req for slot, req in self.scheduler.decoding.items()
                    if req.temperature > 0.0}
         if sampled:
@@ -1043,7 +1072,7 @@ class DecodeEngine:
             # temperature/top-k sampling: one vmapped launch per distinct
             # top_k (usually one total) — draws stay device-side, only the
             # chosen indices cross
-            toks = np.asarray(tokens_dev).copy()
+            toks = np.asarray(_greedy_tokens(rows)).copy()
             by_k: dict[int, list] = {}
             for slot, req in sampled.items():
                 by_k.setdefault(req.top_k, []).append((slot, req))
@@ -1057,13 +1086,28 @@ class DecodeEngine:
                     top_k)
                 toks[slots] = np.asarray(draws)
             tokens_dev = jnp.asarray(toks, jnp.int32)
-        # Fused logprob/metric pass: one batched engine launch covers every
-        # slot's chosen-token logprob, logsumexp and health stats. Only
-        # (B,)-sized arrays cross to the host — never the full logits.
-        stats = _logit_stats(rows, tokens_dev)
-        tokens = np.asarray(tokens_dev)
-        logprobs = np.asarray(stats["logprob"])
-        self.last_logit_stats = {k: np.asarray(v) for k, v in stats.items()}
+            # fused logprob/metric pass over the final token choices; only
+            # (B,)-sized arrays ever reach the host
+            stats = _logit_stats(rows, tokens_dev)
+            tokens = np.asarray(tokens_dev)
+            self.last_logit_stats = {k: np.asarray(v)
+                                     for k, v in stats.items()}
+        elif injected:
+            # choice + stats must see the poisoned rows, not the fused
+            # pre-injection packing
+            tokens_dev = _greedy_tokens(rows)
+            stats = _logit_stats(rows, tokens_dev)
+            tokens = np.asarray(tokens_dev)
+            self.last_logit_stats = {k: np.asarray(v)
+                                     for k, v in stats.items()}
+        else:
+            # all-greedy: the fused decode launch already packed tokens +
+            # stats — ONE host transfer covers the step
+            packed = np.asarray(packed_dev)
+            tokens = packed[0].astype(np.int32)
+            self.last_logit_stats = {k: packed[i + 1]
+                                     for i, k in enumerate(_STAT_KEYS)}
+        logprobs = self.last_logit_stats["logprob"]
         self._account_decode()
         tripped = self._guard_tripped(
             self.last_logit_stats,
@@ -1077,7 +1121,7 @@ class DecodeEngine:
             req.output.append(tok)
             req.logprobs.append(float(logprobs[slot]))
             req.last_progress_step = self._step_count
-            self._next_tokens = self._next_tokens.at[slot, 0].set(tok)
+            self._next_tokens[slot, 0] = tok
             if self._finished(req, tok):
                 retired.append(req)
         for req, reason in tripped:
@@ -1299,8 +1343,7 @@ class SpecDecodeEngine(DecodeEngine):
                     done = True
                     break
             req.last_progress_step = self._step_count
-            self._next_tokens = self._next_tokens.at[req.slot, 0].set(
-                req.output[-1])
+            self._next_tokens[req.slot, 0] = req.output[-1]
             if done:
                 retired.append(req)
             else:

@@ -107,6 +107,27 @@ class NumericsGuard:
                 return f"round_off {dev:.3g}"
         return None
 
+    def check_rows(self, stats: dict) -> dict[int, str]:
+        """``check_row`` vectorized over every row at once: {idx: reason}
+        for tripped rows only. The engine calls this each decode step, so
+        the healthy case must cost one numpy pass over (B,)-sized stats —
+        not a per-(slot, key) reduction loop. Reason priority matches
+        ``check_row`` (first detector to trip names the reason)."""
+        reasons: dict[int, str] = {}
+        if self.check_nonfinite:
+            for key in ("max", "logsumexp", "rms"):
+                a = np.asarray(stats[key])
+                finite = np.isfinite(a).reshape(a.shape[0], -1).all(axis=1)
+                for i in np.nonzero(~finite)[0]:
+                    reasons.setdefault(int(i), f"nonfinite {key}")
+        if self.round_off_threshold is not None and "round_off" in stats:
+            dev = np.asarray(stats["round_off"])
+            dev = dev.reshape(dev.shape[0], -1).max(axis=1)
+            bad = ~np.isfinite(dev) | (dev > self.round_off_threshold)
+            for i in np.nonzero(bad)[0]:
+                reasons.setdefault(int(i), f"round_off {dev[i]:.3g}")
+        return reasons
+
 
 @dataclass
 class FaultSpec:

@@ -9,7 +9,6 @@ import numpy as np
 import pytest
 
 from repro.configs import get_config, reduced
-from repro.kernels import ops
 from repro.models import api, common, paged
 from repro.models.attention import attend_cache
 from repro.models.paged import PagedLayout
@@ -160,88 +159,6 @@ def test_paged_attend_equals_contiguous_bitwise():
     gv = paged.gather_blocks(pool_v, table)
     paged_out = attend_cache(q, gk, gv, lens)
     assert np.array_equal(np.asarray(contiguous), np.asarray(paged_out))
-
-
-# ------------------------------------------------------------ kernel -------
-
-@pytest.mark.parametrize("lens", [[5, 32, 17], [1, 8, 31], [32, 32, 32]])
-@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
-def test_paged_kernel_vs_gather_oracle(lens, dtype):
-    """The Pallas paged-decode kernel (block-table walk, compensated
-    l/acc streams) matches the gather + masked-softmax oracle."""
-    b, hq, hkv, d, bs, mb = 3, 4, 2, 16, 8, 4
-    layout = PagedLayout(bs, mb)
-    rows_k = jax.random.normal(jax.random.key(4), (b, mb * bs, hkv, d),
-                               jnp.float32).astype(dtype)
-    rows_v = jax.random.normal(jax.random.key(5), (b, mb * bs, hkv, d),
-                               jnp.float32).astype(dtype)
-    kpool = paged.pool_from_rows(rows_k, layout)
-    vpool = paged.pool_from_rows(rows_v, layout)
-    table = paged.identity_table(b, layout)
-    lens = jnp.asarray(lens, jnp.int32)
-    q = jax.random.normal(jax.random.key(6), (b, hq, d),
-                          jnp.float32).astype(dtype)
-
-    got = ops.paged_decode_attention(q, kpool, vpool, table, lens,
-                                     interpret=True)
-    want = attend_cache(q[:, None], paged.gather_blocks(kpool, table),
-                        paged.gather_blocks(vpool, table), lens)[:, 0]
-    tol = 2e-5 if dtype == jnp.float32 else 2e-2
-    np.testing.assert_allclose(np.asarray(got, np.float32),
-                               np.asarray(want, np.float32),
-                               atol=tol, rtol=tol)
-
-
-def test_paged_kernel_permuted_table():
-    """A scrambled (non-identity) block table gathers the same attention
-    result: block addressing is fully indirect."""
-    b, hq, hkv, d, bs, mb = 2, 2, 1, 8, 4, 3
-    layout = PagedLayout(bs, mb)
-    rows_k = jax.random.normal(jax.random.key(0), (b, mb * bs, hkv, d))
-    rows_v = jax.random.normal(jax.random.key(1), (b, mb * bs, hkv, d))
-    q = jax.random.normal(jax.random.key(2), (b, hq, d))
-    lens = jnp.asarray([9, 11], jnp.int32)
-
-    kpool = paged.pool_from_rows(rows_k, layout)
-    vpool = paged.pool_from_rows(rows_v, layout)
-    table = paged.identity_table(b, layout)
-    # permute pool blocks 1.. and remap the table accordingly
-    perm = np.concatenate([[0], 1 + np.random.default_rng(3).permutation(
-        b * mb)]).astype(np.int32)
-    inv = np.argsort(perm).astype(np.int32)
-    kpool_p = jnp.asarray(np.asarray(kpool)[inv])
-    vpool_p = jnp.asarray(np.asarray(vpool)[inv])
-    table_p = jnp.asarray(perm[np.asarray(table)])
-
-    base = ops.paged_decode_attention(q, kpool, vpool, table, lens,
-                                      interpret=True)
-    scrambled = ops.paged_decode_attention(q, kpool_p, vpool_p, table_p,
-                                           lens, interpret=True)
-    np.testing.assert_allclose(np.asarray(base), np.asarray(scrambled),
-                               atol=1e-6, rtol=1e-6)
-
-
-def test_gqa_decode_kernel_dispatch(monkeypatch):
-    """The TPU dispatch branch of gqa_decode (Pallas block-table kernel)
-    agrees with the pure-JAX gather branch through a full model decode
-    step (kernel runs in interpret mode off-TPU)."""
-    from repro.models import attention
-
-    cfg = reduced(get_config("qwen1.5-0.5b")).with_(num_layers=2)
-    params = common.init_params(api.schema(cfg), jax.random.key(0))
-    layout = PagedLayout(16, 2)
-    prompt = jnp.asarray([[5, 9, 11]], jnp.int32)
-    logits, caches = jax.jit(api.prefill_fn(cfg, layout))(
-        params, {"tokens": prompt})
-    tok = jnp.asarray([[int(jnp.argmax(logits[0]))]], jnp.int32)
-
-    lg_gather, _ = jax.jit(api.decode_fn(cfg))(params, tok, caches)
-    monkeypatch.setattr(attention, "paged_kernel_enabled", lambda: True)
-    lg_kernel, _ = jax.jit(api.decode_fn(cfg))(params, tok, caches)
-    np.testing.assert_allclose(np.asarray(lg_kernel, np.float32),
-                               np.asarray(lg_gather, np.float32),
-                               atol=2e-2, rtol=2e-2)
-    assert int(jnp.argmax(lg_kernel[0])) == int(jnp.argmax(lg_gather[0]))
 
 
 # ------------------------------------------------------ chunked prefill ----
