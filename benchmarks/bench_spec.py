@@ -38,8 +38,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config, reduced
-from repro.ecm.tpu import predicted_spec_speedup
+from repro.ecm.tpu import expected_accepted_length, predicted_spec_speedup
 from repro.models import api, common
+from repro.obs import residual_row
 from repro.optim import adamw
 from repro.serving.engine import DecodeEngine, Request, SpecDecodeEngine
 from repro.spec import DraftModelProposer, NGramProposer
@@ -132,12 +133,23 @@ def _row(name, engine, tok_s, dt, base_tok_s, draft_byte_ratio, k):
     steps = max(st["decode_steps"] + st["prefill_chunks"], 1)
     alpha = engine.acceptance_rate
     ecm = predicted_spec_speedup(alpha, k, draft_byte_ratio=draft_byte_ratio)
-    return (name, f"{dt * 1e6 / steps:.0f}",
-            f"tok_s={tok_s:.1f}"
-            f" speedup={tok_s / base_tok_s:.2f}x"
-            f" acc={alpha:.2f}"
-            f" E={engine.mean_accepted_length:.2f}"
-            f" ecm={ecm:.2f}x")
+    return [(name, f"{dt * 1e6 / steps:.0f}",
+             f"tok_s={tok_s:.1f}"
+             f" speedup={tok_s / base_tok_s:.2f}x"
+             f" acc={alpha:.2f}"
+             f" E={engine.mean_accepted_length:.2f}"
+             f" ecm={ecm:.2f}x"),
+            # residual pair for the standing speculation forecast: the
+            # tok/s speedup is wallclock (never hard-gates); the mean
+            # accepted length vs E(alpha, k) is pure deterministic walk
+            # bookkeeping — it gates
+            residual_row(f"spec_speedup/{name.removeprefix('spec/')}",
+                         ecm, tok_s / base_tok_s, basis="wallclock",
+                         acc=f"{alpha:.2f}"),
+            residual_row(f"spec_E/{name.removeprefix('spec/')}",
+                         expected_accepted_length(alpha, k),
+                         engine.mean_accepted_length, basis="counter",
+                         k=k)]
 
 
 def run() -> list[tuple]:
@@ -187,7 +199,7 @@ def run() -> list[tuple]:
         engine, tok_s, dt = _serve(c, params, _prompts(kind, motif, mix_rng),
                                    SpecDecodeEngine, proposer=proposer,
                                    spec_k=k)
-        rows.append(_row(f"spec/{kind}/{proposer_name}/k={k}/kv={kv_dtype}",
+        rows.extend(_row(f"spec/{kind}/{proposer_name}/k={k}/kv={kv_dtype}",
                          engine, tok_s, dt, base, ratio, k))
 
     for k in (1, 2, 4, 8):                       # k sweep, headline mix

@@ -17,6 +17,7 @@ import time
 import jax
 import numpy as np
 
+from repro import obs
 from repro.configs import REGISTRY, get_config, reduced
 from repro.models import api, common
 from repro.serving.engine import DecodeEngine, Request, SpecDecodeEngine
@@ -88,6 +89,17 @@ def build_parser() -> argparse.ArgumentParser:
                     help="FaultInjector seed (replays bit-for-bit)")
     ap.add_argument("--max-steps", type=int, default=10_000,
                     help="StallError watchdog for the serve loop")
+    ap.add_argument("--metrics", default=None, metavar="PATH",
+                    help="write the engine's metrics snapshot after the "
+                         "run: Prometheus text exposition if PATH ends in "
+                         ".prom/.txt, JSON otherwise (the snapshot "
+                         "contains every kv_stats counter verbatim plus "
+                         "derived gauges and latency histograms)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="record per-request lifecycle tracing on the "
+                         "engine-step clock and write it after the run: "
+                         "JSONL if PATH ends in .jsonl, Perfetto-loadable "
+                         "Chrome trace JSON otherwise")
     return ap
 
 
@@ -150,6 +162,43 @@ def validate_spec_args(args, cfg) -> None:
         raise SystemExit("--draft-arch only applies to --spec-mode draft")
 
 
+def _summary_line(args, snap: dict, n_done: int, total: int,
+                  dt: float) -> str:
+    """Render the final summary from a metrics snapshot — every number
+    here is a snapshot entry, so the line, the ``--metrics`` export and
+    the bench counters can never disagree."""
+    line = (f"{n_done} requests, {total} tokens in {dt:.1f}s "
+            f"({total/dt:.1f} tok/s, {args.slots} slots, CPU)")
+    if snap["paged_bytes"]:
+        ratio = snap["contiguous_bytes"] / snap["paged_bytes"]
+        line += (f" | KV touched {snap['paged_bytes']/2**20:.1f} MiB paged "
+                 f"vs {snap['contiguous_bytes']/2**20:.1f} MiB contiguous "
+                 f"({ratio:.1f}x less)")
+        if args.kv_dtype != "bf16":
+            qratio = snap["paged_bytes_bf16"] / snap["paged_bytes"]
+            line += (f" | {args.kv_dtype} KV {qratio:.2f}x fewer bytes "
+                     f"than bf16 pools")
+    else:   # ssm family: constant-size state, no per-token KV to page
+        line += " | constant-state family (no per-token KV)"
+    if args.prefix_cache:
+        line += (f" | prefix cache hit {snap['prefix_hit_rate']:.0%} "
+                 f"({snap['prefix_hit_tokens']} tok, "
+                 f"{snap['prefix_saved_bytes']/2**20:.2f} MiB KV never "
+                 f"re-prefilled)")
+    if args.spec_mode != "off":
+        line += (f" | spec[{args.spec_mode}] accept "
+                 f"{snap['acceptance_rate']:.0%}, "
+                 f"{snap['mean_accepted_length']:.2f} tok/verify-walk")
+    if args.preempt != "off" or snap["preempted"]:
+        line += (f" | preempted {snap['preempted']} "
+                 f"(restored {snap['restored_blocks']} blocks, "
+                 f"{snap['preempted_blocks']} swapped to host)")
+    if snap["cancelled"] or snap["expired"]:
+        line += (f" | cancelled {snap['cancelled']}, "
+                 f"expired {snap['expired']}")
+    return line
+
+
 def main() -> None:
     args = build_parser().parse_args()
 
@@ -177,6 +226,12 @@ def main() -> None:
         injector = FaultInjector(args.fault_seed,
                                  [FaultSpec(site=s) for s in sites])
 
+    # telemetry only when asked for: the default engine keeps the
+    # zero-overhead NULL recorder. Wall-clock annotation is on here —
+    # this is live serving, not a determinism test.
+    telemetry = (obs.Telemetry(wall_clock=True)
+                 if (args.metrics or args.trace) else None)
+
     engine_kw: dict = dict(max_slots=args.slots,
                            max_context=args.max_context,
                            block_size=args.block_size,
@@ -184,7 +239,8 @@ def main() -> None:
                            prefill_chunk=args.prefill_chunk,
                            prefix_cache=args.prefix_cache,
                            preempt=args.preempt,
-                           fault_injector=injector)
+                           fault_injector=injector,
+                           telemetry=telemetry)
     if args.spec_mode == "off":
         engine = DecodeEngine(cfg, params, **engine_kw)
     else:
@@ -245,45 +301,34 @@ def main() -> None:
     # EOS can retire a request early — count the tokens actually emitted,
     # not requests × max_new.
     total = sum(len(r.output) for r in done)
-    st = engine.kv_stats
-    line = (f"{len(done)} requests, {total} tokens in {dt:.1f}s "
-            f"({total/dt:.1f} tok/s, {args.slots} slots, CPU)")
-    if st["paged_bytes"]:
-        ratio = st["contiguous_bytes"] / st["paged_bytes"]
-        line += (f" | KV touched {st['paged_bytes']/2**20:.1f} MiB paged vs "
-                 f"{st['contiguous_bytes']/2**20:.1f} MiB contiguous "
-                 f"({ratio:.1f}x less)")
-        if args.kv_dtype != "bf16":
-            qratio = st["paged_bytes_bf16"] / st["paged_bytes"]
-            line += (f" | {args.kv_dtype} KV {qratio:.2f}x fewer bytes "
-                     f"than bf16 pools")
-    else:   # ssm family: constant-size state, no per-token KV to page
-        line += " | constant-state family (no per-token KV)"
-    if args.prefix_cache:
-        line += (f" | prefix cache hit {engine.prefix_hit_rate:.0%} "
-                 f"({st['prefix_hit_tokens']} tok, "
-                 f"{st['prefix_saved_bytes']/2**20:.2f} MiB KV never "
-                 f"re-prefilled)")
-    if args.spec_mode != "off":
-        line += (f" | spec[{args.spec_mode}] accept "
-                 f"{engine.acceptance_rate:.0%}, "
-                 f"{engine.mean_accepted_length:.2f} tok/verify-walk")
-    if args.preempt != "off" or st["preempted"]:
-        line += (f" | preempted {st['preempted']} "
-                 f"(restored {st['restored_blocks']} blocks, "
-                 f"{st['preempted_blocks']} swapped to host)")
-    if st["cancelled"] or st["expired"]:
-        line += (f" | cancelled {st['cancelled']}, "
-                 f"expired {st['expired']}")
-    print(line)
+    # one source of truth for the summary: the metrics snapshot (which
+    # subsumes kv_stats value-for-value and carries the derived rates)
+    snap = engine.metrics_snapshot()
+    print(_summary_line(args, snap, len(done), total, dt))
+
+    if args.metrics:
+        if args.metrics.endswith((".prom", ".txt")):
+            with open(args.metrics, "w") as f:
+                f.write(engine.metrics_prometheus())
+        else:
+            import json
+            with open(args.metrics, "w") as f:
+                json.dump(snap, f, indent=1, sort_keys=True)
+        print(f"metrics: wrote {args.metrics}")
+    if args.trace:
+        tracer = telemetry.trace
+        n = (tracer.to_jsonl(args.trace)
+             if args.trace.endswith(".jsonl")
+             else tracer.to_chrome(args.trace))
+        print(f"trace: wrote {n} events to {args.trace}")
 
     if args.faults:
         fired = sorted({site for _, site, _ in injector.log})
         armed = sorted(f.site for f in injector.faults)
         print(f"faults: armed {armed}, fired {fired} "
               f"(log: {injector.log})")
-        print(f"faults: guard_trips={st['guard_trips']} "
-              f"alloc_faults={st['alloc_faults']} "
+        print(f"faults: guard_trips={snap['guard_trips']} "
+              f"alloc_faults={snap['alloc_faults']} "
               f"retried={len(server.retried)} failed={len(server.failed)}")
         if fired != armed:
             raise SystemExit(f"fault smoke: armed sites {armed} did not "

@@ -1,0 +1,77 @@
+"""Serving telemetry: tracing, metrics, ECM residuals.
+
+The paper's whole method is observability — low-level counters plus an
+analytic model, compared continuously, to pinpoint where a bottleneck
+lives. This package is that method applied to the serving engine:
+
+  trace      — per-request lifecycle spans on the monotonic ENGINE-STEP
+               clock (deterministic; wall time is an optional
+               annotation), exported as JSONL and Perfetto-loadable
+               Chrome trace JSON
+  metrics    — typed Counter/Gauge/Histogram registry; the engine's
+               ``metrics_snapshot()`` subsumes the legacy ``kv_stats``
+               counters value-for-value and adds distributions (TTFT,
+               queue wait) and derived rates, exportable as JSON and
+               Prometheus text
+  residuals  — every standing ECM forecast paired with its measured
+               counterpart, tagged with the BASIS of the measurement
+               (deterministic counter vs wall clock) so the perf
+               trajectory can tell model error, code regression and
+               host drift apart
+
+``Telemetry`` bundles the three behind one handle; ``NULL`` is the
+always-off default the engine holds when no telemetry is attached —
+every hot-path hook guards on ``obs.enabled``, so a disabled engine
+runs the exact PR-7 hot path (one fused launch + one transfer per
+step), with the enabled-overhead bound benchmarked by
+``benchmarks/bench_serving.py`` (serving/obs/overhead row).
+"""
+
+from __future__ import annotations
+
+from repro.obs.metrics import (Counter, Gauge, Histogram, Metric,
+                               MetricsRegistry)
+from repro.obs.residuals import (ResidualLog, ResidualRecord,
+                                 residual_row)
+from repro.obs.trace import TraceEvent, Tracer
+
+
+class Telemetry:
+    """One recorder handle: a Tracer + MetricsRegistry + ResidualLog
+    sharing the engine-step clock. ``wall_clock=True`` additionally
+    stamps trace events with ``time.perf_counter()`` and lets the
+    engine record wall-denominated histograms; it never changes the
+    deterministic event sequence."""
+
+    enabled = True
+
+    def __init__(self, wall_clock: bool = False):
+        self.wall_clock = wall_clock
+        self.trace = Tracer(wall_clock)
+        self.metrics = MetricsRegistry()
+        self.residuals = ResidualLog()
+
+    def set_step(self, step: int) -> None:
+        self.trace.set_step(step)
+
+
+class _NullTelemetry:
+    """The disabled recorder: ``enabled`` is False and every hook is a
+    no-op, so instrumented components can hold it unconditionally and
+    the hot path stays a single predictable attribute check."""
+
+    enabled = False
+    wall_clock = False
+
+    def set_step(self, step: int) -> None:
+        pass
+
+    def __bool__(self) -> bool:
+        return False
+
+
+NULL = _NullTelemetry()
+
+__all__ = ["Telemetry", "NULL", "Tracer", "TraceEvent", "MetricsRegistry",
+           "Metric", "Counter", "Gauge", "Histogram", "ResidualLog",
+           "ResidualRecord", "residual_row"]

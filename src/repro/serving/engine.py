@@ -66,6 +66,7 @@ admission path absorbs. All of it is exercised by the keyed, replayable
 from __future__ import annotations
 
 import functools
+import time
 from collections import deque
 from dataclasses import dataclass, field
 
@@ -73,6 +74,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.kernels import ops
 from repro.models import api, paged
 from repro.models.config import ModelConfig
@@ -319,7 +321,8 @@ class Scheduler:
         req.prefill_pos = match.hit       # first uncached token
         if self.prefix_cache is not None:
             self.prefix_cache.note_admitted(match.hit, len(req.prompt),
-                                            match.cow_src is not None)
+                                            match.cow_src is not None,
+                                            rid=req.rid)
         return True
 
     def admit(self) -> list[Request]:
@@ -543,7 +546,7 @@ class DecodeEngine:
                  num_blocks: int | None = None, prefill_chunk: int = 32,
                  prefix_cache: bool = False, preempt: str = "off",
                  guard: NumericsGuard | None = NumericsGuard(),
-                 fault_injector=None):
+                 fault_injector=None, telemetry: obs.Telemetry | None = None):
         assert cfg.family in ("dense", "moe", "ssm", "vlm"), cfg.family
         if prefix_cache and cfg.family == "ssm":
             raise ValueError(
@@ -578,6 +581,30 @@ class DecodeEngine:
         self.swap = KVSwap()
         self.quarantined: list[Request] = []
         self._step_count = 0
+        # Telemetry: every hook below guards on ``self.obs.enabled`` so a
+        # plain engine (the default NULL recorder) runs the untouched
+        # one-launch/one-transfer hot path. Collaborating components get
+        # the SAME handle — one step clock, one event stream.
+        self.obs = telemetry if telemetry is not None else obs.NULL
+        self.swap.obs = self.obs
+        if self.prefix_cache is not None:
+            self.prefix_cache.obs = self.obs
+        if fault_injector is not None:
+            fault_injector.obs = self.obs
+        if self.obs.enabled:
+            m = self.obs.metrics
+            self._h_ttft = m.histogram(
+                "ttft_steps", unit="steps",
+                help="engine steps from submit to first emitted token")
+            self._h_queue_wait = m.histogram(
+                "queue_wait_steps", unit="steps",
+                help="engine steps from submit to slot admission")
+            self._h_intertoken = m.histogram(
+                "intertoken_seconds", unit="s",
+                help="wall-clock decode/verify step latency "
+                     "(~ inter-token latency per resident request)",
+                buckets=(1e-4, 3e-4, 1e-3, 3e-3, 1e-2, 3e-2,
+                         0.1, 0.3, 1.0, 3.0))
 
         self._prefill_chunk = jax.jit(api.prefill_chunk_fn(cfg))
         decode_raw = api.decode_fn(cfg)
@@ -636,7 +663,8 @@ class DecodeEngine:
         # rate repro.ecm.tpu.predicted_prefill_speedup forecasts from.
         # Fault-tolerance counters ride the same dict: preempted /
         # restored_blocks / guard_trips are the bench_serving trajectory
-        # columns; stall_diagnostics appears only after a StallError.
+        # columns. Per-request stall diagnostics travel on StallError
+        # (and as ``stall`` trace events when telemetry is attached).
         self.kv_stats = {"paged_bytes": 0, "paged_bytes_bf16": 0,
                          "contiguous_bytes": 0,
                          "decode_steps": 0, "prefill_chunks": 0,
@@ -659,12 +687,18 @@ class DecodeEngine:
         req.submit_step = self._step_count
         req.last_progress_step = self._step_count
         self.scheduler.submit(req)
+        if self.obs.enabled:
+            self.obs.trace.begin("queued", rid=req.rid,
+                                 prompt_tokens=len(req.prompt),
+                                 max_new=req.max_new_tokens)
 
     def step(self) -> None:
         """One engine step: expire deadlines, admit (preempting a victim
         to host under pool pressure if armed), run at most one prefill
         chunk, then one batched decode step for every decoding slot."""
         self._step_count += 1
+        if self.obs.enabled:
+            self.obs.set_step(self._step_count)
         self._expire_deadlines()
         if self.injector is not None:
             self._inject_step_faults()
@@ -691,6 +725,9 @@ class DecodeEngine:
                 self.params, jnp.asarray([chunk], jnp.int32), self.caches,
                 jnp.int32(req.slot), jnp.int32(pos0))
             self._on_prefill_chunk(req, chunk, pos0)
+            if self.obs.enabled:
+                self.obs.trace.instant("prefill_chunk", rid=req.rid,
+                                       pos0=pos0, tokens=len(chunk))
             req.last_progress_step = self._step_count
             # tokens the engine ACTUALLY pushed through the prefill path:
             # the measured side of the prefix-cache reduction (a cold
@@ -703,7 +740,12 @@ class DecodeEngine:
                 self._emit_first_token(req, logits)
 
         if self.scheduler.decoding:
-            self._decode_step()
+            if self.obs.enabled and self.obs.wall_clock:
+                t0 = time.perf_counter()
+                self._decode_step()
+                self._h_intertoken.observe(time.perf_counter() - t0)
+            else:
+                self._decode_step()
         self.kv_stats["alloc_faults"] = self.scheduler.allocator.faults
 
     def _admit_slot(self, req: Request) -> None:
@@ -747,6 +789,12 @@ class DecodeEngine:
                 prefix_evicted_blocks=cs["evicted_blocks"],
                 prefix_saved_bytes=cs["hit_tokens"]
                 * self._token_bytes)
+        if self.obs.enabled:
+            tr = self.obs.trace
+            tr.end("queued", rid=req.rid)
+            tr.begin("prefill", rid=req.rid, slot=req.slot,
+                     blocks=len(req.blocks), prefix_hit=req.prefix_hit)
+            self._h_queue_wait.observe(self._step_count - req.submit_step)
         self._on_admit(req)
 
     # Subclass hooks (speculative engine mirrors these into its proposer).
@@ -773,10 +821,11 @@ class DecodeEngine:
 
     def run_until_done(self, max_steps: int = 10_000) -> None:
         """Drive steps until every request finishes. Raises ``StallError``
-        (with per-request diagnostics, mirrored into
-        ``kv_stats['stall_diagnostics']``) if ``max_steps`` pass with
-        work still pending — a silent return here used to mask livelocks
-        and left callers holding half-finished requests."""
+        (carrying per-request diagnostics; with telemetry attached the
+        same fields also land as one ``stall`` trace event per stuck
+        request) if ``max_steps`` pass with work still pending — a silent
+        return here used to mask livelocks and left callers holding
+        half-finished requests."""
         for _ in range(max_steps):
             if not self.scheduler.num_unfinished:
                 return
@@ -784,7 +833,10 @@ class DecodeEngine:
         if self.scheduler.num_unfinished:
             diags = self.request_diagnostics()
             self.kv_stats["stalled_requests"] = len(diags)
-            self.kv_stats["stall_diagnostics"] = diags
+            if self.obs.enabled:
+                for d in diags:
+                    self.obs.trace.instant("stall", rid=d["rid"], **{
+                        k: v for k, v in d.items() if k != "rid"})
             raise StallError(
                 f"{len(diags)} requests unfinished after {max_steps} "
                 f"steps", diags)
@@ -840,6 +892,16 @@ class DecodeEngine:
                     > req.deadline_steps):
                 self._terminate(req, "expired")
 
+    # Which lifecycle span is open on a request's track, by queue state —
+    # terminal paths close it before stamping their terminal instant.
+    _STATE_SPANS = {"queued": "queued", "prefilling": "prefill",
+                    "decoding": "decode", "preempted": "preempted"}
+
+    def _close_span(self, req: Request) -> None:
+        span = self._STATE_SPANS.get(req.state)
+        if span is not None:
+            self.obs.trace.end(span, rid=req.rid)
+
     def _terminate(self, req: Request, state: str) -> bool:
         sched = self.scheduler
         slot = req.slot
@@ -849,6 +911,11 @@ class DecodeEngine:
         if active:
             # mirror teardown needs the slot still valid
             self._on_drop(req)
+        if self.obs.enabled and (active or preempted
+                                 or req in sched.waiting):
+            self._close_span(req)
+            self.obs.trace.instant(state, rid=req.rid,
+                                   emitted=len(req.output))
         if not sched.drop(req, state):
             return False
         if preempted:
@@ -879,6 +946,10 @@ class DecodeEngine:
         self.swap.swap_out(rid, self.caches, req.blocks)
         self.kv_stats["preempted"] += 1
         self.kv_stats["preempted_blocks"] += len(req.blocks)
+        if self.obs.enabled:
+            self.obs.trace.end("decode", rid=req.rid)
+            self.obs.trace.begin("preempted", rid=req.rid,
+                                 blocks=len(req.blocks))
         self._on_preempt(req)
         self.scheduler.preempt(req)
         null_row = jnp.full((self.layout.max_blocks,), NULL_BLOCK,
@@ -918,6 +989,10 @@ class DecodeEngine:
             jnp.asarray([kvlen], jnp.int32))
         self._next_tokens[req.slot, 0] = int(req.output[-1])
         self.kv_stats["restored_blocks"] += len(req.blocks)
+        if self.obs.enabled:
+            self.obs.trace.end("preempted", rid=req.rid)
+            self.obs.trace.begin("decode", rid=req.rid,
+                                 restored_blocks=len(req.blocks))
         req.last_progress_step = self._step_count
         self.scheduler.start_decoding(req)
         self._on_restore(req)
@@ -970,6 +1045,11 @@ class DecodeEngine:
         poison the batch."""
         self.kv_stats["guard_trips"] += 1
         req.error = reason
+        if self.obs.enabled:
+            self.obs.trace.instant("guard_trip", rid=req.rid, reason=reason)
+            self._close_span(req)
+            self.obs.trace.instant("quarantined", rid=req.rid,
+                                   emitted=len(req.output))
         self._on_drop(req)
         alloc = self.scheduler.allocator
         scrub = [b for b in req.blocks if alloc.refcount(b) == 1]
@@ -1002,6 +1082,72 @@ class DecodeEngine:
         tot = self.kv_stats["prefix_prompt_tokens"]
         return self.kv_stats["prefix_hit_tokens"] / tot if tot else 0.0
 
+    # ------------------------------------------------------- telemetry ----
+
+    # Units for the kv_stats counters as they appear in the typed
+    # registry / Prometheus exposition.
+    _METRIC_UNITS = {
+        "paged_bytes": "bytes", "paged_bytes_bf16": "bytes",
+        "contiguous_bytes": "bytes", "decode_steps": "steps",
+        "prefill_chunks": "chunks", "prefill_tokens": "tokens",
+        "prefix_hit_tokens": "tokens", "prefix_prompt_tokens": "tokens",
+        "prefix_saved_bytes": "bytes", "prefix_cow_blocks": "blocks",
+        "prefix_evicted_blocks": "blocks", "preempted": "requests",
+        "preempted_blocks": "blocks", "restored_blocks": "blocks",
+        "guard_trips": "trips", "cancelled": "requests",
+        "expired": "requests", "alloc_faults": "faults",
+        "stalled_requests": "requests", "spec_steps": "steps",
+        "spec_slot_steps": "walks", "spec_drafted": "tokens",
+        "spec_accepted": "tokens", "spec_emitted": "tokens",
+        "proposer_stalls": "stalls",
+    }
+
+    def metrics_registry(self) -> obs.MetricsRegistry:
+        """Assemble the full typed registry for this engine, RIGHT NOW:
+        every ``kv_stats`` counter mirrored verbatim (the snapshot
+        subsumes the legacy dict value-for-value — the single source of
+        truth stays the engine's own accounting), swap-pool counters,
+        derived-rate gauges, and — when telemetry is attached — the live
+        TTFT / queue-wait / inter-token histograms."""
+        reg = obs.MetricsRegistry()
+        for key, val in self.kv_stats.items():
+            c = reg.counter(key, unit=self._METRIC_UNITS.get(key, ""),
+                            help=f"engine kv_stats[{key!r}]")
+            c.value = val
+        for key in ("swapped_out_blocks", "restored_blocks",
+                    "dropped_blocks", "host_bytes_total"):
+            c = reg.counter(
+                f"swap_{key}",
+                unit="bytes" if "bytes" in key else "blocks",
+                help=f"KVSwap stats[{key!r}]")
+            c.value = self.swap.stats[key]
+        reg.gauge("swap_host_bytes", unit="bytes",
+                  help="host bytes currently holding swapped snapshots"
+                  ).set(self.swap.stats["host_bytes"])
+        reg.gauge("prefix_hit_rate",
+                  help="fraction of admitted prompt tokens served from "
+                       "the prefix cache").set(self.prefix_hit_rate)
+        stats = getattr(self, "last_logit_stats", None)
+        if stats is not None:
+            reg.gauge("round_off_deviation",
+                      help="max round_off logit deviation over the last "
+                           "decode step (paper's Kahan-vs-naive metric)"
+                      ).set(float(np.max(stats["round_off"])))
+        if self.obs.enabled:
+            reg.merge(self.obs.metrics)
+        return reg
+
+    def metrics_snapshot(self) -> dict:
+        """Plain dict of every metric — contains every ``kv_stats`` key
+        with the identical value plus derived gauges and (with telemetry)
+        histogram summaries. This is the JSON ``--metrics`` exports and
+        the dict the launcher's final summary line renders from."""
+        return self.metrics_registry().snapshot()
+
+    def metrics_prometheus(self) -> str:
+        """Prometheus text exposition of the same registry."""
+        return self.metrics_registry().to_prometheus()
+
     # ------------------------------------------------------- internals ----
 
     @staticmethod
@@ -1026,12 +1172,19 @@ class DecodeEngine:
                              jnp.asarray([tok], jnp.int32))
         host_stats = {k: np.asarray(v) for k, v in stats.items()}
         tripped = self._guard_tripped(host_stats, [(0, req)])
+        if self.obs.enabled:
+            # the decode span opens either way; the quarantine path
+            # closes it again via _close_span, keeping B/E balanced
+            self.obs.trace.end("prefill", rid=req.rid)
+            self.obs.trace.begin("decode", rid=req.rid)
         if tripped:
             # not yet registered as decoding — route through the shared
             # quarantine path so slot + blocks release uniformly
             self.scheduler.start_decoding(req)
             self._quarantine(req, tripped[0][1])
             return
+        if self.obs.enabled:
+            self._h_ttft.observe(self._step_count - req.submit_step)
         req.output.append(tok)
         req.logprobs.append(float(stats["logprob"][0]))
         req.last_progress_step = self._step_count
@@ -1042,6 +1195,9 @@ class DecodeEngine:
             self.scheduler.start_decoding(req)
 
     def _decode_step(self) -> None:
+        if self.obs.enabled:
+            self.obs.trace.instant("decode_step",
+                                   batch=len(self.scheduler.decoding))
         prefilling = [r.slot for r in self.scheduler.prefilling]
         before = self.caches
         rows, packed_dev, self.caches = self._decode(
@@ -1135,6 +1291,10 @@ class DecodeEngine:
 
     def _retire(self, req: Request) -> None:
         slot = req.slot
+        if self.obs.enabled:
+            self.obs.trace.end("decode", rid=req.rid)
+            self.obs.trace.instant("retired", rid=req.rid,
+                                   emitted=len(req.output))
         self._on_retire(req)
         self.scheduler.retire(req)
         # Point the slot's tables back at the null block so the next
@@ -1254,6 +1414,9 @@ class SpecDecodeEngine(DecodeEngine):
         decoding = [self.scheduler.decoding[s]
                     for s in sorted(self.scheduler.decoding)]
         ks = [self._effective_k(r) for r in decoding]
+        if self.obs.enabled:
+            self.obs.trace.instant("verify_step", batch=len(decoding),
+                                   drafted=sum(ks))
         stalled = (self.injector is not None
                    and self.injector.fire("proposer_stall",
                                           self._step_count))
@@ -1386,3 +1549,14 @@ class SpecDecodeEngine(DecodeEngine):
         factor the ECM speedup model forecasts)."""
         walks = self.kv_stats["spec_slot_steps"]
         return self.kv_stats["spec_emitted"] / walks if walks else 0.0
+
+    def metrics_registry(self) -> obs.MetricsRegistry:
+        reg = super().metrics_registry()
+        reg.gauge("acceptance_rate",
+                  help="fraction of drafted tokens the target accepted"
+                  ).set(self.acceptance_rate)
+        reg.gauge("mean_accepted_length", unit="tokens",
+                  help="tokens emitted per per-slot verify walk (the "
+                       "measured side of predicted_spec_speedup)"
+                  ).set(self.mean_accepted_length)
+        return reg

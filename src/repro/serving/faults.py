@@ -43,6 +43,8 @@ from dataclasses import dataclass
 import jax
 import numpy as np
 
+from repro import obs
+
 
 class ServingError(RuntimeError):
     """Base class for recoverable serving-stack failures."""
@@ -71,8 +73,8 @@ class ProposerStallError(ServingError):
 class StallError(ServingError):
     """``run_until_done`` exhausted ``max_steps`` with unfinished
     requests. Carries per-request diagnostics (state, blocks held, steps
-    since last progress) — the same list the engine mirrors into
-    ``kv_stats['stall_diagnostics']``."""
+    since last progress); with telemetry attached the engine also emits
+    the same fields as one ``stall`` trace event per stuck request."""
 
     def __init__(self, msg: str, diagnostics: list[dict]):
         super().__init__(msg)
@@ -162,6 +164,10 @@ class FaultInjector:
                 raise ValueError(f"unknown fault site {f.site!r}; "
                                  f"expected one of {self.SITES}")
         self.log: list[tuple[int, str, dict]] = []
+        # shared telemetry handle (set by the owning engine); firings
+        # stamp their OWN step — the injector may be consulted before
+        # the engine advances the shared trace clock
+        self.obs = obs.NULL
 
     def _key(self, site: str, step: int) -> jax.Array:
         key = jax.random.key(self.seed)
@@ -187,6 +193,9 @@ class FaultInjector:
                 continue
             f.fired += 1
             self.log.append((step, site, {}))
+            if self.obs.enabled:
+                self.obs.trace.instant("fault_injected", step=step,
+                                       site=site)
             return True
         return False
 
@@ -222,15 +231,20 @@ class FailoverServer:
         self.primary.submit(req)
 
     def _sweep(self) -> None:
+        tele = self.primary.obs
         for req in self._drain(self.primary):
             req.reset_for_retry()
             if self.degraded is None:
                 self.degraded = self._factory()
             self.retried.append(req)
+            if tele.enabled:
+                tele.trace.instant("failover_retry", rid=req.rid)
             self.degraded.submit(req)
         if self.degraded is not None:
             for req in self._drain(self.degraded):
                 req.state = "failed"
+                if tele.enabled:
+                    tele.trace.instant("failover_failed", rid=req.rid)
                 self.failed.append(req)
 
     @staticmethod
@@ -281,4 +295,5 @@ def degraded_engine(primary):
         max_context=primary.layout.max_context,
         block_size=primary.layout.block_size,
         prefill_chunk=primary.scheduler.prefill_chunk,
-        guard=primary.guard)
+        guard=primary.guard,
+        telemetry=primary.obs if primary.obs.enabled else None)

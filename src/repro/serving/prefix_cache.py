@@ -53,6 +53,8 @@ from __future__ import annotations
 
 from dataclasses import dataclass, field
 
+from repro import obs
+
 
 def _lcp(a, b) -> int:
     """Length of the longest common prefix of two token sequences."""
@@ -116,6 +118,8 @@ class PrefixCache:
         self.stats = {"requests": 0, "hits": 0, "hit_tokens": 0,
                       "prompt_tokens": 0, "cow_blocks": 0,
                       "evicted_blocks": 0, "nodes": 0}
+        # shared telemetry handle (set by the owning engine)
+        self.obs = obs.NULL
 
     # ------------------------------------------------------------ match ----
 
@@ -238,12 +242,15 @@ class PrefixCache:
             if (parent is not self.root and not parent.children
                     and self.allocator.refcount(parent.block) == 1):
                 heapq.heappush(heap, entry(parent))
+        if freed and self.obs.enabled:
+            self.obs.trace.instant("prefix_evict", freed=freed,
+                                   requested=n)
         return freed
 
     # ------------------------------------------------------------ stats ----
 
     def note_admitted(self, hit: int, prompt_len: int,
-                      cow: bool) -> None:
+                      cow: bool, rid: int | None = None) -> None:
         """Admission-time accounting (match() itself stays side-effect
         free so re-matching a head-blocked request doesn't inflate the
         hit rate)."""
@@ -252,6 +259,11 @@ class PrefixCache:
         if hit:
             self.stats["hits"] += 1
             self.stats["hit_tokens"] += hit
+            if self.obs.enabled:
+                self.obs.trace.instant("prefix_hit", rid=rid,
+                                       hit_tokens=hit,
+                                       prompt_tokens=prompt_len,
+                                       cow=int(cow))
         if cow:
             self.stats["cow_blocks"] += 1
 

@@ -27,6 +27,7 @@ from __future__ import annotations
 
 import numpy as np
 
+from repro import obs
 from repro.models import paged
 
 
@@ -47,6 +48,9 @@ class KVSwap:
         self.stats = {"swapped_out_blocks": 0, "restored_blocks": 0,
                       "dropped_blocks": 0, "host_bytes": 0,
                       "host_bytes_total": 0}
+        # the owning engine shares its telemetry handle; block counts
+        # only in event args (bytes vary with kv_dtype)
+        self.obs = obs.NULL
 
     def __len__(self) -> int:
         return len(self._store)
@@ -64,6 +68,9 @@ class KVSwap:
         nbytes = sum(a.nbytes for a in snap.values())
         self.stats["host_bytes"] += nbytes
         self.stats["host_bytes_total"] += nbytes
+        if self.obs.enabled:
+            self.obs.trace.instant("swap_out", rid=rid,
+                                   blocks=len(blocks))
 
     def swap_in(self, rid: int, caches, blocks: list[int]):
         """Restore ``rid``'s snapshot into ``blocks`` (same count, any
@@ -75,10 +82,15 @@ class KVSwap:
             f"{len(blocks)}")
         self.stats["restored_blocks"] += len(blocks)
         self.stats["host_bytes"] -= sum(a.nbytes for a in snap.values())
+        if self.obs.enabled:
+            self.obs.trace.instant("swap_in", rid=rid, blocks=len(blocks))
         return paged.restore_blocks(caches, blocks, snap)
 
     def drop(self, rid: int) -> None:
         if rid in self._store:
             snap = self._store.pop(rid)
-            self.stats["dropped_blocks"] += self._nblocks.pop(rid)
+            n = self._nblocks.pop(rid)
+            self.stats["dropped_blocks"] += n
             self.stats["host_bytes"] -= sum(a.nbytes for a in snap.values())
+            if self.obs.enabled:
+                self.obs.trace.instant("swap_drop", rid=rid, blocks=n)

@@ -1,0 +1,329 @@
+"""Telemetry tests: the engine-step trace must be DETERMINISTIC (same
+seed + same fault log => identical event-key sequence, across reruns,
+kv_dtypes and both speculative proposers), the typed metrics snapshot
+must subsume the legacy ``kv_stats`` dict value-for-value, stall
+diagnostics must survive their move from ``kv_stats`` onto structured
+trace events, and the whole recorder must be a no-op when detached
+(``obs.NULL``)."""
+
+import collections
+import json
+
+import jax
+import pytest
+
+from repro import obs
+from repro.configs import get_config, reduced
+from repro.models import api, common
+from repro.obs import (Counter, MetricsRegistry, ResidualLog,
+                       ResidualRecord, Tracer, residual_row)
+from repro.obs.metrics import Histogram
+from repro.serving.engine import DecodeEngine, Request, SpecDecodeEngine
+from repro.serving.faults import FaultInjector, FaultSpec, StallError
+from repro.spec import DraftModelProposer, NGramProposer
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = reduced(get_config("qwen1.5-0.5b")).with_(num_layers=2)
+    params = common.init_params(api.schema(cfg), jax.random.key(0))
+    return cfg, params
+
+
+MAX_CONTEXT = 64
+BLOCK = 16
+CHUNK = 32
+
+# Fixed workload: a long prompt (two prefill chunks), a short one, and a
+# third that must queue behind the 2-slot pool — exercising queued /
+# prefill / decode spans and the admission path. No eos_id, so every
+# request runs to max_new_tokens and the schedule depends only on counts,
+# never on logit values (the cross-dtype determinism contract).
+PROMPTS = [list(range(10, 30)), [3, 1, 4, 1, 5], list(range(40, 47))]
+MAX_NEW = 6
+
+
+def _engine(cfg, params, klass=DecodeEngine, **kw):
+    kw.setdefault("max_slots", 2)
+    kw.setdefault("max_context", MAX_CONTEXT)
+    kw.setdefault("block_size", BLOCK)
+    kw.setdefault("prefill_chunk", CHUNK)
+    return klass(cfg, params, **kw)
+
+
+def _serve(cfg, params, klass=DecodeEngine, **kw):
+    engine = _engine(cfg, params, klass,
+                     telemetry=kw.pop("telemetry", obs.Telemetry()), **kw)
+    reqs = [Request(rid=i, prompt=list(p), max_new_tokens=MAX_NEW)
+            for i, p in enumerate(PROMPTS)]
+    for r in reqs:
+        engine.submit(r)
+    engine.run_until_done()
+    assert all(r.done for r in reqs)
+    return engine
+
+
+# ------------------------------------------------------- unit: trace ------
+
+
+def test_trace_key_excludes_wall_clock():
+    """wall_clock=True stamps events but never changes their identity."""
+    seqs = []
+    for wall in (False, True):
+        t = Tracer(wall_clock=wall)
+        t.set_step(3)
+        t.begin("prefill", rid=0, tokens=20)
+        t.instant("prefill_chunk", rid=0, pos0=0, tokens=20)
+        t.end("prefill", rid=0)
+        seqs.append(t.key_sequence())
+        assert all((ev.wall is not None) == wall for ev in t.events)
+    assert seqs[0] == seqs[1]
+    # seq orders events within a step; args are sorted into the key
+    assert seqs[0][0] == (3, 0, "prefill", "B", 0, (("tokens", 20),))
+
+
+def test_trace_exports(tmp_path):
+    t = Tracer()
+    t.begin("decode", rid=2)
+    t.set_step(1)
+    t.instant("decode_step", batch=1)
+    t.end("decode", rid=2)
+
+    jl = tmp_path / "t.jsonl"
+    assert t.to_jsonl(jl) == 3
+    lines = [json.loads(x) for x in jl.read_text().splitlines()]
+    assert [d["name"] for d in lines] == ["decode", "decode_step", "decode"]
+    assert lines[1] == {"step": 1, "seq": 1, "name": "decode_step",
+                        "ph": "i", "rid": None, "args": {"batch": 1}}
+
+    cj = tmp_path / "t.json"
+    assert t.to_chrome(cj) == 3
+    doc = json.loads(cj.read_text())
+    evs = doc["traceEvents"]
+    meta = [e for e in evs if e["ph"] == "M"]
+    # one engine track plus one per request rid, tid = rid + 1
+    assert {(m["tid"], m["args"]["name"]) for m in meta} == {
+        (0, "engine"), (3, "request 2")}
+    inst = next(e for e in evs if e["name"] == "decode_step")
+    assert inst["s"] == "t" and inst["tid"] == 0
+    assert inst["ts"] == 1 * 1000  # step clock: one step == 1000 us
+
+
+# ----------------------------------------------------- unit: metrics ------
+
+
+def test_counter_monotonicity():
+    c = Counter("n")
+    c.inc(2)
+    c.set(5)
+    with pytest.raises(ValueError):
+        c.inc(-1)
+    with pytest.raises(ValueError):
+        c.set(4)
+    assert c.value == 5
+
+
+def test_registry_kinds_and_merge():
+    reg = MetricsRegistry()
+    assert reg.counter("steps") is reg.counter("steps")  # get-or-create
+    with pytest.raises(ValueError):
+        reg.gauge("steps")                               # kind collision
+    live = MetricsRegistry()
+    h = live.histogram("ttft_steps", buckets=(1, 4))
+    reg.merge(live)
+    h.observe(3)                      # merged by reference: stays live
+    assert reg["ttft_steps"].count == 1
+    with pytest.raises(ValueError):
+        reg.merge(live)               # name collision
+
+
+def test_histogram_and_prometheus():
+    h = Histogram("w", buckets=(1, 2, 4))
+    for v in (0.5, 3, 100):
+        h.observe(v)
+    assert h.summary() == {"count": 3, "sum": 103.5, "mean": 34.5,
+                           "min": 0.5, "max": 100}
+    with pytest.raises(ValueError):
+        Histogram("bad", buckets=(4, 2))
+    reg = MetricsRegistry()
+    reg._metrics["w"] = h
+    reg.counter("decode_steps", unit="steps").inc(7)
+    text = reg.to_prometheus()
+    assert "# TYPE repro_w histogram" in text
+    assert 'repro_w_bucket{le="4"} 2' in text      # cumulative
+    assert 'repro_w_bucket{le="+Inf"} 3' in text
+    assert "repro_w_count 3" in text
+    assert "# TYPE repro_decode_steps counter" in text
+    assert "repro_decode_steps 7" in text
+
+
+# --------------------------------------------------- unit: residuals ------
+
+
+def test_residual_rows():
+    rec = ResidualRecord("decode_speedup/int8", 1.6, 1.2, "wallclock")
+    assert rec.ratio == pytest.approx(0.75)
+    with pytest.raises(ValueError):
+        ResidualRecord("x", 1.0, 1.0, "vibes")
+    name, us, derived = residual_row("kv_traffic/int8", 1.88, 1.88,
+                                     basis="counter", dtype="int8")
+    assert name == "ecm_residual/kv_traffic/int8" and us == "0"
+    assert derived == ("predicted=1.8800 measured=1.8800 ratio=1.0000"
+                       " basis=counter dtype=int8")
+    log = ResidualLog()
+    log.record("a", 2.0, 1.0, basis="counter")
+    log.record("b", 1.0, 1.0, basis="wallclock")
+    assert len(log) == 2
+    assert [r[0] for r in log.rows()] == ["ecm_residual/a",
+                                          "ecm_residual/b"]
+
+
+# ------------------------------------------------ engine: determinism -----
+
+
+@pytest.mark.parametrize("kv_dtype", ["bf16", "int8", "fp8"])
+def test_trace_deterministic_across_reruns(setup, kv_dtype):
+    """Same seed, same workload => bit-identical event-key sequence."""
+    cfg, params = setup
+    c = cfg.with_(kv_dtype=kv_dtype)
+    a = _serve(c, params).obs.trace.key_sequence()
+    b = _serve(c, params).obs.trace.key_sequence()
+    assert a == b and len(a) > 0
+
+
+def test_trace_identical_across_kv_dtypes(setup):
+    """Event args carry only counts (tokens/blocks/steps), never bytes or
+    logit values — so with no eos_id the full key sequence is IDENTICAL
+    across kv_dtypes, not merely same-length."""
+    cfg, params = setup
+    seqs = [_serve(cfg.with_(kv_dtype=dt), params).obs.trace.key_sequence()
+            for dt in ("bf16", "int8", "fp8")]
+    assert seqs[0] == seqs[1] == seqs[2]
+
+
+@pytest.mark.parametrize("proposer", ["ngram", "draft"])
+def test_spec_trace_deterministic(setup, proposer):
+    cfg, params = setup
+
+    def mk():
+        p = (NGramProposer() if proposer == "ngram"
+             else DraftModelProposer(cfg, params))
+        return _serve(cfg, params, SpecDecodeEngine, proposer=p, spec_k=2)
+
+    ea, eb = mk(), mk()
+    assert ea.obs.trace.key_sequence() == eb.obs.trace.key_sequence()
+    assert len(ea.obs.trace.select("verify_step")) > 0
+
+
+def test_trace_deterministic_under_fault_injection(setup):
+    """Same fault-injector seed => the injected faults land on the same
+    steps and the whole trace (including fault_injected / guard_trip /
+    quarantined events) reproduces."""
+    cfg, params = setup
+
+    def run():
+        inj = FaultInjector(5, [FaultSpec(site="logit_nan", rate=0.5),
+                                FaultSpec(site="alloc_fail", rate=0.3)])
+        engine = _engine(cfg, params, fault_injector=inj,
+                         telemetry=obs.Telemetry())
+        for i, p in enumerate(PROMPTS):
+            engine.submit(Request(rid=i, prompt=list(p),
+                                  max_new_tokens=MAX_NEW))
+        engine.run_until_done()
+        return engine
+
+    ea, eb = run(), run()
+    assert ea.obs.trace.key_sequence() == eb.obs.trace.key_sequence()
+    assert len(ea.obs.trace.select("fault_injected")) > 0
+
+
+# --------------------------------------------------- engine: spans --------
+
+
+def test_spans_balanced_and_lifecycle(setup):
+    cfg, params = setup
+    engine = _serve(cfg, params)
+    tr = engine.obs.trace
+    opened = collections.Counter(
+        (ev.rid, ev.name) for ev in tr.events if ev.ph == "B")
+    closed = collections.Counter(
+        (ev.rid, ev.name) for ev in tr.events if ev.ph == "E")
+    assert opened == closed
+    for rid in range(len(PROMPTS)):
+        names = [ev.name for ev in tr.events
+                 if ev.rid == rid and ev.ph == "B"]
+        assert names == ["queued", "prefill", "decode"]
+        (ret,) = tr.select("retired", rid=rid)
+        assert ret.args["emitted"] == MAX_NEW
+    # rid 2 queued behind the 2-slot pool: its queued span closes at a
+    # later step than it opened
+    (qb,) = [e for e in tr.select("queued", rid=2) if e.ph == "B"]
+    (qe,) = [e for e in tr.select("queued", rid=2) if e.ph == "E"]
+    assert qe.step > qb.step
+
+
+def test_stall_diagnostics_on_trace(setup):
+    """kv_stats['stall_diagnostics'] is gone; the same fields now arrive
+    as one structured 'stall' instant per stuck request, and the
+    StallError keeps carrying them."""
+    cfg, params = setup
+    engine = _engine(cfg, params, telemetry=obs.Telemetry())
+    engine.submit(Request(rid=7, prompt=[1, 2, 3], max_new_tokens=12))
+    with pytest.raises(StallError) as e:
+        engine.run_until_done(max_steps=2)
+    assert "stall_diagnostics" not in engine.kv_stats
+    (diag,) = e.value.diagnostics
+    (ev,) = engine.obs.trace.select("stall")
+    assert ev.rid == diag["rid"] == 7
+    assert ev.args == {k: v for k, v in diag.items() if k != "rid"}
+    assert ev.args["state"] == "decoding" and ev.args["emitted"] >= 1
+
+
+# -------------------------------------------------- engine: metrics -------
+
+
+def test_metrics_snapshot_subsumes_kv_stats(setup):
+    cfg, params = setup
+    engine = _serve(cfg, params)
+    snap = engine.metrics_snapshot()
+    for key, val in engine.kv_stats.items():
+        assert snap[key] == val, key
+    for key in ("swap_swapped_out_blocks", "swap_host_bytes",
+                "prefix_hit_rate"):
+        assert key in snap
+    # telemetry histograms ride along: every request got a first token
+    # and waited in the queue
+    assert snap["ttft_steps"]["count"] == len(PROMPTS)
+    assert snap["queue_wait_steps"]["count"] == len(PROMPTS)
+
+
+def test_metrics_without_telemetry_matches_kv_stats(setup):
+    """metrics_snapshot() works on an un-instrumented engine (obs.NULL):
+    same counters, no histogram series."""
+    cfg, params = setup
+    engine = _serve(cfg, params, telemetry=None)
+    assert engine.obs is obs.NULL and not engine.obs.enabled
+    snap = engine.metrics_snapshot()
+    for key, val in engine.kv_stats.items():
+        assert snap[key] == val, key
+    assert "ttft_steps" not in snap
+
+
+def test_spec_metrics_add_acceptance_gauges(setup):
+    cfg, params = setup
+    engine = _serve(cfg, params, SpecDecodeEngine,
+                    proposer=NGramProposer(), spec_k=2)
+    snap = engine.metrics_snapshot()
+    assert snap["acceptance_rate"] == pytest.approx(engine.acceptance_rate)
+    assert snap["mean_accepted_length"] == pytest.approx(
+        engine.mean_accepted_length)
+
+
+def test_engine_prometheus_export(setup):
+    cfg, params = setup
+    engine = _serve(cfg, params)
+    text = engine.metrics_prometheus()
+    assert "# TYPE repro_decode_steps counter" in text
+    assert "# TYPE repro_prefix_hit_rate gauge" in text
+    assert "# TYPE repro_ttft_steps histogram" in text
+    assert f"repro_ttft_steps_count {len(PROMPTS)}" in text

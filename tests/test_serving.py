@@ -310,3 +310,6 @@ def test_kv_traffic_accounting(setup):
     st = engine.kv_stats
     assert st["paged_bytes"] > 0
     assert st["contiguous_bytes"] > 4 * st["paged_bytes"]
+    # the typed metrics snapshot subsumes kv_stats value-for-value
+    snap = engine.metrics_snapshot()
+    assert all(snap[k] == v for k, v in st.items())
