@@ -245,6 +245,77 @@ def _run_obs_overhead(cfg, params) -> list[tuple]:
              f" trace=bench_serving_trace.json")]
 
 
+def _run_profile_attribution(cfg, params) -> list[tuple]:
+    """ECM attribution on the live engine: the same seeded mixed
+    workload through a profiling Telemetry. Wave 0 warms every jit
+    cache AND the profiler's HLO-cost cache (lower+compile happens once
+    per signature), then ``Profiler.reset()`` drops the warmup's
+    wall/counters so the measured wave is steady-state. Two rows:
+
+      serving/profile/attribution   the decode-step breakdown (bound
+                                    category + per-category fractions)
+                                    with an asserted ceiling on the
+                                    unattributed share — on a CPU host
+                                    Python scheduling legitimately
+                                    dominates, so the bound is generous
+                                    (0.98); the row exists so a future
+                                    regression that stops attributing
+                                    anything at all fails loudly
+      serving/profile/overhead      profiling engine vs NULL engine on
+                                    the warm wave — the <=1.05x
+                                    acceptance bound's bench row
+    """
+    prompts = _prompts("mixed",
+                       np.random.default_rng(100 * _MIX_SEED["mixed"] + 4))
+
+    def serve(telemetry):
+        engine = DecodeEngine(cfg, params, max_slots=4,
+                              max_context=MAX_CONTEXT, block_size=BLOCK,
+                              prefill_chunk=32, prefix_cache=True,
+                              telemetry=telemetry)
+        for wave in range(2):       # wave 0 warms jit + HLO-cost caches
+            reqs = [Request(rid=100 * wave + i, prompt=p,
+                            max_new_tokens=MAX_NEW)
+                    for i, p in enumerate(prompts)]
+            for r in reqs:
+                engine.submit(r)
+            if wave and telemetry is not None and telemetry.profile:
+                telemetry.profile.reset()
+            t0 = time.perf_counter()
+            engine.run_until_done()
+            dt = time.perf_counter() - t0
+        return engine, sum(len(r.output) for r in reqs) / dt, dt
+
+    _, tok0, dt0 = serve(None)
+    tele = obs.Telemetry(wall_clock=True, profile=True)
+    tele.profile.calibrate()
+    eng, tok1, dt1 = serve(tele)
+    tele.profile.to_json("bench_serving_attribution.json")
+    att = {a.phase: a for a in tele.profile.attribution()}
+    dec = att["decode_step"]
+    fr = dec.fractions
+    # the bound: SOMETHING must be attributed. On this CPU host the
+    # launch's HBM/compute terms are small and Python scheduling is
+    # real, so 0.98 is the "the profiler went blind" tripwire, not a
+    # performance target.
+    assert fr["unattributed"] <= 0.98, \
+        f"decode_step unattributed {fr['unattributed']:.2%} — " \
+        f"attribution found (almost) nothing"
+    pct = " ".join(f"{c}={fr[c]:.3f}"
+                   for c in ("compute", "hbm", "host", "dispatch",
+                             "unattributed"))
+    st = eng.kv_stats
+    steps = max(st["decode_steps"] + st["prefill_chunks"], 1)
+    return [
+        ("serving/profile/attribution", f"{dt1 * 1e6 / steps:.0f}",
+         f"bound={dec.bound} calls={dec.calls} {pct}"
+         f" phases={len(att)} json=bench_serving_attribution.json"),
+        ("serving/profile/overhead", f"{dt1 * 1e6 / steps:.0f}",
+         f"tok_s={tok0:.1f} tok_s_prof={tok1:.1f}"
+         f" overhead={dt1 / dt0:.3f}x"),
+    ]
+
+
 def _run_restore_residual(cfg, params) -> tuple:
     """The preemption crossover, measured: restore a 6-block snapshot
     from host memory vs re-running the chunked prefill that produced it.
@@ -318,6 +389,7 @@ def run() -> list[tuple]:
     rows.append(_run_preempt_sweep(cfg, params, "long", 4))
     rows.extend(_run_block_sweep(cfg, params, 4))
     rows.extend(_run_obs_overhead(cfg, params))
+    rows.extend(_run_profile_attribution(cfg, params))
     rows.append(_run_restore_residual(cfg, params))
     return rows
 

@@ -15,7 +15,9 @@
                           the ECM walk-bookkeeping forecast, across
                           proposers / prompt mixes / kv_dtypes / k
   roofline_report         §Roofline table from the dry-run artifacts
-                          (one row per cell; skips when artifacts absent)
+                          (one row per cell); with no artifacts, falls
+                          back to LIVE attribution rows from a profiled
+                          engine (roofline/live/<phase>)
 
 CLI:
   --only SUBSTR   run only modules whose name contains SUBSTR (repeatable)
@@ -40,6 +42,21 @@ CLI:
                   same work, so the delta lives on the host, not in the
                   code. Series only one side has are ignored (benches
                   come and go); CI feeds the last committed BENCH_*.json.
+
+                  Drift calibration: every run opens with a
+                  ``calibration/kahan_dot_ref`` row — a pinned-shape
+                  Kahan-dot reference kernel whose ratio to the
+                  committed constant (repro.obs.profile
+                  .CALIBRATION_REF_S) is this run's
+                  ``host_drift_factor``, stamped on every wallclock row
+                  and residual. The gate normalizes both sides' tok/s
+                  by their factors before judging drift: a loss that
+                  disappears under normalization is drift-EXPLAINED
+                  (the reference kernel slowed down by the same ratio)
+                  and, when every drift line is explained, the run
+                  exits with the distinct code ``DRIFT_EXIT_CODE`` (4)
+                  so CI can tell "host was slow" from "code got slow".
+                  Counter-basis rows stay gated at 1e-6 regardless.
   --compare-tolerance FRAC   allowed fractional tok/s loss before a
                   host-drift report (default 0.20)
 """
@@ -89,6 +106,43 @@ def _tok_s(derived: str) -> float | None:
     return float(m.group(1)) if m else None
 
 
+# The drift-calibration anchor row every trajectory JSON opens with, and
+# the distinct exit code --compare uses when host drift (not a code
+# regression) explains every flagged tok/s loss.
+CALIBRATION_ROW = "calibration/kahan_dot_ref"
+DRIFT_EXIT_CODE = 4
+
+
+def calibration_row() -> tuple:
+    """Measure the pinned-shape Kahan-dot reference at bench start; the
+    ratio to the committed constant is this run's host_drift_factor."""
+    from repro.obs import profile as obs_profile
+    cal = obs_profile.calibrate()
+    return (CALIBRATION_ROW, f"{cal.ref_s * 1e6:.0f}",
+            f"host_drift_factor={cal.host_drift_factor:.3f}"
+            f" dispatch_us={cal.dispatch_s * 1e6:.1f}"
+            f" machine_scale={cal.machine_scale:.1f}"
+            f" elems={cal.elems}")
+
+
+def _is_wallclock_row(derived: str) -> bool:
+    """Rows whose headline numbers come off the wall clock — the ones
+    that carry (and can be normalized by) a host_drift_factor."""
+    return ("tok_s=" in (derived or "")
+            or "basis=wallclock" in (derived or ""))
+
+
+def _drift_factor(rows: list[dict]) -> float | None:
+    """The host_drift_factor recorded by a trajectory's calibration row
+    (None for pre-calibration trajectories)."""
+    for r in rows:
+        if r.get("name") == CALIBRATION_ROW:
+            f = _fields(r.get("derived", "")).get("host_drift_factor")
+            if f:
+                return f
+    return None
+
+
 # key=value fields in derived strings; numeric values may carry an 'x'
 # suffix (ratios) and scientific notation.
 _FIELD_RE = re.compile(
@@ -134,14 +188,22 @@ def find_regressions(current: list[dict], prev_path: str,
     Returns (counter_mismatches, drift, shared) where
     ``counter_mismatches`` is [(name, field, was, now)] for every
     deterministic counter that moved beyond ~1e-6 relative (hard
-    failures), ``drift`` is [(name, was, now)] for shared ``tok_s``
-    series that lost more than ``tolerance`` (reported as possible host
-    drift — wall clock on shared runners is noisy, and with counters
-    unmoved the engine provably did the same work), and ``shared`` is
-    the shared-series count."""
+    failures), ``drift`` is [(name, was, now, explained)] for shared
+    ``tok_s`` series that lost more than ``tolerance`` (reported as
+    possible host drift — wall clock on shared runners is noisy, and
+    with counters unmoved the engine provably did the same work), and
+    ``shared`` is the shared-series count.
+
+    ``explained`` is True when normalizing both sides by their runs'
+    measured ``host_drift_factor`` (the calibration rows) brings the
+    loss back inside ``tolerance`` — the reference kernel slowed by the
+    same ratio the workload did, so the host, not the code, moved.
+    False when normalization does NOT recover it, or when either side
+    predates the calibration row (nothing to normalize by)."""
     with open(prev_path) as f:
         prev = json.load(f)
     ref = {r["name"]: r.get("derived", "") for r in prev}
+    hdf_prev, hdf_now = _drift_factor(prev), _drift_factor(current)
     mismatches, drift, shared = [], [], 0
     for row in current:
         name = row["name"]
@@ -165,7 +227,14 @@ def find_regressions(current: list[dict], prev_path: str,
                 mismatches.append((name, field, was_v, now_v))
         was, now = _tok_s(ref[name]), _tok_s(row.get("derived", ""))
         if was and now and now < was * (1.0 - tolerance):
-            drift.append((name, was, now))
+            explained = False
+            if hdf_prev and hdf_now:
+                # normalize to reference-host tok/s: a slower host has
+                # factor > 1, and tok_s * factor recovers what the
+                # reference host would have measured
+                explained = (now * hdf_now
+                             >= was * hdf_prev * (1.0 - tolerance))
+            drift.append((name, was, now, explained))
     return mismatches, drift, shared
 
 
@@ -197,13 +266,30 @@ def main() -> None:
     print("name,us_per_call,derived")
     collected = []
     failures = 0
+    # drift calibration first: the pinned Kahan-dot reference anchors
+    # every wallclock row below to this host's measured speed
+    hdf = None
+    try:
+        cal_row = calibration_row()
+        print(",".join(str(c) for c in cal_row), flush=True)
+        collected.append({"name": cal_row[0], "us_per_call": cal_row[1],
+                          "derived": cal_row[2]})
+        hdf = _fields(cal_row[2]).get("host_drift_factor")
+    except Exception:
+        failures += 1
+        print("# FAILED calibration")
+        traceback.print_exc()
     for mod in modules:
         try:
             for row in mod.run():
-                print(",".join(str(c) for c in row), flush=True)
+                derived = str(row[2]) if len(row) > 2 else ""
+                if hdf is not None and _is_wallclock_row(derived):
+                    derived += f" host_drift_factor={hdf:.3f}"
+                print(",".join([str(row[0]), str(row[1]), derived]),
+                      flush=True)
                 collected.append({"name": row[0],
                                   "us_per_call": row[1],
-                                  "derived": row[2] if len(row) > 2 else ""})
+                                  "derived": derived})
         except Exception:
             failures += 1
             print(f"# FAILED {mod.__name__}")
@@ -217,10 +303,16 @@ def main() -> None:
             collected, args.compare, args.compare_tolerance)
         for name, field, was, now in mismatches:
             print(f"# COUNTER MISMATCH {name}: {field} {was:g} -> {now:g}")
-        for name, was, now in drift:
+        hdf_txt = f"{hdf:.3f}" if hdf is not None else "n/a"
+        for name, was, now, explained in drift:
+            verdict = ("drift-EXPLAINED: loss disappears after "
+                       "host_drift_factor normalization" if explained
+                       else "NOT explained by measured drift")
             print(f"# POSSIBLE HOST DRIFT {name}: tok_s {was:.1f} -> "
-                  f"{now:.1f} ({now / was - 1.0:+.0%}) — deterministic "
-                  f"counters unchanged, so the engine did the same work")
+                  f"{now:.1f} ({now / was - 1.0:+.0%}) "
+                  f"host_drift_factor={hdf_txt} — deterministic "
+                  f"counters unchanged, so the engine did the same "
+                  f"work; {verdict}")
         if mismatches:
             raise SystemExit(
                 f"{len(mismatches)} deterministic counter(s) moved vs "
@@ -230,6 +322,13 @@ def main() -> None:
               f"counters match; {len(drift)} possible host-drift "
               f"series (>{args.compare_tolerance:.0%} tok/s loss, "
               f"not gating)")
+        if drift and all(x[3] for x in drift):
+            # every flagged loss is the host's, not the code's: exit
+            # with the distinct drift code so CI can record (and
+            # tolerate) a slow-runner episode explicitly
+            print(f"# exiting {DRIFT_EXIT_CODE}: host drift explains "
+                  f"every flagged series")
+            raise SystemExit(DRIFT_EXIT_CODE)
     if failures:
         raise SystemExit(failures)
 

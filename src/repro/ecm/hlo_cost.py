@@ -9,6 +9,10 @@ count:
   * while bodies/conditions × known_trip_count (from backend_config; falls
     back to the max s32 constant in the condition, with a warning),
   * fusion/call/to_apply computations × their caller's multiplier,
+  * conditional branch computations × their caller's multiplier (every
+    branch — one runs per invocation, so this is an upper bound, but the
+    skip branch of a ``pl.when``-predicated kernel block is an identity,
+    so the bound equals the live-block cost),
   * dot FLOPs = 2 · |out| · K (contracting size from lhs),
   * elementwise FLOPs = |out| for arithmetic/transcendental opcodes,
   * bytes = Σ effective (operand + result) sizes per materialized
@@ -66,7 +70,13 @@ _INSTR_RE = re.compile(
 _TRIP_RE = re.compile(r'known_trip_count[":{ ]+n[": ]+"?(\d+)')
 _GROUPS_V2_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
 _GROUPS_V1_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
-_CALLS_RE = re.compile(r"(?:calls|to_apply|condition|body)=%?([\w.\-]+)")
+_CALLS_RE = re.compile(r"(?:calls|to_apply|condition|body|"
+                       r"true_computation|false_computation)=%?([\w.\-]+)")
+# conditional branches (pl.when lowers to these): every branch is priced
+# at the caller's multiplier — an upper bound, since one branch runs per
+# invocation, but the skip-branch of a predicated kernel block is an
+# identity, so the bound IS the live-block cost the ECM model wants.
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
 _OPERANDS_RE = re.compile(r"%([\w.\-]+)")
 
 
@@ -316,6 +326,9 @@ def analyze(text: str, *, default_group: int = 1) -> HloCost:
         comp = comps[cname]
         for instr in comp.instrs:
             refs = _CALLS_RE.findall(instr.line)
+            bm = _BRANCHES_RE.search(instr.line)
+            if bm:
+                refs += _OPERANDS_RE.findall(bm.group(1))
             if not refs:
                 continue
             if instr.op == "while":

@@ -100,6 +100,15 @@ def build_parser() -> argparse.ArgumentParser:
                          "engine-step clock and write it after the run: "
                          "JSONL if PATH ends in .jsonl, Perfetto-loadable "
                          "Chrome trace JSON otherwise")
+    ap.add_argument("--profile", default=None, metavar="PATH",
+                    help="ECM attribution profiling: calibrate the "
+                         "pinned Kahan-dot reference at start, account "
+                         "every engine phase's wall time into compute/"
+                         "HBM/host/dispatch/unattributed from its "
+                         "compiled-HLO cost, write the attribution JSON "
+                         "to PATH and print the rendered table; with "
+                         "--trace, ECM counter tracks are appended to "
+                         "the Chrome trace")
     return ap
 
 
@@ -229,8 +238,16 @@ def main() -> None:
     # telemetry only when asked for: the default engine keeps the
     # zero-overhead NULL recorder. Wall-clock annotation is on here —
     # this is live serving, not a determinism test.
-    telemetry = (obs.Telemetry(wall_clock=True)
-                 if (args.metrics or args.trace) else None)
+    telemetry = (obs.Telemetry(wall_clock=True,
+                               profile=args.profile is not None)
+                 if (args.metrics or args.trace or args.profile) else None)
+    if args.profile:
+        # calibrate at profiler start (the ISSUE's drift contract): the
+        # pinned reference anchors attribution AND reports this host's
+        # drift against the committed constant up front
+        cal = telemetry.profile.calibrate()
+        print(f"profile: kahan_dot ref {cal.ref_s * 1e6:.0f} us, "
+              f"host_drift_factor {cal.host_drift_factor:.3f}")
 
     engine_kw: dict = dict(max_slots=args.slots,
                            max_context=args.max_context,
@@ -316,11 +333,16 @@ def main() -> None:
                 json.dump(snap, f, indent=1, sort_keys=True)
         print(f"metrics: wrote {args.metrics}")
     if args.trace:
-        tracer = telemetry.trace
-        n = (tracer.to_jsonl(args.trace)
+        # telemetry.to_chrome appends the profiler's ECM counter tracks
+        # when --profile is also on (they never enter the event list)
+        n = (telemetry.trace.to_jsonl(args.trace)
              if args.trace.endswith(".jsonl")
-             else tracer.to_chrome(args.trace))
+             else telemetry.to_chrome(args.trace))
         print(f"trace: wrote {n} events to {args.trace}")
+    if args.profile:
+        telemetry.profile.to_json(args.profile)
+        print(telemetry.profile.render())
+        print(f"profile: wrote attribution to {args.profile}")
 
     if args.faults:
         fired = sorted({site for _, site, _ in injector.log})

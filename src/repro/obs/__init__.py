@@ -18,6 +18,11 @@ lives. This package is that method applied to the serving engine:
                (deterministic counter vs wall clock) so the perf
                trajectory can tell model error, code regression and
                host drift apart
+  profile    — the ECM attribution profiler (``Telemetry(profile=True)``):
+               per-phase HLO flops/bytes counters priced on the
+               drift-calibrated machine model, so wall time is
+               *attributed* (compute/HBM/host/dispatch/unattributed),
+               not just measured
 
 ``Telemetry`` bundles the three behind one handle; ``NULL`` is the
 always-off default the engine holds when no telemetry is attached —
@@ -41,18 +46,37 @@ class Telemetry:
     sharing the engine-step clock. ``wall_clock=True`` additionally
     stamps trace events with ``time.perf_counter()`` and lets the
     engine record wall-denominated histograms; it never changes the
-    deterministic event sequence."""
+    deterministic event sequence. ``profile=True`` attaches the ECM
+    attribution ``Profiler`` (``self.profile``, else None) — the engine
+    then records per-phase HLO cost counters and wall seconds; the
+    counter side of the attribution stays deterministic, and the
+    Perfetto counter tracks it produces are merged only at
+    ``to_chrome()`` export, never into the Tracer's event list."""
 
     enabled = True
 
-    def __init__(self, wall_clock: bool = False):
+    def __init__(self, wall_clock: bool = False, profile: bool = False):
         self.wall_clock = wall_clock
         self.trace = Tracer(wall_clock)
         self.metrics = MetricsRegistry()
         self.residuals = ResidualLog()
+        if profile:
+            from repro.obs.profile import Profiler
+            self.profile = Profiler()
+        else:
+            self.profile = None
 
     def set_step(self, step: int) -> None:
         self.trace.set_step(step)
+        if self.profile is not None:
+            self.profile.set_step(step)
+
+    def to_chrome(self, path) -> int:
+        """Chrome-trace export with the profiler's ECM counter tracks
+        appended (when profiling); returns the span/instant count."""
+        extra = (self.profile.counter_events()
+                 if self.profile is not None else None)
+        return self.trace.to_chrome(path, extra_events=extra)
 
 
 class _NullTelemetry:
@@ -62,6 +86,7 @@ class _NullTelemetry:
 
     enabled = False
     wall_clock = False
+    profile = None
 
     def set_step(self, step: int) -> None:
         pass
@@ -75,3 +100,6 @@ NULL = _NullTelemetry()
 __all__ = ["Telemetry", "NULL", "Tracer", "TraceEvent", "MetricsRegistry",
            "Metric", "Counter", "Gauge", "Histogram", "ResidualLog",
            "ResidualRecord", "residual_row"]
+# repro.obs.profile (Profiler, Calibration, calibrate) is imported
+# lazily — it pulls in jax/kernels, which plain telemetry users
+# (metrics scraping, trace readers) should not pay for.

@@ -23,7 +23,10 @@ kinds explicitly:
 Two exports: ``snapshot()`` (plain dict — the JSON the launcher's
 ``--metrics`` writes and the bench rows read) and ``to_prometheus()``
 (the text exposition format, one ``# TYPE`` block per metric, histogram
-as ``_bucket``/``_sum``/``_count``).
+as ``_bucket``/``_sum``/``_count`` plus summary-style
+``{quantile="0.5|0.95|0.99"}`` estimate lines). ``summary()`` carries the
+same p50/p95/p99 (bucket-interpolated — resolution-bounded estimates,
+not exact order statistics).
 """
 
 from __future__ import annotations
@@ -112,10 +115,32 @@ class Histogram(Metric):
     def mean(self) -> float:
         return self.total / self.count if self.count else 0.0
 
+    def quantile(self, q: float) -> float:
+        """Bucket-interpolated quantile estimate (q in [0, 1]).
+
+        Linear interpolation within the bucket holding the q-th
+        observation — the standard Prometheus ``histogram_quantile``
+        estimate, bounded by the bucket resolution. Observations in the
+        +Inf bucket report the observed max (the only bound we have)."""
+        if not 0.0 <= q <= 1.0:
+            raise ValueError(f"quantile must be in [0, 1], got {q}")
+        if not self.count:
+            return 0.0
+        target = q * self.count
+        acc, lo = 0, 0.0
+        for ub, c in zip(self.buckets, self.bucket_counts):
+            if c and acc + c >= target:
+                return min(lo + (target - acc) / c * (ub - lo), self.max)
+            acc += c
+            lo = ub
+        return self.max
+
     def summary(self) -> dict:
         return {"count": self.count, "sum": self.total, "mean": self.mean,
                 "min": self.min if self.count else 0.0,
-                "max": self.max if self.count else 0.0}
+                "max": self.max if self.count else 0.0,
+                "p50": self.quantile(0.50), "p95": self.quantile(0.95),
+                "p99": self.quantile(0.99)}
 
 
 class MetricsRegistry:
@@ -199,6 +224,12 @@ class MetricsRegistry:
                 lines.append(f'{pname}_bucket{{le="+Inf"}} {m.count}')
                 lines.append(f"{pname}_sum {m.total}")
                 lines.append(f"{pname}_count {m.count}")
+                # summary-style quantile estimates alongside the raw
+                # buckets, so dashboards get p50/p95/p99 without a
+                # server-side histogram_quantile()
+                for q in (0.5, 0.95, 0.99):
+                    lines.append(
+                        f'{pname}{{quantile="{q}"}} {m.quantile(q)}')
             else:
                 lines.append(f"{pname} {m.value}")
         return "\n".join(lines) + "\n"

@@ -1,0 +1,283 @@
+"""The ECM attribution profiler: HLO cost counters on the live engine.
+
+PR-8 telemetry records *what happened*; this profiler says *where the
+time went*, the paper's actual method. It hangs off the ``Telemetry``
+handle (``Telemetry(profile=True)``) and per engine phase —
+prefill_chunk / decode_step / verify_step / swap_out / swap_in, plus
+named ``ops.*`` kernel dispatches — combines three sources:
+
+  (a) compiled-HLO flops/bytes extracted ONCE per jitted callable via
+      the trip-count-aware ``repro.ecm.hlo_cost`` model, cached by
+      (phase, arg-shape signature) so the hot path only looks up;
+  (b) the ECM machine model (``repro.ecm.tpu`` / ``machines.TPU_V5E``)
+      pricing those counters into compute / HBM / host-link terms,
+      host-rescaled by the calibration below;
+  (c) measured wall seconds per phase.
+
+``repro.ecm.attribution`` turns the three into the per-phase table;
+exports are JSON, a rendered text report, and Perfetto COUNTER tracks
+(phase "C" events) appended to the Chrome trace at export time — they
+never enter ``Tracer.events``, so the step-clock determinism contract
+(identical key sequences across kv_dtypes and reruns) is untouched.
+
+Drift calibration
+-----------------
+A pinned-shape Kahan-dot reference kernel (``CALIB_ELEMS`` f32
+elements through ``repro.kernels.ops.kahan_dot``) is measured at
+profiler/bench start. Its ratio to the committed constant
+``CALIBRATION_REF_S`` (measured once on the reference CI host) is the
+``host_drift_factor`` stamped on every wallclock-basis bench row and
+residual: factor > 1 means this host is that much slower than the
+reference, so ``benchmarks/run.py --compare`` can normalize tok/s
+series before gating and tell host drift apart from a code regression
+— the ambiguity of the commit-7b2d3e2 drift episode. Counter-basis
+rows never need it (they gate at 1e-6 regardless of host).
+
+The same measurement yields ``machine_scale`` (measured streaming time
+over the TPU-model prediction — how to price TPU-model terms on this
+host) and ``dispatch_s`` (a tiny-shape launch, the per-dispatch
+overhead floor).
+"""
+
+from __future__ import annotations
+
+import json
+import time
+from dataclasses import asdict, dataclass
+
+import numpy as np
+
+from repro.ecm import attribution as ecm_attribution
+from repro.ecm import hlo_cost
+from repro.ecm import tpu as ecm_tpu
+from repro.ecm.machines import TPU_V5E
+from repro.obs.trace import STEP_TICK_US
+
+# Pinned calibration shapes: large enough that the big shape streams
+# (amortizes dispatch), small enough to stay trivial on a CPU host.
+CALIB_ELEMS = 1 << 18
+CALIB_DISPATCH_ELEMS = 1024
+
+# Committed reference: median seconds for the CALIB_ELEMS Kahan dot on
+# the reference CI container, IDLE (measured once; interpret-mode
+# pallas on the CPU runner — hence milliseconds, not the ~64 us a real
+# v5e HBM stream would take). A re-measure on the same class of host
+# lands within ~±10%; a 20-35% move is exactly the host-drift episode
+# (commit 7b2d3e2) the factor exists to expose — measuring this very
+# constant while a test suite churned the same container read 2.6x.
+CALIBRATION_REF_S = 2.6e-3
+
+
+@dataclass(frozen=True)
+class Calibration:
+    """The profiler's measured machine baseline (see module docstring)."""
+
+    ref_s: float              # pinned-shape Kahan-dot median, this host
+    dispatch_s: float         # tiny-shape launch median (dispatch floor)
+    host_drift_factor: float  # ref_s / CALIBRATION_REF_S
+    machine_scale: float      # measured stream time / ECM-model time
+    elems: int = CALIB_ELEMS
+
+    def to_json(self) -> dict:
+        return asdict(self)
+
+
+def calibrate(reps: int = 5, hw: dict = TPU_V5E) -> Calibration:
+    """Measure the pinned-shape Kahan-dot reference on this host.
+
+    Compiles outside timing, takes medians over ``reps``. Cheap (~tens
+    of launches) — run once at profiler or bench start, not per phase.
+    """
+    import jax.numpy as jnp
+
+    from repro.kernels import ops
+
+    def _median_s(n: int) -> float:
+        x = jnp.ones((n,), jnp.float32)
+        ops.kahan_dot(x, x).block_until_ready()      # compile + warm
+        ts = []
+        for _ in range(max(reps, 1)):
+            t0 = time.perf_counter()
+            ops.kahan_dot(x, x).block_until_ready()
+            ts.append(time.perf_counter() - t0)
+        return float(np.median(ts))
+
+    ref_s = _median_s(CALIB_ELEMS)
+    dispatch_s = _median_s(CALIB_DISPATCH_ELEMS)
+    stream_s = max(ref_s - dispatch_s, 1e-9)
+    model_s = ecm_tpu.predicted_runtime_s(ecm_tpu.KAHAN_DOT, CALIB_ELEMS,
+                                          "HBM", hw=hw)
+    return Calibration(ref_s=ref_s, dispatch_s=dispatch_s,
+                       host_drift_factor=ref_s / CALIBRATION_REF_S,
+                       machine_scale=stream_s / model_s)
+
+
+def _signature(args) -> tuple:
+    """Shape/dtype signature of a jitted call's argument tree — the HLO
+    cost cache key. Shapes pin the compiled program; values never do."""
+    import jax
+
+    sig = []
+    for leaf in jax.tree_util.tree_leaves(args):
+        if hasattr(leaf, "shape"):
+            sig.append((tuple(leaf.shape), str(getattr(leaf, "dtype", "?"))))
+        else:
+            sig.append((type(leaf).__name__,))
+    return tuple(sig)
+
+
+class _PhaseStats:
+    """Accumulated counters + wall seconds for one phase."""
+
+    __slots__ = ("calls", "flops", "dot_flops", "hbm_bytes", "host_bytes",
+                 "wall_s")
+
+    def __init__(self):
+        self.calls = 0
+        self.flops = 0.0
+        self.dot_flops = 0.0
+        self.hbm_bytes = 0.0
+        self.host_bytes = 0.0
+        self.wall_s = 0.0
+
+
+class Profiler:
+    """Per-phase cycle accounting on the live engine.
+
+    The engine calls ``record_call`` after each profiled jitted launch
+    (cost from the HLO cache — a miss lowers + compiles once per
+    signature) and ``record`` for phases with no HLO (host swaps).
+    ``attribution()`` prices the accumulated counters via
+    ``ecm.attribution`` using ``self.calibration`` (auto-measured on
+    first use). All of this is OFF unless ``Telemetry(profile=True)``;
+    ``obs.NULL`` and plain ``Telemetry()`` carry ``profile=None`` so
+    the hot path stays the PR-7 single attribute check.
+    """
+
+    def __init__(self, hw: dict = TPU_V5E):
+        self.hw = hw
+        self.calibration: Calibration | None = None
+        self.phases: dict[str, _PhaseStats] = {}
+        self.step = 0
+        self._cost_cache: dict[tuple, hlo_cost.HloCost] = {}
+        self._static_sig: dict[str, tuple] = {}
+        # (step, phase, cumulative flops, cumulative hbm_bytes) — the
+        # Perfetto counter-track samples, kept OUT of Tracer.events.
+        self._samples: list[tuple] = []
+
+    # ------------------------------------------------------ recording ------
+
+    def set_step(self, step: int) -> None:
+        self.step = step
+
+    def calibrate(self, reps: int = 5) -> Calibration:
+        self.calibration = calibrate(reps, self.hw)
+        return self.calibration
+
+    def reset(self) -> None:
+        """Drop accumulated phases/samples but KEEP the HLO cost cache
+        and calibration — benches call this after their untimed warmup
+        wave so compile time never pollutes the attribution."""
+        self.phases = {}
+        self._samples = []
+
+    def record_call(self, phase: str, fn, args, *, wall_s: float = 0.0,
+                    host_bytes: float = 0.0,
+                    static_shapes: bool = False) -> None:
+        """Attribute one launch of jitted ``fn(*args)`` to ``phase``.
+
+        The HLO cost is looked up by (phase, arg-shape signature); a
+        miss lowers and compiles once (outside any timed region the
+        caller cares about — benches warm up first). ``static_shapes``
+        skips even the signature walk after the first call — correct
+        only for phases whose argument shapes never change (the fused
+        decode/verify frames).
+        """
+        if static_shapes and phase in self._static_sig:
+            cost = self._cost_cache[self._static_sig[phase]]
+        else:
+            sig = (phase, _signature(args))
+            cost = self._cost_cache.get(sig)
+            if cost is None:
+                text = fn.lower(*args).compile().as_text()
+                cost = hlo_cost.analyze(text)
+                self._cost_cache[sig] = cost
+            if static_shapes:
+                self._static_sig[phase] = sig
+        self.record(phase, flops=cost.flops, dot_flops=cost.dot_flops,
+                    hbm_bytes=cost.bytes_accessed, host_bytes=host_bytes,
+                    wall_s=wall_s)
+
+    def record(self, phase: str, *, calls: int = 1, flops: float = 0.0,
+               dot_flops: float = 0.0, hbm_bytes: float = 0.0,
+               host_bytes: float = 0.0, wall_s: float = 0.0) -> None:
+        """Accumulate counters for a phase with no compiled HLO (host
+        swaps, or pre-priced costs)."""
+        ps = self.phases.get(phase)
+        if ps is None:
+            ps = self.phases[phase] = _PhaseStats()
+        ps.calls += calls
+        ps.flops += flops
+        ps.dot_flops += dot_flops
+        ps.hbm_bytes += hbm_bytes
+        ps.host_bytes += host_bytes
+        ps.wall_s += wall_s
+        self._samples.append((self.step, phase, ps.flops, ps.hbm_bytes))
+
+    # ----------------------------------------------------- attribution ----
+
+    def attribution(self) -> list:
+        """Per-phase ``PhaseAttribution`` list (calibrates on first use)."""
+        cal = self.calibration or self.calibrate()
+        return [ecm_attribution.attribute_phase(
+                    name, calls=ps.calls, flops=ps.flops,
+                    dot_flops=ps.dot_flops, hbm_bytes=ps.hbm_bytes,
+                    host_bytes=ps.host_bytes, wall_s=ps.wall_s,
+                    machine_scale=cal.machine_scale,
+                    dispatch_s=cal.dispatch_s, hw=self.hw)
+                for name, ps in self.phases.items()]
+
+    def counter_table(self) -> list:
+        """The deterministic identity of the run: per-phase counter rows
+        only (no wall time, no calibration) — two identical seeded runs
+        produce identical tables, which tests/test_profile.py verifies."""
+        out = []
+        for name in sorted(self.phases):
+            ps = self.phases[name]
+            out.append((name, ps.calls, round(ps.flops, 3),
+                        round(ps.dot_flops, 3), round(ps.hbm_bytes, 3),
+                        round(ps.host_bytes, 3)))
+        return out
+
+    def render(self) -> str:
+        cal = self.calibration or self.calibrate()
+        head = (f"calibration: kahan_dot[{cal.elems}] {cal.ref_s * 1e6:.0f} "
+                f"us, dispatch {cal.dispatch_s * 1e6:.0f} us, "
+                f"host_drift_factor {cal.host_drift_factor:.3f}, "
+                f"machine_scale {cal.machine_scale:.1f}")
+        return head + "\n" + ecm_attribution.render(self.attribution())
+
+    def to_json(self, path=None) -> dict:
+        cal = self.calibration or self.calibrate()
+        doc = {"calibration": cal.to_json(),
+               "phases": [a.to_json() for a in self.attribution()]}
+        if path is not None:
+            with open(path, "w") as f:
+                json.dump(doc, f, indent=1)
+        return doc
+
+    # ------------------------------------------------ Perfetto counters ---
+
+    def counter_events(self) -> list[dict]:
+        """Chrome trace COUNTER events (ph "C"): one ``ecm/<phase>``
+        track with cumulative flops and HBM bytes, sampled at each
+        recorded launch on the engine-step ``ts`` axis. Merged into the
+        Chrome export by ``Tracer.to_chrome(extra_events=...)`` —
+        deliberately never stored in ``Tracer.events``."""
+        out = []
+        for step, phase, cum_flops, cum_bytes in self._samples:
+            out.append({"ph": "C", "name": f"ecm/{phase}", "pid": 1,
+                        "ts": step * STEP_TICK_US,
+                        "args": {"flops": cum_flops,
+                                 "hbm_bytes": cum_bytes}})
+        return out

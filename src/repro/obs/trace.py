@@ -176,12 +176,17 @@ class Tracer:
             out.append(d)
         return out
 
-    def to_chrome(self, path) -> int:
-        """Perfetto/chrome://tracing-loadable JSON; returns event count."""
+    def to_chrome(self, path, extra_events: list | None = None) -> int:
+        """Perfetto/chrome://tracing-loadable JSON; returns event count.
+
+        ``extra_events`` are pre-built Chrome event dicts appended at
+        export time — the profiler's ECM counter tracks (ph "C") ride
+        along this way so they never enter ``self.events`` and the
+        step-clock determinism contract stays purely span/instant."""
         doc = {"displayTimeUnit": "ms",
                "otherData": {"clock": "engine-step",
                              "step_tick_us": STEP_TICK_US},
-               "traceEvents": self.chrome_events()}
+               "traceEvents": self.chrome_events() + list(extra_events or ())}
         with open(path, "w") as f:
             json.dump(doc, f)
         return len(self.events)

@@ -721,9 +721,25 @@ class DecodeEngine:
         nxt = self.scheduler.next_chunk()
         if nxt is not None:
             req, chunk, pos0 = nxt
+            # profiling is opt-in (Telemetry(profile=True)); the prof
+            # guard keeps the disabled/plain-telemetry hot path untouched
+            prof = self.obs.profile
+            t0 = time.perf_counter() if prof is not None else 0.0
+            tok_arr = jnp.asarray([chunk], jnp.int32)
             logits, self.caches = self._prefill_chunk(
-                self.params, jnp.asarray([chunk], jnp.int32), self.caches,
+                self.params, tok_arr, self.caches,
                 jnp.int32(req.slot), jnp.int32(pos0))
+            if prof is not None:
+                logits.block_until_ready()
+                # lower against the POST-call cache tree: the update is
+                # functional, so shapes (the HLO-cost cache key) match
+                # the consumed input tree exactly
+                prof.record_call(
+                    "prefill_chunk", self._prefill_chunk,
+                    (self.params, tok_arr, self.caches,
+                     jnp.int32(req.slot), jnp.int32(pos0)),
+                    wall_s=time.perf_counter() - t0,
+                    host_bytes=tok_arr.nbytes)
             self._on_prefill_chunk(req, chunk, pos0)
             if self.obs.enabled:
                 self.obs.trace.instant("prefill_chunk", rid=req.rid,
@@ -943,7 +959,14 @@ class DecodeEngine:
                 f"request {rid} is not decoding; only decoding requests "
                 f"hold restorable KV state")
         slot = req.slot
+        prof = self.obs.profile
+        t0 = time.perf_counter() if prof is not None else 0.0
+        out_before = self.swap.stats["host_bytes_total"]
         self.swap.swap_out(rid, self.caches, req.blocks)
+        if prof is not None:
+            prof.record(
+                "swap_out", wall_s=time.perf_counter() - t0,
+                host_bytes=self.swap.stats["host_bytes_total"] - out_before)
         self.kv_stats["preempted"] += 1
         self.kv_stats["preempted_blocks"] += len(req.blocks)
         if self.obs.enabled:
@@ -982,7 +1005,16 @@ class DecodeEngine:
         row[:len(req.blocks)] = req.blocks
         self.caches = self._reset_slot(self.caches, jnp.int32(req.slot),
                                        jnp.asarray(row))
+        prof = self.obs.profile
+        t0 = time.perf_counter() if prof is not None else 0.0
+        in_before = self.swap.stats["restored_bytes_total"]
         self.caches = self.swap.swap_in(req.rid, self.caches, req.blocks)
+        if prof is not None:
+            jax.block_until_ready(self.caches)
+            prof.record(
+                "swap_in", wall_s=time.perf_counter() - t0,
+                host_bytes=self.swap.stats["restored_bytes_total"]
+                - in_before)
         kvlen = req.prefill_pos + len(req.output) - 1
         self.caches = self._set_lens(
             self.caches, jnp.asarray([req.slot], jnp.int32),
@@ -1115,7 +1147,8 @@ class DecodeEngine:
                             help=f"engine kv_stats[{key!r}]")
             c.value = val
         for key in ("swapped_out_blocks", "restored_blocks",
-                    "dropped_blocks", "host_bytes_total"):
+                    "dropped_blocks", "host_bytes_total",
+                    "restored_bytes_total"):
             c = reg.counter(
                 f"swap_{key}",
                 unit="bytes" if "bytes" in key else "blocks",
@@ -1168,9 +1201,20 @@ class DecodeEngine:
     def _emit_first_token(self, req: Request, logits: jax.Array) -> None:
         """Final prefill chunk's logits yield the request's first token."""
         tok = self._choose_token(req, logits[0])
-        stats = _logit_stats(logits.reshape(1, -1),
-                             jnp.asarray([tok], jnp.int32))
+        prof = self.obs.profile
+        t0 = time.perf_counter() if prof is not None else 0.0
+        row = logits.reshape(1, -1)
+        tok_arr = jnp.asarray([tok], jnp.int32)
+        stats = _logit_stats(row, tok_arr)
         host_stats = {k: np.asarray(v) for k, v in stats.items()}
+        if prof is not None:
+            # a named ops.* dispatch: the first-token stats pass is the
+            # one _logit_stats launch the fused decode step doesn't fold
+            prof.record_call(
+                "ops.logit_stats", _logit_stats, (row, tok_arr),
+                wall_s=time.perf_counter() - t0,
+                host_bytes=sum(int(v.nbytes) for v in host_stats.values()),
+                static_shapes=True)
         tripped = self._guard_tripped(host_stats, [(0, req)])
         if self.obs.enabled:
             # the decode span opens either way; the quarantine path
@@ -1198,10 +1242,13 @@ class DecodeEngine:
         if self.obs.enabled:
             self.obs.trace.instant("decode_step",
                                    batch=len(self.scheduler.decoding))
+        prof = self.obs.profile
+        t0 = time.perf_counter() if prof is not None else 0.0
         prefilling = [r.slot for r in self.scheduler.prefilling]
         before = self.caches
+        tok_in = jnp.asarray(self._next_tokens)
         rows, packed_dev, self.caches = self._decode(
-            self.params, jnp.asarray(self._next_tokens), self.caches)
+            self.params, tok_in, self.caches)
         if prefilling:
             # The full-batch decode also "stepped" slots that are mid-
             # chunked-prefill. Their pool writes are harmless (overwritten
@@ -1234,13 +1281,20 @@ class DecodeEngine:
                 by_k.setdefault(req.top_k, []).append((slot, req))
             for top_k, items in by_k.items():
                 slots = [s for s, _ in items]
-                draws = _sample_rows(
+                ts = time.perf_counter() if prof is not None else 0.0
+                sample_args = (
                     rows[jnp.asarray(slots, jnp.int32)],
                     jnp.asarray([r.temperature for _, r in items],
                                 jnp.float32),
                     jnp.stack([self._sample_key(r) for _, r in items]),
                     top_k)
+                draws = _sample_rows(*sample_args)
                 toks[slots] = np.asarray(draws)
+                if prof is not None:
+                    prof.record_call(
+                        "ops.sample_rows", _sample_rows, sample_args,
+                        wall_s=time.perf_counter() - ts,
+                        host_bytes=draws.nbytes)
             tokens_dev = jnp.asarray(toks, jnp.int32)
             # fused logprob/metric pass over the final token choices; only
             # (B,)-sized arrays ever reach the host
@@ -1284,6 +1338,19 @@ class DecodeEngine:
             self._quarantine(req, reason)
         for req in retired:
             self._retire(req)
+        if prof is not None:
+            # the phase wall covers the whole step (launch + the one
+            # host transfer + per-request bookkeeping — whatever the
+            # launch doesn't explain lands in "unattributed"); the HLO
+            # cost is the fused decode launch's, cached once since the
+            # frame shapes never change (static_shapes)
+            prof.record_call(
+                "decode_step", self._decode,
+                (self.params, tok_in, self.caches),
+                wall_s=time.perf_counter() - t0,
+                host_bytes=tok_in.nbytes + tokens.nbytes
+                + sum(int(v.nbytes) for v in self.last_logit_stats.values()),
+                static_shapes=True)
 
     def _finished(self, req: Request, tok: int) -> bool:
         return (len(req.output) >= req.max_new_tokens
@@ -1411,6 +1478,8 @@ class SpecDecodeEngine(DecodeEngine):
         from repro.spec import sampler as spec_sampler
         from repro.spec.verify import pack_windows
 
+        prof = self.obs.profile
+        t0 = time.perf_counter() if prof is not None else 0.0
         decoding = [self.scheduler.decoding[s]
                     for s in sorted(self.scheduler.decoding)]
         ks = [self._effective_k(r) for r in decoding]
@@ -1517,6 +1586,20 @@ class SpecDecodeEngine(DecodeEngine):
             self._quarantine(req, reason)
         for req in retired:
             self._retire(req)
+        if prof is not None:
+            # the verify frame is fixed-shape ([max_slots, window]), so
+            # the HLO cost resolves once; sampled requests' full-row
+            # pull shows up as extra host bytes
+            prof.record_call(
+                "verify_step", self._verify,
+                (self.params, jnp.asarray(tokens), self.caches,
+                 jnp.asarray(slots), jnp.asarray(pos0s)),
+                wall_s=time.perf_counter() - t0,
+                host_bytes=tokens.nbytes + argmax.nbytes
+                + (rows.nbytes if rows is not None else 0)
+                + sum(int(v.nbytes)
+                      for v in self.last_logit_stats.values()),
+                static_shapes=True)
 
     def _account_spec(self, pos0s, ks, emitted_all, accepted) -> None:
         bs = self.layout.block_size

@@ -44,10 +44,12 @@ class KVSwap:
         self._store: dict[int, dict[str, np.ndarray]] = {}
         self._nblocks: dict[int, int] = {}
         # host_bytes is CURRENT residency (drops back on swap_in/drop);
-        # host_bytes_total accumulates all swap-out traffic ever moved
+        # host_bytes_total accumulates all swap-out traffic ever moved,
+        # restored_bytes_total all swap-in traffic — the two directions
+        # the attribution profiler prices as host-link transfers
         self.stats = {"swapped_out_blocks": 0, "restored_blocks": 0,
                       "dropped_blocks": 0, "host_bytes": 0,
-                      "host_bytes_total": 0}
+                      "host_bytes_total": 0, "restored_bytes_total": 0}
         # the owning engine shares its telemetry handle; block counts
         # only in event args (bytes vary with kv_dtype)
         self.obs = obs.NULL
@@ -81,7 +83,9 @@ class KVSwap:
             f"request {rid}: snapshot holds {n} blocks, restore offered "
             f"{len(blocks)}")
         self.stats["restored_blocks"] += len(blocks)
-        self.stats["host_bytes"] -= sum(a.nbytes for a in snap.values())
+        nbytes = sum(a.nbytes for a in snap.values())
+        self.stats["host_bytes"] -= nbytes
+        self.stats["restored_bytes_total"] += nbytes
         if self.obs.enabled:
             self.obs.trace.instant("swap_in", rid=rid, blocks=len(blocks))
         return paged.restore_blocks(caches, blocks, snap)

@@ -80,6 +80,79 @@ def test_bytes_scale_with_trip_count():
     assert got.elementwise_flops >= 10 * 1024
 
 
+def _cost_of(f, *args) -> "hlo_cost.HloCost":
+    return hlo_cost.analyze(jax.jit(f).lower(*args).compile().as_text())
+
+
+def test_fused_decode_launch_layers_linear():
+    """The engine's fused decode launch (model step + argmax + logit
+    stats, the profiler's ``decode_step`` phase) must cost linearly in
+    ``num_layers``: the transformer stack is a scan, so an analyzer that
+    ignores trip counts under-reports by ~L× — exactly the class of bug
+    the attribution profiler cannot tolerate (it would misprice every
+    decode row). Per-layer increments across L=2,4,6 must agree."""
+    from repro.configs import get_config, reduced
+    from repro.models import api, common
+
+    costs = {}
+    for layers in (2, 4, 6):
+        cfg = reduced(get_config("qwen1.5-0.5b")).with_(num_layers=layers)
+        params = common.abstract_params(api.schema(cfg))
+        kv = api.KVCache.build(cfg, max_context=64, block_size=16,
+                               max_slots=2)
+        tokens = jax.ShapeDtypeStruct((2, 1), jnp.int32)
+        costs[layers] = _cost_of(api.decode_fn(cfg), params, tokens,
+                                 kv.specs(2))
+    for field in ("dot_flops", "bytes_accessed"):
+        d1 = getattr(costs[4], field) - getattr(costs[2], field)
+        d2 = getattr(costs[6], field) - getattr(costs[4], field)
+        assert d1 > 0, (field, costs)
+        assert d2 == pytest.approx(d1, rel=0.05), \
+            f"{field}: per-layer increment not constant " \
+            f"({d1:g} vs {d2:g}) — scan trip count dropped?"
+    # the increment is a whole transformer layer, not rounding noise:
+    # >= the layer's four attention projections alone (d_model^2 matmuls)
+    cfg2 = reduced(get_config("qwen1.5-0.5b"))
+    floor = 2 * 4 * 2 * cfg2.d_model ** 2      # B=2 rows, 4 proj, 2NK flops
+    assert costs[4].dot_flops - costs[2].dot_flops >= 2 * floor
+
+
+def test_paged_attention_superkernel_blocks_linear():
+    """The paged-attention superkernel walks one pool block per grid
+    step over the table's static width ``mb`` — flops and bytes must
+    scale linearly in the block count at fixed pool size. Catches a
+    cost model that prices only one grid step (or the whole pool) for
+    the profiler's dominant HBM term."""
+    from repro.kernels import ops
+
+    bs, hkv, hq, d, b = 16, 2, 4, 32, 2
+    kpool = jax.ShapeDtypeStruct((9, bs, hkv, d), jnp.float32)
+    vpool = jax.ShapeDtypeStruct((9, bs, hkv, d), jnp.float32)
+    q = jax.ShapeDtypeStruct((b, 1, hq, d), jnp.float32)
+    lens = jax.ShapeDtypeStruct((b,), jnp.int32)
+
+    def attn(q, kpool, vpool, table, lens):
+        return ops.paged_attention(q, kpool, vpool, table, lens,
+                                   interpret=True)
+
+    costs = {}
+    for mb in (2, 4, 8):
+        table = jax.ShapeDtypeStruct((b, mb), jnp.int32)
+        costs[mb] = _cost_of(attn, q, kpool, vpool, table, lens)
+    for field in ("dot_flops", "bytes_accessed"):
+        d1 = getattr(costs[4], field) - getattr(costs[2], field)
+        d2 = getattr(costs[8], field) - getattr(costs[4], field)
+        assert d1 > 0, (field, {k: getattr(v, field)
+                                for k, v in costs.items()})
+        assert d2 == pytest.approx(2 * d1, rel=0.10), \
+            f"{field}: block increments not linear ({d1:g}, {d2:g})"
+    # per-block dot work floor: the score matmul alone is
+    # 2 * rows * bs * d flops per (batch, kv-head) grid step
+    rows = 32                                   # _ROW_TILE padding
+    per_block_floor = b * hkv * 2 * rows * bs * d
+    assert (costs[4].dot_flops - costs[2].dot_flops) >= 2 * per_block_floor
+
+
 @pytest.mark.skipif(jax.device_count() != 8,
                     reason="needs xla_force_host_platform_device_count=8")
 def test_collectives_in_scan_counted_with_trips():

@@ -141,8 +141,14 @@ def test_histogram_and_prometheus():
     h = Histogram("w", buckets=(1, 2, 4))
     for v in (0.5, 3, 100):
         h.observe(v)
-    assert h.summary() == {"count": 3, "sum": 103.5, "mean": 34.5,
-                           "min": 0.5, "max": 100}
+    s = h.summary()
+    quantiles = {k: s.pop(k) for k in ("p50", "p95", "p99")}
+    assert s == {"count": 3, "sum": 103.5, "mean": 34.5,
+                 "min": 0.5, "max": 100}
+    # p50: 2nd of 3 observations lands in the (2, 4] bucket; the tail
+    # quantiles fall in +Inf and are capped at the observed max
+    assert 2 <= quantiles["p50"] <= 4
+    assert quantiles["p95"] == quantiles["p99"] == 100
     with pytest.raises(ValueError):
         Histogram("bad", buckets=(4, 2))
     reg = MetricsRegistry()
@@ -153,8 +159,24 @@ def test_histogram_and_prometheus():
     assert 'repro_w_bucket{le="4"} 2' in text      # cumulative
     assert 'repro_w_bucket{le="+Inf"} 3' in text
     assert "repro_w_count 3" in text
+    assert 'repro_w{quantile="0.5"}' in text
+    assert 'repro_w{quantile="0.99"} 100' in text
     assert "# TYPE repro_decode_steps counter" in text
     assert "repro_decode_steps 7" in text
+
+
+def test_histogram_quantiles():
+    h = Histogram("lat", buckets=(1, 2, 4, 8))
+    for v in range(1, 9):                      # 1..8, uniform
+        h.observe(v)
+    assert h.quantile(0.0) <= 1
+    # interpolated within buckets, monotone, capped at the observed max
+    assert h.quantile(0.5) == pytest.approx(4, abs=1.0)
+    assert h.quantile(0.5) <= h.quantile(0.95) <= h.quantile(1.0) == 8
+    with pytest.raises(ValueError):
+        h.quantile(1.5)
+    empty = Histogram("e", buckets=(1,))
+    assert empty.quantile(0.5) == 0.0
 
 
 # --------------------------------------------------- unit: residuals ------
