@@ -23,6 +23,13 @@ rate, and the ``serving/prefix`` sweep compares the measured
 prefill-token reduction against ``repro.ecm.tpu
 .predicted_prefill_speedup`` at the measured hit rate.
 
+The ``serving/session`` rows measure the session-KV tier end to end:
+a multi-turn conversation mix whose turn-N+1 prompts hit the whole
+turn-N history (asserted >= 0.95 on turns >= 2, with bitwise
+warm-vs-cold parity), and a tight-pool spill -> promote scenario whose
+measured prefill-token gain is checked against the promote-gated
+``predicted_session_prefill_reduction`` forecast, counter basis.
+
 Shapes are CPU-tiny so the CI smoke step (benchmarks/run.py --only
 bench_serving --json ...) produces a perf-trajectory point on every PR.
 """
@@ -38,7 +45,8 @@ import numpy as np
 from repro import obs
 from repro.configs import get_config, reduced
 from repro.ecm.tpu import (predicted_prefill_speedup,
-                           predicted_restore_vs_reprefill)
+                           predicted_restore_vs_reprefill,
+                           predicted_session_prefill_reduction)
 from repro.models import api, common, paged
 from repro.obs import residual_row
 from repro.serving.engine import DecodeEngine, Request
@@ -316,6 +324,179 @@ def _run_profile_attribution(cfg, params) -> list[tuple]:
     ]
 
 
+# Session-KV scenario geometry: each turn's max_new is chosen so the
+# retired history lands EXACTLY on a block boundary (cached tokens at
+# retirement are len(prompt) + len(output) - 1 — the final emitted token
+# never reaches the cache), so the whole-history insert keeps every
+# computed block and the next turn's whole-history hit rate is bounded
+# only by that one pending token:
+#   turn 1: 64+4 = 68-token prompt, 13 new -> 80 cached  = 5 full blocks
+#   turn 2: 81+4 = 85-token prompt, 12 new -> 96 cached  = 6 full blocks
+#   turn 3: 97+4 = 101-token prompt, 8 new -> 109 <= MAX_CONTEXT
+SESSION_SYS = 64            # opening system+context prompt: 4 full blocks
+SESSION_EXTRA = 4           # fresh user tokens appended per turn
+SESSION_MAX_NEW = (13, 12, 8)
+
+
+def _session_turns(engine, rid0: int, seed: int) -> list[tuple]:
+    """Drive one 3-turn conversation through ``engine``: each turn's
+    prompt is the FULL prior history (previous prompt + emitted output)
+    plus a few fresh user tokens. Returns ``(request, history_len)``
+    per turn — ``history_len`` is the whole-history span a perfect
+    session cache could have served from KV."""
+    rng = np.random.default_rng(seed)
+    hist = rng.integers(1, 250, SESSION_SYS).tolist()
+    turns = []
+    for t, max_new in enumerate(SESSION_MAX_NEW):
+        prompt = hist + rng.integers(1, 250, SESSION_EXTRA).tolist()
+        req = Request(rid=rid0 + t, prompt=prompt, max_new_tokens=max_new)
+        engine.submit(req)
+        engine.run_until_done()
+        turns.append((req, len(hist)))
+        hist = list(req.prompt) + list(req.output)
+    return turns
+
+
+def _run_session_sweep(cfg, params) -> list[tuple]:
+    """Multi-turn conversation mix: with session KV on (retirement
+    inserts prompt AND output into the trie), turn N+1's prompt hits the
+    whole turn-N history, so the only re-prefilled tokens are the fresh
+    user suffix, the pending final token, and the partial-block tail.
+    The row asserts the acceptance bound (whole-history hit rate >= 0.95
+    on turns >= 2) and replays every prompt through a cache-off engine —
+    both the prefill-token denominator for the measured reduction and
+    the bitwise warm-vs-cold parity check (same outputs with and without
+    serving turns from cached KV). The residual row compares the
+    measured reduction against the session ECM forecast at the measured
+    hit rate, counter basis: both sides derive from deterministic token
+    counters, so the compare gate hard-fails any drift."""
+    engine = DecodeEngine(cfg, params, max_slots=2,
+                          max_context=MAX_CONTEXT, block_size=BLOCK,
+                          prefill_chunk=32, prefix_cache=True)
+    t0 = time.perf_counter()
+    turns = []
+    for c in range(2):
+        turns += _session_turns(engine, rid0=100 * c, seed=700 + c)
+    dt = time.perf_counter() - t0
+
+    later = [(r, h) for r, h in turns if r.rid % 100]   # turns >= 2
+    turn2_hit = sum(r.prefix_hit for r, _ in later)
+    turn2_hist = sum(h for _, h in later)
+    turn2_rate = turn2_hit / turn2_hist
+    assert turn2_rate >= 0.95, \
+        f"whole-history hit rate {turn2_rate:.3f} < 0.95 on turns >= 2"
+
+    cold = DecodeEngine(cfg, params, max_slots=2,
+                        max_context=MAX_CONTEXT, block_size=BLOCK,
+                        prefill_chunk=32, prefix_cache=False)
+    for r, _ in turns:
+        creq = Request(rid=r.rid, prompt=list(r.prompt),
+                       max_new_tokens=r.max_new_tokens)
+        cold.submit(creq)
+        cold.run_until_done()
+        assert creq.output == r.output, \
+            f"warm-vs-cold parity broke on rid={r.rid}"
+
+    st = engine.kv_stats
+    hit = engine.prefix_hit_rate
+    reduction = (cold.kv_stats["prefill_tokens"]
+                 / max(st["prefill_tokens"], 1))
+    ecm = predicted_session_prefill_reduction(hit)
+    toks = sum(len(r.output) for r, _ in turns)
+    steps = max(st["decode_steps"] + st["prefill_chunks"], 1)
+    main = ("serving/session/multiturn/slots=2",
+            f"{dt * 1e6 / steps:.0f}",
+            f"tok_s={toks / dt:.1f}"
+            f" turn2_hit={turn2_hit}"
+            f" turn2_hit_rate={turn2_rate:.3f}"
+            f" hit_rate={hit:.2f}"
+            f" prefill_tok_reduction={reduction:.2f}x"
+            f" ecm_pred={ecm:.2f}x"
+            f" saved_kv_kib={st['prefix_saved_bytes'] / 1024:.0f}")
+    res = residual_row("session_prefill_reduction/multiturn", ecm,
+                       reduction, basis="counter",
+                       hit_rate=f"{hit:.3f}", turn2_hit=turn2_hit)
+    return [main, res]
+
+
+def _run_session_spill(cfg, params) -> list[tuple]:
+    """Spill -> promote under a deliberately tight pool: two
+    conversations interleaved turn by turn, a 10-block pool that cannot
+    hold both histories resident, and a host spill tier. Admitting B's
+    turn evicts A's trie nodes into the host tier; A's next turn then
+    promotes the host-resident suffix back into fresh pool blocks
+    instead of re-prefilling it. The same workload runs once with the
+    promote gate forced open (``promote='always'``) and once forced shut
+    (``'never'`` — evicted spans fall back to cold prefill), and the two
+    streams must be bitwise identical: the gate moves tokens between the
+    host link and the prefill path, never changes them. The residual row
+    checks the measured prefill-token ratio between the two gatings
+    against the promote-gated ECM forecast — the 'never' side is exactly
+    the forecast's below-crossover branch (effective hit shrinks by the
+    promoted fraction), counter basis."""
+    def serve(promote: str):
+        engine = DecodeEngine(cfg, params, max_slots=2,
+                              max_context=MAX_CONTEXT, block_size=BLOCK,
+                              prefill_chunk=32, prefix_cache=True,
+                              num_blocks=10, spill_blocks=24,
+                              promote=promote)
+        rngs = [np.random.default_rng(800 + c) for c in range(2)]
+        hists = [r.integers(1, 250, SESSION_SYS).tolist() for r in rngs]
+        reqs = []
+        t0 = time.perf_counter()
+        for t, max_new in enumerate(SESSION_MAX_NEW):
+            for c in range(2):
+                prompt = (hists[c]
+                          + rngs[c].integers(1, 250, SESSION_EXTRA).tolist())
+                req = Request(rid=100 * c + t, prompt=prompt,
+                              max_new_tokens=max_new)
+                engine.submit(req)
+                engine.run_until_done()
+                hists[c] = list(req.prompt) + list(req.output)
+                reqs.append(req)
+        dt = time.perf_counter() - t0
+        return engine, reqs, dt
+
+    eng_a, reqs_a, dt = serve("always")
+    eng_n, reqs_n, _ = serve("never")
+    assert [r.output for r in reqs_a] == [r.output for r in reqs_n], \
+        "promote gate changed the token stream"
+    sa = eng_a.kv_stats
+    assert sa["prefix_spilled_blocks"] >= 1, "pool pressure never spilled"
+    assert sa["prefix_promoted_blocks"] >= 1, "spilled suffix never promoted"
+
+    hit = eng_a.prefix_hit_rate
+    promoted_frac = (sa["prefix_promoted_tokens"]
+                     / max(sa["prefix_prompt_tokens"], 1))
+    # gated forecast: above the crossover the full hit survives; below,
+    # the promoted share is forfeited to cold prefill. The ratio of the
+    # two branches is the model's prediction for always/never measured
+    # prefill tokens.
+    pred = (predicted_session_prefill_reduction(
+                hit, promote_ratio=2.0, promoted_fraction=promoted_frac)
+            / predicted_session_prefill_reduction(
+                hit, promote_ratio=0.5, promoted_fraction=promoted_frac))
+    measured = (eng_n.kv_stats["prefill_tokens"]
+                / max(sa["prefill_tokens"], 1))
+    toks = sum(len(r.output) for r in reqs_a)
+    steps = max(sa["decode_steps"] + sa["prefill_chunks"], 1)
+    main = ("serving/session/spill/nb=10",
+            f"{dt * 1e6 / steps:.0f}",
+            f"tok_s={toks / dt:.1f}"
+            f" hit_rate={hit:.2f}"
+            f" hit_rate_nopromote={eng_n.prefix_hit_rate:.2f}"
+            f" spilled_blocks={sa['prefix_spilled_blocks']}"
+            f" promoted_blocks={sa['prefix_promoted_blocks']}"
+            f" promoted_tokens={sa['prefix_promoted_tokens']}"
+            f" promote_gain={measured:.2f}x"
+            f" ecm_pred={pred:.2f}x"
+            f" host_kib={sa['prefix_spilled_bytes'] / 1024:.0f}")
+    res = residual_row("session_promote_gain/spill", pred, measured,
+                       basis="counter", hit_rate=f"{hit:.3f}",
+                       promoted_tokens=sa["prefix_promoted_tokens"])
+    return [main, res]
+
+
 def _run_restore_residual(cfg, params) -> tuple:
     """The preemption crossover, measured: restore a 6-block snapshot
     from host memory vs re-running the chunked prefill that produced it.
@@ -387,6 +568,10 @@ def run() -> list[tuple]:
         rows.extend(_run_prefix_sweep(cfg, params, kind, 2))
     # preempt sweep: long prompts on a 16-block pool force swap-out
     rows.append(_run_preempt_sweep(cfg, params, "long", 4))
+    # session KV: multi-turn whole-history hits, then spill -> promote
+    # under pool pressure
+    rows.extend(_run_session_sweep(cfg, params))
+    rows.extend(_run_session_spill(cfg, params))
     rows.extend(_run_block_sweep(cfg, params, 4))
     rows.extend(_run_obs_overhead(cfg, params))
     rows.extend(_run_profile_attribution(cfg, params))

@@ -161,6 +161,12 @@ DETERMINISTIC_FIELDS = frozenset({
     "hit_rate", "prefill_tok_reduction", "saved_kv_kib", "cow_blocks",
     "preempted", "swapped_blocks", "restored_blocks", "guard_trips",
     "host_kib", "acc", "E", "elems",
+    # session-KV counters (serving/session rows): turn-2+ whole-history
+    # hit tokens/rate, spill-tier traffic, and the promote-vs-never
+    # prefill-token ratio — all derived from seeded token counters
+    "turn2_hit", "turn2_hit_rate", "hit_rate_nopromote",
+    "spilled_blocks", "promoted_blocks", "promoted_tokens",
+    "promote_gain",
 })
 
 

@@ -353,6 +353,37 @@ def predicted_restore_vs_reprefill(tokens: int, token_bytes: float,
     return t_reprefill / t_restore
 
 
+def predicted_session_prefill_reduction(
+        hit_rate: float, *, promote_ratio: float = float("inf"),
+        promoted_fraction: float = 0.0,
+        prompt_tokens: float | None = None,
+        chunk_tokens: int | None = None) -> float:
+    """Promote-gated ECM forecast of the session-KV prefill-token
+    reduction (``repro.serving.prefix_cache`` spill tier).
+
+    ``hit_rate`` is the whole-history hit rate the workload ATTAINS when
+    every cached block — pool-resident or host-spilled — is usable;
+    ``promoted_fraction`` is the part of that hit that must come back
+    over the host link (spilled blocks). The engine only pays that copy
+    when the restore-vs-reprefill ratio clears 1
+    (``predicted_restore_vs_reprefill`` — the ``promote`` gate), so
+    below the crossover the spilled span is forfeited to a cold prefill
+    and the effective hit rate shrinks by ``promoted_fraction``. The
+    surviving hit rate then feeds the ordinary prefix forecast
+    ``predicted_prefill_speedup`` (with its optional chunk-launch
+    refinement). bench_serving's session scenario checks the measured
+    turn-2+ prefill-token reduction against this as a counter-basis
+    residual row.
+    """
+    if not 0.0 <= promoted_fraction <= hit_rate:
+        raise ValueError(
+            f"promoted_fraction must be in [0, hit_rate={hit_rate}], "
+            f"got {promoted_fraction}")
+    effective = hit_rate if promote_ratio > 1.0 else hit_rate - promoted_fraction
+    return predicted_prefill_speedup(effective, prompt_tokens=prompt_tokens,
+                                     chunk_tokens=chunk_tokens)
+
+
 def restore_crossover_flops_per_token(token_bytes: float,
                                       hw: dict = TPU_V5E) -> float:
     """Model size (in FLOPs per prefill token, ~2 * n_params) above which

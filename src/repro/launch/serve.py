@@ -2,8 +2,12 @@
 random-weight continuous-batching demo of the paged-KV decode engine (see
 examples/serve.py for the scripted walkthrough). ``--spec-mode`` switches
 on speculative decoding (n-gram prompt-lookup or a draft model from the
-registry); ``--preempt``/``--deadline-steps`` exercise the fault-tolerance
-layer (preemption-to-host, request deadlines), and ``--faults`` runs the
+registry); ``--session-kv`` serves multi-turn conversations against the
+session prefix tier (whole-history trie hits, evicted prefixes spilled
+to host and promoted back — pair with a tight ``--num-blocks`` to watch
+the spill/promote path); ``--preempt``/``--deadline-steps`` exercise the
+fault-tolerance layer (preemption-to-host, request deadlines), and
+``--faults`` runs the
 deterministic fault-injection smoke used by CI: every applicable injector
 site fires once and the engine must finish all surviving requests.
 Invalid combinations are rejected with a clear error before any model is
@@ -48,6 +52,28 @@ def build_parser() -> argparse.ArgumentParser:
                          "the divergence block, LRU eviction); the demo "
                          "requests then share a system prompt so the hit "
                          "rate is visible")
+    ap.add_argument("--session-kv", action="store_true",
+                    help="multi-turn session demo: implies --prefix-cache, "
+                         "arms the host spill tier for evicted prefixes "
+                         "(--spill-blocks), and serves --turns conversation "
+                         "turns per request — each later turn's prompt is "
+                         "the full prior history plus fresh tokens, so it "
+                         "hits the whole-history trie entry (or promotes it "
+                         "back from host). Combine with a tight "
+                         "--num-blocks to force evict -> spill -> promote")
+    ap.add_argument("--turns", type=int, default=3,
+                    help="conversation turns per request under "
+                         "--session-kv (default 3)")
+    ap.add_argument("--spill-blocks", type=int, default=32,
+                    help="host spill-tier capacity in blocks under "
+                         "--session-kv (LRU beyond this; default 32)")
+    ap.add_argument("--promote", default="always",
+                    choices=("auto", "always", "never"),
+                    help="gate for promoting host-spilled prefixes back "
+                         "into the pool: 'auto' applies the ECM "
+                         "restore-vs-reprefill crossover (demo-sized "
+                         "models sit below it, so the demo defaults to "
+                         "'always'); 'never' falls back to cold prefill")
     ap.add_argument("--spec-mode", default="off",
                     choices=("off", "ngram", "draft"),
                     help="speculative decoding: 'ngram' proposes from the "
@@ -112,6 +138,22 @@ def build_parser() -> argparse.ArgumentParser:
     return ap
 
 
+def validate_session_args(args, cfg) -> None:
+    """Reject invalid session-KV combinations before building."""
+    if not args.session_kv:
+        return
+    if cfg.family == "ssm":
+        raise SystemExit(
+            f"--session-kv: {args.arch} is an 'ssm'-family model with "
+            f"constant-size recurrent state — there are no per-token KV "
+            f"blocks to cache across turns")
+    if args.turns < 2:
+        raise SystemExit(f"--turns must be >= 2, got {args.turns}")
+    if args.spill_blocks < 1:
+        raise SystemExit(
+            f"--spill-blocks must be >= 1, got {args.spill_blocks}")
+
+
 def validate_fault_args(args, cfg) -> None:
     """Reject invalid fault-tolerance combinations before building."""
     if args.deadline_steps is not None and args.deadline_steps < 1:
@@ -172,7 +214,8 @@ def validate_spec_args(args, cfg) -> None:
 
 
 def _summary_line(args, snap: dict, n_done: int, total: int,
-                  dt: float) -> str:
+                  dt: float, turn2_hit: int = 0,
+                  turn2_hist: int = 0) -> str:
     """Render the final summary from a metrics snapshot — every number
     here is a snapshot entry, so the line, the ``--metrics`` export and
     the bench counters can never disagree."""
@@ -193,6 +236,14 @@ def _summary_line(args, snap: dict, n_done: int, total: int,
         line += (f" | prefix cache hit {snap['prefix_hit_rate']:.0%} "
                  f"({snap['prefix_hit_tokens']} tok, "
                  f"{snap['prefix_saved_bytes']/2**20:.2f} MiB KV never "
+                 f"re-prefilled)")
+    if args.session_kv:
+        rate = turn2_hit / turn2_hist if turn2_hist else 0.0
+        line += (f" | session[{args.turns} turns] whole-history hit "
+                 f"{rate:.0%} on turns>=2; spilled "
+                 f"{snap['prefix_spilled_blocks']} blocks to host, "
+                 f"promoted {snap['prefix_promoted_blocks']} back "
+                 f"({snap['prefix_promoted_tokens']} tok never "
                  f"re-prefilled)")
     if args.spec_mode != "off":
         line += (f" | spec[{args.spec_mode}] accept "
@@ -215,6 +266,9 @@ def main() -> None:
     if cfg.family not in ("dense", "moe", "ssm", "vlm"):
         raise SystemExit(f"engine serves LM families; {cfg.family} uses the "
                          f"prefill/decode API directly (see repro.models.api)")
+    validate_session_args(args, cfg)
+    if args.session_kv:
+        args.prefix_cache = True    # the session tier lives in the trie
     if args.prefix_cache and cfg.family == "ssm":
         raise SystemExit(
             f"--prefix-cache: {args.arch} is an 'ssm'-family model with "
@@ -255,6 +309,9 @@ def main() -> None:
                            num_blocks=args.num_blocks,
                            prefill_chunk=args.prefill_chunk,
                            prefix_cache=args.prefix_cache,
+                           spill_blocks=(args.spill_blocks
+                                         if args.session_kv else 0),
+                           promote=args.promote,
                            preempt=args.preempt,
                            fault_injector=injector,
                            telemetry=telemetry)
@@ -290,10 +347,35 @@ def main() -> None:
                 for i in range(args.requests)]
     server = FailoverServer(engine) if args.faults else engine
     t0 = time.time()
-    for req in requests:        # queue everything; admission is the engine's
-        server.submit(req)
+    turn2_hit = turn2_hist = 0
     try:
+        for req in requests:    # queue everything; admission is the engine's
+            server.submit(req)
         server.run_until_done(max_steps=args.max_steps)
+        prev = requests
+        for turn in range(1, args.turns if args.session_kv else 1):
+            # each later turn's prompt is the FULL prior history (prompt
+            # + emitted output) plus fresh user tokens — the whole-history
+            # hit the session tier exists to serve (promoted back from
+            # host when the pool evicted it meanwhile)
+            followups = []
+            for r in prev:
+                if not r.output:
+                    continue
+                hist = list(r.prompt) + list(r.output)
+                followups.append(Request(
+                    rid=1000 * turn + (r.rid % 1000),
+                    prompt=hist
+                    + rng.integers(0, cfg.vocab_size, 4).tolist(),
+                    max_new_tokens=args.max_new,
+                    deadline_steps=args.deadline_steps))
+                turn2_hist += len(hist)
+            for req in followups:
+                server.submit(req)
+            server.run_until_done(max_steps=args.max_steps)
+            turn2_hit += sum(r.prefix_hit for r in followups)
+            requests = requests + followups
+            prev = followups
     except KeyboardInterrupt:
         # --shutdown policy: drain finishes what is in flight (the queue
         # keeps admitting only already-submitted work — exactly the loop
@@ -321,7 +403,8 @@ def main() -> None:
     # one source of truth for the summary: the metrics snapshot (which
     # subsumes kv_stats value-for-value and carries the derived rates)
     snap = engine.metrics_snapshot()
-    print(_summary_line(args, snap, len(done), total, dt))
+    print(_summary_line(args, snap, len(done), total, dt,
+                        turn2_hit=turn2_hit, turn2_hist=turn2_hist))
 
     if args.metrics:
         if args.metrics.endswith((".prom", ".txt")):

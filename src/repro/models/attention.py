@@ -19,8 +19,14 @@ length needs. ``flash_attention`` takes a dynamic ``q_offset`` so chunked
 prefill can extend a paged cache incrementally — queries at absolute
 positions ``q_offset..q_offset+C-1`` against the gathered prefix+chunk.
 The serving decode dispatches per backend (``paged_kernel_enabled``): the
-Pallas block-table kernel ``repro.kernels.paged_attention`` on TPU, the
-pure-JAX gather formulation elsewhere.
+Pallas block-table kernel ``repro.kernels.paged_attention`` on TPU; off
+TPU, decode and verify run the chunked-prefill formulation itself
+(gather + dequantize, then ``flash_attention`` at width 1/C) — chunk
+splits are bitwise invariant, so prefill, decode and verify share ONE
+set of numerics and a decode-written KV block is bit-identical to the
+prefill-written block a cold run would produce. Session-KV reuse of
+generated tokens (``repro.serving.prefix_cache``) depends on exactly
+that equality.
 """
 
 from __future__ import annotations
@@ -439,20 +445,6 @@ def _gather_kv(pools: dict, table: Array, fmt: qcore.QuantFormat | None,
                 v, paged.gather_blocks(pools["vscale"], table), dtype))
 
 
-def _gather_kv_raw(pools: dict, table: Array
-                   ) -> tuple[Array, Array, Array | None, Array | None]:
-    """Materialize virtual K/V rows WITHOUT dequantizing: raw payloads plus
-    the per-(token, head) scale rows (None for bf16 pools). Feeds the
-    hoisted-scale ``attend_cache`` / ``attend_cache_multi`` quant paths,
-    which fold the scales post-dot instead of widening the payloads."""
-    k = paged.gather_blocks(pools["kpool"], table)
-    v = paged.gather_blocks(pools["vpool"], table)
-    if "kscale" not in pools:
-        return k, v, None, None
-    return (k, v, paged.gather_blocks(pools["kscale"], table),
-            paged.gather_blocks(pools["vscale"], table))
-
-
 def paged_kernel_enabled() -> bool:
     """Dispatch policy for the serving decode: the Pallas block-table
     kernel on TPU (it moves exactly the table's blocks — the traffic the
@@ -470,8 +462,14 @@ def gqa_decode(p: dict, x: Array, cfg: AttnConfig, cache: dict
     Quantized pools (``cfg.kv_dtype``) scatter the new token's quantized
     K/V plus its per-head scales. TPU dispatches to the paged-attention
     superkernel (``ops.paged_attention``, width 1 — scales folded post-dot
-    into the compensated streams); elsewhere the gather formulation runs
-    the same hoisted-scale fold over materialized raw rows.
+    into the compensated streams); elsewhere the step runs the CHUNKED
+    PREFILL formulation at width 1 — gather + dequantize the virtual rows,
+    then ``flash_attention`` with a per-slot ``q_offset``. Prefill chunking
+    is bitwise invariant to the chunk split, so a decode step writes K/V
+    (and emits logits) bit-identical to prefilling the same token at the
+    same position: the session-KV tier can re-serve decode-written blocks
+    to a later prompt and stay bitwise a cold full-history prefill
+    (tests/test_prefix_cache.py three-turn parity).
     """
     b, _, _ = x.shape
     idx = cache["len"]                                 # [B]
@@ -489,9 +487,11 @@ def gqa_decode(p: dict, x: Array, cfg: AttnConfig, cache: dict
             kscale=pools.get("kscale"),
             vscale=pools.get("vscale")).astype(x.dtype)
     else:
-        k, v, ks, vs = _gather_kv_raw(pools, table)    # [B, mb*bs, H, D]
-        out = attend_cache(q, k, v, idx + 1, kscale=ks, vscale=vs,
-                           out_dtype=x.dtype)
+        k, v = _gather_kv(pools, table, fmt, x.dtype)  # [B, mb*bs, H, D]
+        out = flash_attention(q, k, v, causal=cfg.causal,
+                              q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk,
+                              kahan_acc=cfg.kahan_acc,
+                              q_offset=idx, kv_len=idx + 1)
     new_cache = {**pools, "block_table": table, "len": idx + 1}
     return common.dense(out.reshape(b, 1, -1), p["wo"]), new_cache
 
@@ -562,12 +562,16 @@ def gqa_verify_chunk(p: dict, x: Array, cfg: AttnConfig, cache: dict,
             kscale=pools.get("kscale"),
             vscale=pools.get("vscale")).astype(x.dtype)
     else:
-        # CPU fallback mirrors gqa_decode's attend_cache numerics so a
-        # verify row scores a position exactly like the decode step it
-        # replaces (spec == non-spec greedy streams)
-        k, v, ks, vs = _gather_kv_raw(pools, tables)   # [S, mb*bs, H, D]
-        out = attend_cache_multi(q, k, v, positions, kscale=ks, vscale=vs,
-                                 out_dtype=x.dtype)
+        # CPU fallback is the chunked-prefill formulation with per-slot
+        # offsets: chunking invariance makes every verify row bitwise the
+        # width-1 decode step at its position (spec == non-spec greedy
+        # streams) AND bitwise the prefill of the same token — the one
+        # formulation the session-KV parity contract rests on.
+        k, v = _gather_kv(pools, tables, fmt, x.dtype)  # [S, mb*bs, H, D]
+        out = flash_attention(q, k, v, causal=cfg.causal,
+                              q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk,
+                              kahan_acc=cfg.kahan_acc,
+                              q_offset=pos0s, kv_len=pos0s + c)
     new_cache = {**pools, "block_table": cache["block_table"],
                  "len": cache["len"].at[slots].set(pos0s + c)}
     return common.dense(out.reshape(s_n, c, -1), p["wo"]), new_cache

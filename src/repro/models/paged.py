@@ -29,6 +29,7 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 Array = jax.Array
 
@@ -283,6 +284,19 @@ def restore_blocks(caches, blocks, snapshot: dict):
         return leaf.at[:, idx].set(jnp.asarray(snap, leaf.dtype))
 
     return tree_map_with_path(one, caches)
+
+
+def concat_block_snapshots(snaps: list) -> dict:
+    """Merge per-block ``extract_blocks`` snapshots (each ``{leaf path:
+    [L, n_i, block_size, ...]}``) along the block axis so a multi-block
+    restore is ONE ``restore_blocks`` scatter instead of one launch per
+    block. The session prefix-spill tier stores one snapshot per evicted
+    trie node; promoting a k-block chain concatenates k of them and pays
+    a single host->device transfer + scatter."""
+    if len(snaps) == 1:
+        return snaps[0]
+    return {k: np.concatenate([s[k] for s in snaps], axis=1)
+            for k in snaps[0]}
 
 
 def zero_blocks(caches, blocks):

@@ -23,12 +23,13 @@ from repro.serving.engine import (BlockAllocator, DecodeEngine, Request,
 from repro.serving.faults import (AdmissionError, AllocatorError,
                                   FailoverServer, FaultInjector, FaultSpec,
                                   NumericsGuard, ProposerStallError,
-                                  ServingError, StallError)
+                                  ServingError, StallError, SwapMissError)
 from repro.serving.prefix_cache import PrefixCache, PrefixMatch
-from repro.serving.swap import KVSwap
+from repro.serving.swap import KVSwap, PrefixSpill
 
 __all__ = ["BlockAllocator", "DecodeEngine", "Request", "Scheduler",
            "SpecDecodeEngine", "PrefixCache", "PrefixMatch",
            "AdmissionError", "AllocatorError", "FailoverServer",
            "FaultInjector", "FaultSpec", "NumericsGuard",
-           "ProposerStallError", "ServingError", "StallError", "KVSwap"]
+           "ProposerStallError", "ServingError", "StallError",
+           "SwapMissError", "KVSwap", "PrefixSpill"]

@@ -83,7 +83,7 @@ from repro.serving.faults import (AdmissionError, AllocatorError,
                                   NumericsGuard, ProposerStallError,
                                   StallError)
 from repro.serving.prefix_cache import PrefixCache, PrefixMatch
-from repro.serving.swap import KVSwap
+from repro.serving.swap import KVSwap, PrefixSpill
 
 DEFAULT_BLOCK_SIZE = paged.DEFAULT_BLOCK_SIZE
 
@@ -227,11 +227,15 @@ class Scheduler:
 
     def __init__(self, allocator: BlockAllocator, max_slots: int,
                  layout: PagedLayout, prefill_chunk: int,
-                 prefix_cache: PrefixCache | None = None):
+                 prefix_cache: PrefixCache | None = None,
+                 session_kv: bool = True):
         self.allocator = allocator
         self.layout = layout
         self.prefill_chunk = prefill_chunk
         self.prefix_cache = prefix_cache
+        # session KV: retirement caches prompt + emitted output (the
+        # full conversation history), not just the prompt
+        self.session_kv = session_kv
         self.waiting: deque[Request] = deque()
         self.prefilling: deque[Request] = deque()
         self.decoding: dict[int, Request] = {}
@@ -274,7 +278,16 @@ class Scheduler:
         is what keeps the PR-2 no-livelock contract intact."""
         if self.prefix_cache is None:
             return [PrefixMatch()]
-        m = self.prefix_cache.match(req.prompt)
+        pc = self.prefix_cache
+        m = pc.match(req.prompt)
+        # Session spill tier: page the longest host-resident continuation
+        # of this prompt back into free pool blocks (ECM-gated inside
+        # promote), then RE-match so the ordinary full/COW/cold plan
+        # logic sees the promoted nodes as resident trie content.
+        # Promotion converts would-be-fresh blocks into shared ones
+        # one-for-one, so it never makes the admission harder.
+        if pc.spill is not None and pc.promote(req.prompt, rid=req.rid):
+            m = pc.match(req.prompt)
         cands = [m]
         if m.cow_src is not None:
             cands.append(PrefixMatch(m.blocks,
@@ -437,10 +450,20 @@ class Scheduler:
         req.state = "done"
         self.decoding.pop(req.slot, None)
         if self.prefix_cache is not None:
-            # cache the request's completed prompt prefix BEFORE releasing:
-            # new trie nodes retain their blocks, so they survive the
-            # request's release; deduped prefixes just release through
-            self.prefix_cache.insert(req.prompt, req.blocks)
+            # cache the request's tokens BEFORE releasing: new trie nodes
+            # retain their blocks, so they survive the request's release;
+            # deduped spans just release through. Session KV caches the
+            # FULL history — prompt plus emitted output — so turn N+1
+            # (which resubmits this prompt + this reply) hits on its
+            # whole history, not just the old prompt. Only the first
+            # len(output)-1 output tokens are cache-resident: the final
+            # emitted token is still pending in the engine's next-token
+            # buffer, never written to KV.
+            seq = req.prompt
+            if self.session_kv and req.output:
+                n_valid = len(req.prompt) + len(req.output) - 1
+                seq = (list(req.prompt) + list(req.output))[:n_valid]
+            self.prefix_cache.insert(seq, req.blocks)
         self.allocator.release(req.blocks)
         req.blocks = []
         self._free_slots.append(req.slot)
@@ -536,15 +559,31 @@ class DecodeEngine:
     redo), ``"priority"`` the lowest ``Request.priority`` strictly below
     the head's. ``guard`` (default on) is the per-step logit health
     check; ``fault_injector`` arms the keyed fault-injection harness.
+
+    Session KV (needs ``prefix_cache=True``): ``session_kv`` (default on)
+    caches a retired request's full token history — prompt plus emitted
+    output — so a multi-turn conversation's next turn hits on everything
+    already computed. ``spill_blocks`` arms the host spill tier: evicted
+    trie blocks snapshot to host (``PrefixSpill``, capacity in blocks;
+    0 keeps plain drop-on-evict) and promote back into free pool blocks
+    when the ECM restore-vs-reprefill forecast favors the host link.
+    ``promote`` picks that gate: ``"auto"`` evaluates
+    ``repro.ecm.tpu.predicted_restore_vs_reprefill`` on this engine's
+    KV geometry and parameter count, ``"always"``/``"never"`` force it
+    (toy test models sit far below the TPU-modeled crossover, so tests
+    and CPU demos use ``"always"``).
     """
 
     PREEMPT_POLICIES = ("off", "lru", "priority")
+    PROMOTE_MODES = ("auto", "always", "never")
 
     def __init__(self, cfg: ModelConfig, params, *, max_slots: int = 4,
                  max_context: int = 256,
                  block_size: int = DEFAULT_BLOCK_SIZE,
                  num_blocks: int | None = None, prefill_chunk: int = 32,
-                 prefix_cache: bool = False, preempt: str = "off",
+                 prefix_cache: bool = False, session_kv: bool = True,
+                 spill_blocks: int = 0, promote: str = "auto",
+                 preempt: str = "off",
                  guard: NumericsGuard | None = NumericsGuard(),
                  fault_injector=None, telemetry: obs.Telemetry | None = None):
         assert cfg.family in ("dense", "moe", "ssm", "vlm"), cfg.family
@@ -556,6 +595,13 @@ class DecodeEngine:
         if preempt not in self.PREEMPT_POLICIES:
             raise ValueError(f"preempt must be one of "
                              f"{self.PREEMPT_POLICIES}, got {preempt!r}")
+        if promote not in self.PROMOTE_MODES:
+            raise ValueError(f"promote must be one of "
+                             f"{self.PROMOTE_MODES}, got {promote!r}")
+        if spill_blocks and not prefix_cache:
+            raise ValueError(
+                "spill_blocks arms the prefix-cache host spill tier and "
+                "needs prefix_cache=True")
         if preempt != "off" and cfg.family == "ssm":
             raise ValueError(
                 "preemption snapshots paged KV blocks; the 'ssm' family "
@@ -574,7 +620,8 @@ class DecodeEngine:
                              if prefix_cache else None)
         self.scheduler = Scheduler(allocator, max_slots, self.layout,
                                    prefill_chunk,
-                                   prefix_cache=self.prefix_cache)
+                                   prefix_cache=self.prefix_cache,
+                                   session_kv=session_kv)
         self.preempt_policy = preempt
         self.guard = guard
         self.injector = fault_injector
@@ -637,6 +684,12 @@ class DecodeEngine:
         # eager device scatter per token costs more than the whole
         # decode launch on CPU — upload once per step instead
         self._next_tokens = np.zeros((max_slots, 1), np.int32)
+        # The all-NULL table row every slot teardown points back at.
+        # Built ONCE: retire/terminate/preempt/quarantine sit on the hot
+        # path, and rebuilding this constant per retirement costs a fresh
+        # host->device upload each time for identical bytes.
+        self._null_row = jnp.full((self.layout.max_blocks,), NULL_BLOCK,
+                                  jnp.int32)
 
         # ECM-style KV traffic accounting: the bytes each LAYOUT must
         # address per step (paged: the slot's allocated blocks; contiguous:
@@ -672,10 +725,27 @@ class DecodeEngine:
                          "prefix_hit_tokens": 0, "prefix_prompt_tokens": 0,
                          "prefix_saved_bytes": 0, "prefix_cow_blocks": 0,
                          "prefix_evicted_blocks": 0,
+                         "prefix_spilled_blocks": 0,
+                         "prefix_spilled_bytes": 0,
+                         "prefix_promoted_blocks": 0,
+                         "prefix_promoted_tokens": 0,
                          "preempted": 0, "preempted_blocks": 0,
                          "restored_blocks": 0, "guard_trips": 0,
                          "cancelled": 0, "expired": 0, "alloc_faults": 0,
                          "stalled_requests": 0}
+
+        # Session spill tier: evicted trie blocks snapshot to host and
+        # can promote back into free blocks. Armed last — the snapshot
+        # closure reads the LIVE cache tree, and the auto promote gate
+        # prices restore vs re-prefill on this engine's KV geometry.
+        if self.prefix_cache is not None and spill_blocks:
+            spill = PrefixSpill(
+                spill_blocks,
+                lambda blocks: paged.extract_blocks(self.caches, blocks))
+            spill.obs = self.obs
+            self.prefix_cache.spill = spill
+            self.prefix_cache.promote_fn = self._promote_restore
+            self.prefix_cache.promote_ratio = self._promote_gate(promote)
 
     # ------------------------------------------------------------ API -----
 
@@ -803,8 +873,15 @@ class DecodeEngine:
                 prefix_prompt_tokens=cs["prompt_tokens"],
                 prefix_cow_blocks=cs["cow_blocks"],
                 prefix_evicted_blocks=cs["evicted_blocks"],
+                prefix_promoted_blocks=cs["promoted_blocks"],
+                prefix_promoted_tokens=cs["promoted_tokens"],
                 prefix_saved_bytes=cs["hit_tokens"]
                 * self._token_bytes)
+            sp = self.prefix_cache.spill
+            if sp is not None:
+                self.kv_stats.update(
+                    prefix_spilled_blocks=sp.stats["spilled_blocks"],
+                    prefix_spilled_bytes=sp.stats["spilled_bytes_total"])
         if self.obs.enabled:
             tr = self.obs.trace
             tr.end("queued", rid=req.rid)
@@ -937,10 +1014,8 @@ class DecodeEngine:
         if preempted:
             self.swap.drop(req.rid)
         if active:
-            null_row = jnp.full((self.layout.max_blocks,), NULL_BLOCK,
-                                jnp.int32)
             self.caches = self._reset_slot(self.caches, jnp.int32(slot),
-                                           null_row)
+                                           self._null_row)
             req.slot = None
         self.kv_stats[state] += 1
         return True
@@ -975,10 +1050,8 @@ class DecodeEngine:
                                  blocks=len(req.blocks))
         self._on_preempt(req)
         self.scheduler.preempt(req)
-        null_row = jnp.full((self.layout.max_blocks,), NULL_BLOCK,
-                            jnp.int32)
         self.caches = self._reset_slot(self.caches, jnp.int32(slot),
-                                       null_row)
+                                       self._null_row)
 
     def _preempt_for_head(self) -> bool:
         """Pick and preempt one victim to make room for the FIFO head;
@@ -1028,6 +1101,43 @@ class DecodeEngine:
         req.last_progress_step = self._step_count
         self.scheduler.start_decoding(req)
         self._on_restore(req)
+
+    # ------------------------------------------------ session spill tier --
+
+    def _promote_gate(self, mode: str) -> float:
+        """The restore-vs-reprefill ratio ``PrefixCache.promote`` gates
+        on (> 1 promotes). ``"auto"`` prices one block of this engine's
+        KV against re-prefilling its tokens on the ECM's modeled
+        accelerator — the ratio is token-count-independent (both sides
+        are linear in tokens), so one block stands for any chain."""
+        if mode == "always":
+            return float("inf")
+        if mode == "never":
+            return 0.0
+        from repro.ecm import tpu as ecm_tpu
+
+        n_params = sum(int(p.size)
+                       for p in jax.tree_util.tree_leaves(self.params))
+        return ecm_tpu.predicted_restore_vs_reprefill(
+            self.layout.block_size, self._token_bytes, 2 * n_params)
+
+    def _promote_restore(self, blocks: list[int], snaps: list[dict],
+                         *, rid: int | None = None) -> None:
+        """Device half of a spill-tier promote: ONE batched scatter of
+        the chain's per-block host snapshots into the freshly allocated
+        blocks. Runs at match time, before any admission outcome —
+        promoted blocks are valid (ordinary, evictable) cache content
+        the moment this returns, so a failed admission cannot leave trie
+        nodes pointing at garbage."""
+        prof = self.obs.profile
+        t0 = time.perf_counter() if prof is not None else 0.0
+        snap = paged.concat_block_snapshots(snaps)
+        self.caches = paged.restore_blocks(self.caches, blocks, snap)
+        if prof is not None:
+            jax.block_until_ready(self.caches)
+            prof.record(
+                "prefix_promote", wall_s=time.perf_counter() - t0,
+                host_bytes=sum(int(a.nbytes) for a in snap.values()))
 
     # -------------------------------------------- faults & quarantine -----
 
@@ -1090,10 +1200,8 @@ class DecodeEngine:
         slot = req.slot
         dropped = self.scheduler.drop(req, "quarantined")
         assert dropped, f"quarantine of request {req.rid} not in flight"
-        null_row = jnp.full((self.layout.max_blocks,), NULL_BLOCK,
-                            jnp.int32)
         self.caches = self._reset_slot(self.caches, jnp.int32(slot),
-                                       null_row)
+                                       self._null_row)
         req.slot = None
         self.quarantined.append(req)
 
@@ -1124,7 +1232,10 @@ class DecodeEngine:
         "prefill_chunks": "chunks", "prefill_tokens": "tokens",
         "prefix_hit_tokens": "tokens", "prefix_prompt_tokens": "tokens",
         "prefix_saved_bytes": "bytes", "prefix_cow_blocks": "blocks",
-        "prefix_evicted_blocks": "blocks", "preempted": "requests",
+        "prefix_evicted_blocks": "blocks",
+        "prefix_spilled_blocks": "blocks", "prefix_spilled_bytes": "bytes",
+        "prefix_promoted_blocks": "blocks",
+        "prefix_promoted_tokens": "tokens", "preempted": "requests",
         "preempted_blocks": "blocks", "restored_blocks": "blocks",
         "guard_trips": "trips", "cancelled": "requests",
         "expired": "requests", "alloc_faults": "faults",
@@ -1160,6 +1271,15 @@ class DecodeEngine:
         reg.gauge("prefix_hit_rate",
                   help="fraction of admitted prompt tokens served from "
                        "the prefix cache").set(self.prefix_hit_rate)
+        sp = (self.prefix_cache.spill
+              if self.prefix_cache is not None else None)
+        if sp is not None:
+            reg.gauge("prefix_host_blocks", unit="blocks",
+                      help="evicted prefix blocks currently resident in "
+                           "the host spill tier").set(len(sp))
+            reg.gauge("prefix_host_bytes", unit="bytes",
+                      help="host bytes currently holding spilled prefix "
+                           "blocks").set(sp.stats["host_bytes"])
         stats = getattr(self, "last_logit_stats", None)
         if stats is not None:
             reg.gauge("round_off_deviation",
@@ -1366,9 +1486,8 @@ class DecodeEngine:
         self.scheduler.retire(req)
         # Point the slot's tables back at the null block so the next
         # batched steps' stray writes can't touch re-allocated blocks.
-        null_row = jnp.full((self.layout.max_blocks,), NULL_BLOCK, jnp.int32)
         self.caches = self._reset_slot(self.caches, jnp.int32(slot),
-                                       null_row)
+                                       self._null_row)
 
     # ------------------------------------------------------- accounting ---
 

@@ -64,6 +64,16 @@ class AdmissionError(ServingError, ValueError):
     that treated submission failures as value errors."""
 
 
+class SwapMissError(ServingError, KeyError):
+    """A host-tier lookup (``KVSwap.swap_in`` / ``KVSwap.drop`` /
+    ``PrefixSpill.take``) named a request id or trie path with no
+    snapshot. Both directions raise — symmetrically —
+    because a silent no-op on either path can mask a LOST snapshot: a
+    drop that misses hides leaked host bytes, a swap-in that misses
+    would resume a request with uninitialized KV. Subclasses KeyError so
+    pre-existing ``pytest.raises(KeyError)`` restore contracts hold."""
+
+
 class ProposerStallError(ServingError):
     """A speculative-decoding proposer failed to produce drafts this
     step. The spec engine degrades the step to the plain verify-path

@@ -47,6 +47,27 @@ least-recently-matched *leaf* nodes whose blocks no live request shares
 leaves. Admission retains its matched nodes *before* evicting, so an
 eviction triggered by one request can never take blocks a just-admitted
 hit still needs.
+
+**Session KV: full-history insert + host spill tier.** Multi-turn
+conversations resubmit turn N's prompt *plus the model's own reply* as
+turn N+1's prompt, so ``insert`` caches a retired request's full token
+history — prompt AND emitted output, full blocks only, blocks that are
+already sitting in the pool — not just the prompt. Decode-written blocks
+are bitwise the blocks a prefill of the same tokens would write (the
+off-TPU decode path runs the chunked-prefill flash formulation —
+``repro.models.attention``), so dedup against prefill-cached nodes is
+exact. And when eviction would destroy that history, an armed
+``PrefixSpill`` tier (``repro.serving.swap``) snapshots each victim
+block to host memory keyed by its trie path; ``promote`` pages the
+longest spilled continuation of a new prompt back into fresh pool
+blocks — gated on the ECM restore-vs-reprefill ratio (``promote_ratio``
+> 1, i.e. the host-link copy is forecast faster than re-running
+prefill; otherwise the request degrades to a cold prefill rather than
+livelocking on a tier that can't win). Promotion restores device content
+*immediately* through the engine callback, so a promoted node is valid,
+ordinarily-evictable cached content even if the admission that wanted it
+later fails — and it never evicts to make room (free blocks only): a
+spill -> promote -> spill cycle cannot thrash the pool.
 """
 
 from __future__ import annotations
@@ -117,9 +138,16 @@ class PrefixCache:
         self._nseq = 0
         self.stats = {"requests": 0, "hits": 0, "hit_tokens": 0,
                       "prompt_tokens": 0, "cow_blocks": 0,
-                      "evicted_blocks": 0, "nodes": 0}
+                      "evicted_blocks": 0, "nodes": 0,
+                      "promoted_blocks": 0, "promoted_tokens": 0}
         # shared telemetry handle (set by the owning engine)
         self.obs = obs.NULL
+        # session spill tier (all engine-armed, None/0 = spill disabled):
+        # the host store, the device-restore callback (blocks, snapshots)
+        # -> None, and the ECM restore-vs-reprefill ratio gating promote
+        self.spill = None
+        self.promote_fn = None
+        self.promote_ratio = 0.0
 
     # ------------------------------------------------------------ match ----
 
@@ -133,9 +161,14 @@ class PrefixCache:
         any allocation or eviction can run.
         """
         bs = self.block_size
+        # EVERY match advances the LRU clock — uniformly, before any
+        # early return. A sub-2-token prompt that skipped the bump while
+        # a 2..block_size-token miss advanced it would let the MIX of
+        # misses (not the cache traffic) skew node timestamps between
+        # otherwise-identical runs and perturb eviction victim order.
+        self._clock += 1
         if len(prompt) < 2:
             return PrefixMatch()            # nothing cacheable to reuse
-        self._clock += 1
         node = self.root
         blocks: list[int] = []
         m = 0
@@ -171,22 +204,27 @@ class PrefixCache:
 
     # ------------------------------------------------------------ insert ---
 
-    def insert(self, prompt: list, blocks: list[int]) -> None:
-        """Cache a retired request's prompt prefix (full blocks only).
+    def insert(self, tokens: list, blocks: list[int]) -> None:
+        """Cache a retired request's token history (full blocks only).
 
-        ``blocks`` is the request's block-table row in position order;
-        block i of the prompt lives in ``blocks[i]``. Existing nodes are
-        kept (the duplicate block is simply released with the rest of the
-        request's references); new nodes retain their block so it
-        survives the request's release.
+        ``tokens`` is whatever span of the request's sequence is actually
+        resident in its blocks — for session KV that is prompt + emitted
+        output truncated to the cached length (the engine passes
+        ``len(prompt) + len(output) - 1`` tokens: the final emitted token
+        is still pending in its next-token buffer, never written to the
+        cache). ``blocks`` is the request's block-table row in position
+        order; block i of the sequence lives in ``blocks[i]``. Existing
+        nodes are kept (the duplicate block is simply released with the
+        rest of the request's references); new nodes retain their block
+        so it survives the request's release.
         """
         bs = self.block_size
         self._clock += 1
         node = self.root
-        for i in range(len(prompt) // bs):
+        for i in range(len(tokens) // bs):
             if i >= len(blocks):
                 break
-            key = tuple(prompt[i * bs:(i + 1) * bs])
+            key = tuple(tokens[i * bs:(i + 1) * bs])
             child = node.children.get(key)
             if child is None:
                 self._nseq += 1
@@ -235,6 +273,13 @@ class PrefixCache:
             _, _, victim = heapq.heappop(heap)
             parent = victim.parent
             parent.children.pop(victim.key)
+            if self.spill is not None:
+                # spill instead of drop: snapshot the victim's block to
+                # the host tier under its full trie path BEFORE the pool
+                # reference goes away (children evict before parents, so
+                # deeper paths land in the tier first — the promote walk
+                # re-extends them outward in the same order)
+                self.spill.put(self._path_key(victim), victim.block)
             self.allocator.release([victim.block])
             self.stats["nodes"] -= 1
             self.stats["evicted_blocks"] += 1
@@ -246,6 +291,85 @@ class PrefixCache:
             self.obs.trace.instant("prefix_evict", freed=freed,
                                    requested=n)
         return freed
+
+    # ------------------------------------------------------------ promote --
+
+    @staticmethod
+    def _path_key(node: TrieNode) -> tuple:
+        """Full token path root -> ``node`` — the spill-tier key. Paths
+        are absolute, so a spilled block can be identified (and promoted)
+        without any of its ancestors being resident."""
+        parts = []
+        while node.parent is not None:
+            parts.append(node.key)
+            node = node.parent
+        return tuple(t for key in reversed(parts) for t in key)
+
+    def _resident_frontier(self, prompt: list) -> tuple[TrieNode, int]:
+        """Deepest trie node on ``prompt``'s full-block path and the
+        token count it covers. No LRU touch — this is the probe walk,
+        ``match`` does the touching."""
+        bs = self.block_size
+        node, m = self.root, 0
+        while m + bs <= len(prompt):
+            child = node.children.get(tuple(prompt[m:m + bs]))
+            if child is None:
+                break
+            node, m = child, m + bs
+        return node, m
+
+    def promote(self, prompt: list, rid: int | None = None) -> int:
+        """Page the longest host-spilled continuation of ``prompt`` back
+        into fresh pool blocks + trie nodes; returns blocks promoted.
+
+        Gated on ``promote_ratio > 1`` — the ECM forecast that one
+        block's host-link restore beats re-prefilling its tokens
+        (``repro.ecm.tpu.predicted_restore_vs_reprefill``); below the
+        crossover the caller falls back to a cold prefill (degrade, don't
+        livelock). Uses only FREE pool blocks — never evicts to promote,
+        so a spill -> promote -> spill cycle cannot thrash — and restores
+        device content immediately through ``promote_fn`` (one batched
+        scatter for the whole chain), so a promoted node is ordinary,
+        evictable cached content regardless of what the admission that
+        triggered the promote does next. A chain cut short by pool
+        exhaustion is still a valid (shorter) cached prefix.
+        """
+        if (self.spill is None or self.promote_fn is None
+                or not len(self.spill) or not self.promote_ratio > 1.0):
+            return 0
+        from repro.serving.faults import AllocatorError
+
+        bs = self.block_size
+        node, m = self._resident_frontier(prompt)
+        chain = []                               # (key, block, snapshot)
+        while m + bs <= len(prompt):
+            key = tuple(prompt[:m + bs])
+            if key not in self.spill:
+                break
+            try:
+                blk = self.allocator.alloc(1)[0]
+            except AllocatorError:
+                break
+            chain.append((key, blk, self.spill.take(key)))
+            m += bs
+        if not chain:
+            return 0
+        self.promote_fn([blk for _, blk, _ in chain],
+                        [snap for _, _, snap in chain], rid=rid)
+        for key, blk, _ in chain:
+            self._nseq += 1
+            child = TrieNode(key[-bs:], blk, node, self._nseq)
+            child.last_used = self._clock
+            node.children[child.key] = child
+            node = child
+            self.stats["nodes"] += 1
+        self.stats["promoted_blocks"] += len(chain)
+        self.stats["promoted_tokens"] += len(chain) * bs
+        if self.obs.enabled:
+            self.obs.trace.instant("prefix_promote", rid=rid,
+                                   blocks=len(chain),
+                                   tokens=len(chain) * bs)
+        return len(chain)
 
     # ------------------------------------------------------------ stats ----
 

@@ -365,6 +365,36 @@ def test_swap_unit_roundtrip(setup):
     assert not swap.holds(0) and swap.stats["host_bytes"] == 0
 
 
+def test_swap_miss_raises_symmetrically(setup):
+    """Unknown-rid lookups raise typed ``SwapMissError`` in BOTH
+    directions — a swap_in miss would resume a request on uninitialized
+    KV, a silent drop miss would mask a lost snapshot's leaked host
+    bytes. The error subclasses KeyError (legacy restore contracts) and
+    ServingError (the fault layer's catch taxonomy)."""
+    from repro.serving.faults import ServingError, SwapMissError
+    swap = KVSwap()
+    with pytest.raises(SwapMissError):
+        swap.swap_in(42, None, [0])
+    with pytest.raises(SwapMissError):
+        swap.drop(42)
+    with pytest.raises(KeyError):               # back-compat contract
+        swap.swap_in(42, None, [0])
+    assert issubclass(SwapMissError, ServingError)
+    assert swap.stats["dropped_blocks"] == 0    # misses never count
+
+    # the engine's only internal drop() call sites see a held snapshot
+    # (preempted => swapped out), so the teardown path stays exception-
+    # free end to end
+    cfg, params = setup
+    engine = _engine(cfg, params)
+    req = Request(rid=0, prompt=[5, 9], max_new_tokens=8)
+    engine.submit(req)
+    engine.step()
+    engine.preempt(0)
+    assert engine.cancel(0)
+    assert len(engine.swap) == 0
+
+
 # ---------------------------------------------------- numerics guards -----
 
 
